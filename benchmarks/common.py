@@ -1,0 +1,88 @@
+"""Shared benchmark fixtures: one corpus + one trained HI²_sup per process
+(build once, reuse across tables), plus timing helpers."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat, hybrid_index as hi, ivf, metrics
+from repro.data import synthetic
+from repro.launch import train as tr
+
+# benchmark-scale corpus (≈ laptop-scale stand-in for MS MARCO; DESIGN.md §2)
+N_DOCS = 20_000
+N_QUERIES = 800
+HIDDEN = 64
+VOCAB = 8_192
+N_CLUSTERS = 256
+
+COMMON_INDEX = dict(k1_terms=12, codec="opq", pq_m=8, pq_k=256,
+                    cluster_capacity=256, term_capacity=128)
+KC, K2, TOP_R = 6, 8, 100
+
+
+@functools.lru_cache(maxsize=2)
+def corpus(seed: int = 0) -> synthetic.Corpus:
+    return synthetic.generate(seed=seed, n_docs=N_DOCS, n_queries=N_QUERIES,
+                              hidden=HIDDEN, vocab_size=VOCAB, n_topics=128)
+
+
+@functools.lru_cache(maxsize=1)
+def unsup_index():
+    c = corpus()
+    return hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                    jnp.asarray(c.doc_tokens), c.vocab_size,
+                    n_clusters=N_CLUSTERS, kmeans_iters=10, **COMMON_INDEX)
+
+
+@functools.lru_cache(maxsize=1)
+def sup_artifacts():
+    c = corpus()
+    cfg = tr.SupTrainConfig(n_clusters=N_CLUSTERS, n_steps=200,
+                            batch_queries=32, lr=2e-3)
+    params, enc_cfg, assign, _ = tr.train_hi2_sup(c, cfg, log_every=0)
+    return params, enc_cfg, assign
+
+
+@functools.lru_cache(maxsize=1)
+def sup_index():
+    c = corpus()
+    params, enc_cfg, assign = sup_artifacts()
+    return tr.build_sup_index(c, params, enc_cfg, assign, **COMMON_INDEX)
+
+
+def queries():
+    c = corpus()
+    return jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+
+
+def evaluate(result, qrels=None) -> dict:
+    c = corpus()
+    qrels = c.qrels if qrels is None else qrels
+    return {
+        "R@10": metrics.recall_at_k(result.doc_ids, qrels, 10),
+        "R@100": metrics.recall_at_k(result.doc_ids, qrels, 100),
+        "MRR@10": metrics.mrr_at_k(result.doc_ids, qrels, 10),
+        "candidates": float(result.n_candidates.mean()),
+    }
+
+
+def index_size_bytes(index: hi.HybridIndex) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(index):
+        total += np.asarray(leaf).nbytes
+    return total
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Mean wall time per call in microseconds (post-jit)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,40 @@
+"""Paper Figure 3 — effectiveness/efficiency trade-off curves.
+
+For each method, sweep the dispatch width and report
+(candidate budget, R@100) pairs — the paper's recall-latency curve with
+candidates as the latency proxy (§5.1).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import hybrid_index as hi, ivf
+
+
+def run() -> dict[str, list[tuple[float, float]]]:
+    qe, qt = common.queries()
+    idx, sup = common.unsup_index(), common.sup_index()
+    curves: dict[str, list[tuple[float, float]]] = {}
+
+    def point(res):
+        ev = common.evaluate(res)
+        return (ev["candidates"], ev["R@100"])
+
+    curves["IVF-OPQ"] = [
+        point(ivf.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
+        for kc in (1, 2, 4, 8, 12, 16)]
+    curves["HI2_unsup"] = [
+        point(hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))
+        for kc, k2 in ((1, 2), (2, 4), (4, 6), (6, 8), (8, 12), (12, 16))]
+    curves["HI2_sup"] = [
+        point(hi.search(sup, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))
+        for kc, k2 in ((1, 2), (2, 4), (4, 6), (6, 8), (8, 12), (12, 16))]
+    return curves
+
+
+def main():
+    for name, pts in run().items():
+        print(name, " ".join(f"({c:.0f},{r:.3f})" for c, r in pts))
+
+
+if __name__ == "__main__":
+    main()

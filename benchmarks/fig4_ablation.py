@@ -1,0 +1,37 @@
+"""Paper Figure 4 — ablation: w.o. Term vs w.o. Clus vs full hybrid,
+at matched dispatch widths (RQ2 complementarity)."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import hybrid_index as hi, ivf
+
+
+def run() -> dict[str, list[tuple[float, float]]]:
+    qe, qt = common.queries()
+    idx = common.unsup_index()
+
+    def point(res):
+        ev = common.evaluate(res)
+        return (ev["candidates"], ev["R@100"])
+
+    return {
+        "w.o.Term(IVF)": [
+            point(ivf.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
+            for kc in (2, 4, 8, 12, 16)],
+        "w.o.Clus(term-only)": [
+            point(ivf.search_term_only(idx, qe, qt, k2=k2,
+                                       top_r=common.TOP_R))
+            for k2 in (2, 4, 8, 12, 16)],
+        "HI2(full)": [
+            point(hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))
+            for kc, k2 in ((1, 2), (2, 4), (4, 8), (6, 12), (8, 16))],
+    }
+
+
+def main():
+    for name, pts in run().items():
+        print(name, " ".join(f"({c:.0f},{r:.3f})" for c, r in pts))
+
+
+if __name__ == "__main__":
+    main()

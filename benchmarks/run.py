@@ -1,0 +1,74 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import jax
+
+
+def main() -> None:
+    from benchmarks import (common, fig3_tradeoff, fig4_ablation,
+                            table1_main, table2_robustness, table3_codec)
+    from repro.core import hybrid_index as hi
+
+    print("name,us_per_call,derived")
+    qe, qt = common.queries()
+
+    # timed core search call (jit-compiled, the paper's QL analogue)
+    idx = common.unsup_index()
+    us = common.time_call(
+        lambda: hi.search(idx, qe, qt, kc=common.KC, k2=common.K2,
+                          top_r=common.TOP_R))
+    per_query = us / qe.shape[0]
+    print(f"hi2_search_batch,{us:.0f},per_query_us={per_query:.1f}",
+          flush=True)
+
+    us64 = common.time_call(
+        lambda: hi.search(idx, qe[:64], qt[:64], kc=common.KC, k2=common.K2,
+                          top_r=common.TOP_R))
+    print(f"hi2_search_64q,{us64:.0f},oracle_path", flush=True)
+
+    # Table 1
+    for row in table1_main.run():
+        print(f"table1/{row['method']},0,"
+              f"R@100={row['R@100']:.4f};MRR@10={row['MRR@10']:.4f};"
+              f"cands={row['candidates']:.0f};"
+              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
+
+    # Figure 3
+    for name, pts in fig3_tradeoff.run().items():
+        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
+        print(f"fig3/{name},0,{pts_s}", flush=True)
+
+    # Figure 4
+    for name, pts in fig4_ablation.run().items():
+        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
+        print(f"fig4/{name},0,{pts_s}", flush=True)
+
+    # Table 2
+    for row in table2_robustness.run():
+        print(f"table2/{row['model']}/{row['method']},0,"
+              f"R@100={row['R100']:.4f}", flush=True)
+
+    # Table 3
+    for row in table3_codec.run():
+        print(f"table3/{row['codec']},0,"
+              f"R@100={row['R@100']:.4f};"
+              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
+
+    # kernel microbenchmarks (oracle path timings; the Pallas bodies are
+    # TPU-targeted and validated in interpret mode by the tests)
+    from repro.kernels.pq_adc import ref as adc_ref
+    lut = jax.random.normal(jax.random.key(0), (64, 8, 256))
+    codes = jax.random.randint(jax.random.key(1), (64, 2048, 8), 0, 256)
+    f = jax.jit(adc_ref.pq_adc)
+    us = common.time_call(f, lut, codes)
+    scored = 64 * 2048
+    print(f"kernel/pq_adc_oracle,{us:.0f},cands_per_s={scored/us*1e6:.3g}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 1 — overall evaluation: quality + efficiency of every
+index family on the synthetic benchmark corpus.
+
+Rows: Flat (brute force), IVF-OPQ, Distill-VQ (learned clusters, no
+terms), term-only, HI²_unsup, HI²_sup.  Columns: MRR@10, R@10, R@100,
+candidate budget (the latency proxy — §5.1: same candidates ⇒ same
+latency), index size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import cluster_selector as cs_mod, flat, hybrid_index as hi, ivf
+
+
+def run() -> list[dict]:
+    c = common.corpus()
+    qe, qt = common.queries()
+    rows = []
+
+    # Flat upper bound
+    _, fids = flat.search(qe, jnp.asarray(c.doc_emb), k=common.TOP_R)
+    r = hi.SearchResult(doc_ids=fids, scores=jnp.zeros_like(fids, jnp.float32),
+                        n_candidates=jnp.full((qe.shape[0],), c.doc_emb.shape[0],
+                                              jnp.int32))
+    rows.append(dict(method="Flat(brute force)", **common.evaluate(r),
+                     index_bytes=c.doc_emb.nbytes))
+
+    idx = common.unsup_index()
+    # IVF-OPQ — cluster-only at a LARGER budget than HI² (paper setting)
+    r = ivf.search_ivf(idx, qe, qt, kc=10, top_r=common.TOP_R)
+    rows.append(dict(method="IVF-OPQ", **common.evaluate(r),
+                     index_bytes=common.index_size_bytes(idx)))
+
+    # Distill-VQ: learned cluster embeddings, no term lists
+    params, enc_cfg, assign = common.sup_artifacts()
+    dv = hi.build(jax.random.key(3), jnp.asarray(c.doc_emb),
+                  jnp.asarray(c.doc_tokens), c.vocab_size,
+                  n_clusters=common.N_CLUSTERS,
+                  cluster_sel=cs_mod.ClusterSelector(
+                      embeddings=params.cluster_embeddings),
+                  doc_assign=assign, use_terms=False,
+                  **common.COMMON_INDEX)
+    r = ivf.search_ivf(dv, qe, qt, kc=10, top_r=common.TOP_R)
+    rows.append(dict(method="Distill-VQ", **common.evaluate(r),
+                     index_bytes=common.index_size_bytes(dv)))
+
+    # term-only (w.o. Clus)
+    r = ivf.search_term_only(idx, qe, qt, k2=common.K2, top_r=common.TOP_R)
+    rows.append(dict(method="TermOnly(w.o.Clus)", **common.evaluate(r),
+                     index_bytes=common.index_size_bytes(idx)))
+
+    # HI² unsup / sup
+    r = hi.search(idx, qe, qt, kc=common.KC, k2=common.K2, top_r=common.TOP_R)
+    rows.append(dict(method="HI2_unsup", **common.evaluate(r),
+                     index_bytes=common.index_size_bytes(idx)))
+    sup = common.sup_index()
+    r = hi.search(sup, qe, qt, kc=common.KC, k2=common.K2, top_r=common.TOP_R)
+    rows.append(dict(method="HI2_sup", **common.evaluate(r),
+                     index_bytes=common.index_size_bytes(sup)))
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 3 (appendix C) — codec analysis: the same HI² lists
+evaluated with the PQ/OPQ codec vs the Flat codec (quality/size trade)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import hybrid_index as hi
+
+
+def run() -> list[dict]:
+    c = common.corpus()
+    qe, qt = common.queries()
+    rows = []
+    for codec in ("opq", "pq", "flat"):
+        kwargs = dict(common.COMMON_INDEX)
+        kwargs["codec"] = codec
+        idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                       jnp.asarray(c.doc_tokens), c.vocab_size,
+                       n_clusters=common.N_CLUSTERS, kmeans_iters=10,
+                       **kwargs)
+        r = hi.search(idx, qe, qt, kc=common.KC, k2=common.K2,
+                      top_r=common.TOP_R)
+        rows.append(dict(codec=codec, **common.evaluate(r),
+                         index_bytes=common.index_size_bytes(idx)))
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

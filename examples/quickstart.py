@@ -1,0 +1,45 @@
+"""Quickstart: build a Hybrid Inverted Index over a synthetic corpus and
+search it, comparing against IVF and brute force.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat, hybrid_index as hi, ivf, metrics
+from repro.data import synthetic
+
+
+def main():
+    print("generating corpus (12k docs)...")
+    corpus = synthetic.generate(seed=0, n_docs=12_000, n_queries=500,
+                                hidden=64, vocab_size=8192)
+    de, dt = jnp.asarray(corpus.doc_emb), jnp.asarray(corpus.doc_tokens)
+    qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+
+    print("building HI²_unsup (KMeans clusters + BM25 terms + OPQ codec)...")
+    index = hi.build(jax.random.key(0), de, dt, corpus.vocab_size,
+                     n_clusters=192, k1_terms=12, codec="opq",
+                     pq_m=8, pq_k=256, cluster_capacity=256,
+                     term_capacity=128, kmeans_iters=10)
+
+    print("searching...")
+    _, fids = flat.search(qe, de, k=100)
+    r_hi2 = hi.search(index, qe, qt, kc=6, k2=8, top_r=100)
+    r_ivf = ivf.search_ivf(index, qe, qt, kc=10, top_r=100)
+
+    print(f"\n{'method':<22}{'R@100':>8}{'MRR@10':>9}{'candidates':>12}")
+    print(f"{'Flat (brute force)':<22}"
+          f"{metrics.recall_at_k(fids, corpus.qrels, 100):>8.3f}"
+          f"{'':>9}{corpus.doc_emb.shape[0]:>12}")
+    for name, r in (("IVF-OPQ", r_ivf), ("HI2_unsup", r_hi2)):
+        print(f"{name:<22}"
+              f"{metrics.recall_at_k(r.doc_ids, corpus.qrels, 100):>8.3f}"
+              f"{metrics.mrr_at_k(r.doc_ids, corpus.qrels, 10):>9.3f}"
+              f"{float(r.n_candidates.mean()):>12.0f}")
+    print("\nHI² reaches higher recall than IVF while evaluating fewer "
+          "candidates — the paper's headline claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""hi2-synth — the paper's OWN system at production scale, as a dry-run
+cell (extra, beyond the 10 assigned archs): HI²_sup serving over an
+MS MARCO-scale corpus.
+
+    corpus   8,841,823 docs × h=768        (paper §5.1)
+    clusters L=10,000  (capacity 1024 ≈ paper avg 884 + headroom)
+    terms    V=30,522 (BERT vocab), K₁ᵀ=3 ⇒ capacity 1024
+    codec    OPQ m=96, k=256
+    search   K^C=30, K₂ᵀ=32, R=100 (the HI²_sup operating point)
+    queries  batch 256 × 32 tokens
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class HI2ServeShape:
+    name: str
+    kind: str = "hi2_serve"
+    n_docs: int = 8_841_984     # 8,841,823 padded to a multiple of 512
+    hidden: int = 768
+    n_clusters: int = 10_000
+    vocab: int = 30_528         # 30,522 padded to a multiple of 16
+    cluster_capacity: int = 1_024
+    term_capacity: int = 1_024
+    pq_m: int = 96
+    pq_k: int = 256
+    kc: int = 30
+    k2: int = 32
+    top_r: int = 100
+    query_batch: int = 256
+    query_len: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class HI2Config:
+    pass
+
+
+ARCH = registry.register(registry.ArchDef(
+    arch_id="hi2-synth", family="hi2", source="this paper (HI², §5.1)",
+    make_config=lambda shape=None: HI2Config(),
+    make_reduced=lambda: HI2Config(),
+    shapes={"serve_msmarco": HI2ServeShape("serve_msmarco")},
+    extra=True))

@@ -1,0 +1,130 @@
+"""BM25 term scoring (paper Eq. 7, HI²_unsup branch).
+
+The paper scores every unique term v of a document D with
+
+    s_v = (α+1) · IDF(v) · TF(v,D) / (TF(v,D) + α · (1 − β + β·|D|/avgdl))
+
+with α=0.82, β=0.68 (paper §5.1 / Appendix B — note the paper reuses the
+classical k1/b slots under the names α/β).
+
+Documents arrive as fixed-shape padded token-id matrices ``(n, L)`` with
+``PAD_ID`` (= -1) padding, so everything below is fixed-shape jnp:
+TF via an O(L²) within-doc equality count (L ≤ 256 — 64k lane ops, cheap
+on the VPU), document frequency via first-occurrence masking + bincount.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PAD_ID = -1
+
+
+class BM25Stats(NamedTuple):
+    idf: Array      # (V,) f32
+    avgdl: Array    # () f32
+    n_docs: Array   # () i32
+
+
+def _valid(tokens: Array) -> Array:
+    return tokens != PAD_ID
+
+
+def first_occurrence_mask(tokens: Array) -> Array:
+    """(n, L) -> (n, L) bool: True at the first position of each unique term."""
+    eq = tokens[:, :, None] == tokens[:, None, :]              # (n, L, L)
+    before = jnp.tril(jnp.ones(eq.shape[-2:], bool), k=-1)     # j < i
+    seen_before = jnp.any(eq & before[None], axis=-1)
+    return _valid(tokens) & ~seen_before
+
+
+def term_frequency(tokens: Array) -> Array:
+    """(n, L) -> (n, L) f32: TF of the term at each position within its doc."""
+    eq = (tokens[:, :, None] == tokens[:, None, :]) & _valid(tokens)[:, None, :]
+    return jnp.sum(eq, axis=-1).astype(jnp.float32) * _valid(tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def fit(tokens: Array, vocab_size: int) -> BM25Stats:
+    """Corpus statistics: IDF per vocab term + average doc length."""
+    valid = _valid(tokens)
+    doc_len = jnp.sum(valid, axis=-1).astype(jnp.float32)      # (n,)
+    first = first_occurrence_mask(tokens)
+    flat = jnp.where(first, tokens, vocab_size).reshape(-1)    # sentinel bin
+    df = jnp.bincount(flat, length=vocab_size + 1)[:vocab_size].astype(jnp.float32)
+    n = tokens.shape[0]
+    # BM25+-style IDF, floored at 0 to avoid negative saliency
+    idf = jnp.maximum(jnp.log((n - df + 0.5) / (df + 0.5) + 1.0), 0.0)
+    return BM25Stats(idf=idf, avgdl=jnp.mean(doc_len), n_docs=jnp.int32(n))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def score_positions(tokens: Array, stats: BM25Stats,
+                    alpha: float = 0.82, beta: float = 0.68) -> Array:
+    """Eq. 7 BM25 branch, evaluated at every token position.
+
+    Positions holding a repeated term get that term's (identical) score;
+    callers mask with :func:`first_occurrence_mask` when unique terms are
+    needed. Returns (n, L) f32, 0 at pads.
+    """
+    tf = term_frequency(tokens)                                # (n, L)
+    doc_len = jnp.sum(_valid(tokens), axis=-1, keepdims=True).astype(jnp.float32)
+    idf = stats.idf[jnp.clip(tokens, 0, None)]                 # (n, L)
+    denom = tf + alpha * (1.0 - beta + beta * doc_len / stats.avgdl)
+    s = (alpha + 1.0) * idf * tf / jnp.maximum(denom, 1e-6)
+    return s * _valid(tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def top_terms(tokens: Array, scores: Array, k: int) -> tuple[Array, Array]:
+    """Top-k unique terms per doc by score.
+
+    Returns (term_ids (n,k) i32 with PAD_ID fill, term_scores (n,k) f32).
+    """
+    uniq = first_occurrence_mask(tokens)
+    masked = jnp.where(uniq, scores, -jnp.inf)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    term_ids = jnp.take_along_axis(tokens, top_idx, axis=-1)
+    ok = jnp.isfinite(top_scores)
+    return (jnp.where(ok, term_ids, PAD_ID).astype(jnp.int32),
+            jnp.where(ok, top_scores, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def average_term_scores(tokens: Array, scores: Array, vocab_size: int
+                        ) -> Array:
+    """s̄_v (Eq. 8): mean score of term v across documents containing it.
+
+    Used at query time to pick K₂ᵀ terms of long queries with zero model
+    cost — the paper's "very little overhead" requirement (§5.1).
+    """
+    first = first_occurrence_mask(tokens)
+    flat_ids = jnp.where(first, tokens, vocab_size).reshape(-1)
+    flat_scores = jnp.where(first, scores, 0.0).reshape(-1)
+    sums = jax.ops.segment_sum(flat_scores, flat_ids, num_segments=vocab_size + 1)
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_scores), flat_ids,
+                                 num_segments=vocab_size + 1)
+    return (sums / jnp.maximum(counts, 1.0))[:vocab_size]
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def score_vector(tokens: Array, scores: Array, vocab_size: int) -> Array:
+    """Dense (n, V) score vectors s_D (Eq. 12) from per-position scores.
+
+    Repeated terms collapse by max (Eq. 7's max over d_i = v).
+    """
+    n, L = tokens.shape
+    doc_idx = jnp.broadcast_to(jnp.arange(n)[:, None], (n, L))
+    valid = _valid(tokens)
+    seg = jnp.where(valid, doc_idx * vocab_size + jnp.clip(tokens, 0, None),
+                    n * vocab_size)
+    out = jax.ops.segment_max(
+        jnp.where(valid, scores, -jnp.inf).reshape(-1),
+        seg.reshape(-1), num_segments=n * vocab_size + 1)[:n * vocab_size]
+    out = out.reshape(n, vocab_size)
+    return jnp.where(jnp.isfinite(out), out, 0.0)

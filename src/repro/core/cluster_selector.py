@@ -1,0 +1,69 @@
+"""Cluster selector (paper §4.1).
+
+Associates each of the L clusters with an embedding e_C ∈ R^h:
+  · documents are indexed to their argmax cluster (1 list per doc),
+  · queries are dispatched to the top-K^C clusters (Eq. 6).
+
+HI²_unsup: the embeddings come from KMeans and stay fixed.
+HI²_sup:   the same tensor is a *learnable parameter* optimized by the
+           distillation objective (Eq. 9/11) with the doc→cluster
+           assignment φ(D) frozen after initialization (§4.3).
+
+Scoring is a single (B, h) × (h, L) matmul + top-k — the Pallas kernel
+``repro.kernels.topk_score`` implements the fused version; the jnp path
+here is the oracle and the autodiff path used in training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+
+Array = jax.Array
+
+
+class ClusterSelector(NamedTuple):
+    embeddings: Array   # (L, h) f32 — learnable in HI²_sup
+
+    @property
+    def n_clusters(self) -> int:
+        return self.embeddings.shape[0]
+
+
+def init_kmeans(key: Array, doc_embeddings: Array, n_clusters: int,
+                n_iters: int = 20) -> tuple[ClusterSelector, Array]:
+    """KMeans init (both variants). Returns (selector, φ(D) assignments).
+
+    φ(D) is the INNER-PRODUCT argmax over the KMeans centroids (paper
+    §4.1: "indexed to the cluster with the highest score" ⟨e_D, e_C⟩) —
+    not the L2 assignment KMeans itself used.
+    """
+    centroids, _ = kmeans.kmeans_fit(key, doc_embeddings,
+                                     n_clusters=n_clusters, n_iters=n_iters)
+    selector = ClusterSelector(embeddings=centroids)
+    return selector, select_for_doc(selector, doc_embeddings)
+
+
+@jax.jit
+def scores(selector: ClusterSelector, x: Array) -> Array:
+    """⟨e_x, e_C⟩ for a batch: (B, h) -> (B, L)."""
+    return x.astype(jnp.float32) @ selector.embeddings.T
+
+
+@jax.jit
+def select_for_doc(selector: ClusterSelector, doc_embeddings: Array) -> Array:
+    """Indexing side: each document goes to exactly one cluster."""
+    return jnp.argmax(scores(selector, doc_embeddings), axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def select_for_query(selector: ClusterSelector, query_embeddings: Array,
+                     k: int) -> tuple[Array, Array]:
+    """Search side (Eq. 6): top-K^C clusters per query."""
+    s = scores(selector, query_embeddings)
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_i.astype(jnp.int32), top_s

@@ -1,0 +1,115 @@
+"""Joint optimization of HI²_sup (paper §4.3, Eq. 9–13).
+
+Trainable parameters
+    · cluster embeddings  e_C                       (cluster selector)
+    · term-scorer encoder + 2-layer MLP f(·)        (term selector)
+
+Objective, per query Q with candidate docs D (positive + hard negatives
++ in-batch negatives):
+
+    L = KL(Θ ∥ CS) + KL(Θ ∥ TS) + L_commit
+    Θ  = softmax(⟨e_Q, e_D⟩)                         Eq. 10 (teacher)
+    CS = softmax(⟨e_Q, e_{C_φ(D)}⟩)                  Eq. 11
+    TS = softmax(⟨s_Q, s_D⟩)                         Eq. 12
+    L_commit = −Σ_D log softmax(⟨e_D, e_C⟩)[φ(D)]    Eq. 13 (sign: the
+      paper writes the log-softmax; we minimize its negative, the usual
+      VQ-VAE commitment form it cites)
+
+φ(D) is frozen after KMeans init (§4.3). Teacher embeddings are
+off-the-shelf (Eq. 10) — any embedding model; our experiments use the
+synthetic corpus's generating encoder.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import term_selector as ts_mod
+
+Array = jax.Array
+
+
+class DistillParams(NamedTuple):
+    cluster_embeddings: Array   # (L, h)
+    term_mlp: ts_mod.TermMLP
+    encoder: Any                # pytree of the term-scorer encoder
+
+
+class DistillBatch(NamedTuple):
+    """One training step's inputs. B queries × D candidate docs each."""
+    query_emb: Array        # (B, h)   teacher/query embeddings (frozen)
+    query_tokens: Array     # (B, Lq)  padded token ids
+    doc_emb: Array          # (B, D, h) frozen doc embeddings
+    doc_tokens: Array       # (B, D, Ld)
+    doc_assign: Array       # (B, D) i32 — φ(D), frozen
+
+
+def kl(p_logits: Array, q_logits: Array) -> Array:
+    """KL(softmax(p) ∥ softmax(q)), batched over leading dims."""
+    logp = jax.nn.log_softmax(p_logits, axis=-1)
+    logq = jax.nn.log_softmax(q_logits, axis=-1)
+    return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("encoder_apply", "vocab_size"))
+def loss_fn(params: DistillParams, batch: DistillBatch,
+            encoder_apply: Callable[..., Array], vocab_size: int
+            ) -> tuple[Array, dict[str, Array]]:
+    """Eq. 9 + Eq. 13. ``encoder_apply(params.encoder, tokens) -> (B,L,h)``."""
+    b, d, ld = batch.doc_tokens.shape
+
+    # --- teacher (Eq. 10) -------------------------------------------------
+    teacher = jnp.einsum("bh,bdh->bd", batch.query_emb.astype(jnp.float32),
+                         batch.doc_emb.astype(jnp.float32))
+
+    # --- cluster-selector student (Eq. 11) --------------------------------
+    c_emb = params.cluster_embeddings[batch.doc_assign]        # (B, D, h)
+    cs_logits = jnp.einsum("bh,bdh->bd",
+                           batch.query_emb.astype(jnp.float32), c_emb)
+
+    # --- term-selector student (Eq. 12) -----------------------------------
+    # queries and documents are processed the same way here (paper note)
+    q_hidden = encoder_apply(params.encoder, batch.query_tokens)
+    q_pos = ts_mod.mlp_token_scores(params.term_mlp, q_hidden,
+                                    batch.query_tokens)
+    s_q = ts_mod.score_vectors(batch.query_tokens, q_pos, vocab_size)
+
+    flat_docs = batch.doc_tokens.reshape(b * d, ld)
+    d_hidden = encoder_apply(params.encoder, flat_docs)
+    d_pos = ts_mod.mlp_token_scores(params.term_mlp, d_hidden, flat_docs)
+    s_d = ts_mod.score_vectors(flat_docs, d_pos, vocab_size)
+    s_d = s_d.reshape(b, d, vocab_size)
+    ts_logits = jnp.einsum("bv,bdv->bd", s_q, s_d)
+
+    # --- losses ------------------------------------------------------------
+    l_cs = kl(teacher, cs_logits).mean()
+    l_ts = kl(teacher, ts_logits).mean()
+
+    # commitment (Eq. 13): keep e_D close to its frozen cluster
+    commit_logits = jnp.einsum(
+        "bdh,lh->bdl", batch.doc_emb.astype(jnp.float32),
+        params.cluster_embeddings)                              # (B, D, L)
+    logp = jax.nn.log_softmax(commit_logits, axis=-1)
+    l_commit = -jnp.take_along_axis(
+        logp, batch.doc_assign[..., None], axis=-1).mean()
+
+    total = l_cs + l_ts + l_commit
+    aux = {"loss": total, "kl_cluster": l_cs, "kl_term": l_ts,
+           "commit": l_commit}
+    return total, aux
+
+
+def sample_candidates(key: Array, positives: Array, n_docs: int,
+                      n_negatives: int) -> Array:
+    """positive + uniform negatives → (B, 1+n_negatives) doc ids.
+
+    The paper uses BM25 top-200 hard negatives; the data pipeline
+    (repro/data/synthetic.py) supplies BM25-ranked hard negatives and
+    falls back to uniform sampling here for unit tests.
+    """
+    b = positives.shape[0]
+    negs = jax.random.randint(key, (b, n_negatives), 0, n_docs)
+    return jnp.concatenate([positives[:, None], negs], axis=-1)

@@ -1,0 +1,226 @@
+"""HI² — the Hybrid Inverted Index (paper §4, Eq. 5).
+
+Each document is referenced from the inverted lists of exactly **1
+embedding cluster** and **K₁ᵀ salient terms**.  A query is dispatched to
+**K^C clusters** and **≤ K₂ᵀ terms**; candidates from both list families
+are merged, deduplicated, scored by the codec (OPQ/PQ/Flat) and the
+top-R returned.
+
+All search-time compute is fixed-shape jitted JAX (DESIGN.md §2):
+
+    dispatch  : two matmul+top-k (cluster) / table-lookup+top-k (term)
+    gather    : rows of the padded list planes → (B, budget) candidates
+    dedup     : sort-based first-occurrence mask
+    scoring   : PQ ADC (LUT matmul + code gather-sum; Pallas kernel
+                ``repro.kernels.pq_adc`` on TPU, jnp oracle otherwise)
+    top-R     : jax.lax.top_k
+
+The index build runs once on host+device; searching never reshapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cluster_selector as cs_mod
+from repro.core import inverted_lists as il
+from repro.core import opq as opq_mod
+from repro.core import pq as pq_mod
+from repro.core import term_selector as ts_mod
+from repro.core.inverted_lists import PAD_DOC, PaddedLists
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cluster_sel", "term_sel", "cluster_lists", "term_lists",
+                 "opq", "doc_codes", "doc_embeddings", "doc_assign"],
+    meta_fields=["codec"])
+@dataclasses.dataclass(frozen=True)
+class HybridIndex:
+    cluster_sel: cs_mod.ClusterSelector
+    term_sel: ts_mod.TermSelector
+    cluster_lists: PaddedLists
+    term_lists: PaddedLists
+    opq: Optional[opq_mod.OPQCodebook]      # codec state (opq/pq)
+    doc_codes: Optional[Array]              # (n_docs, m) i32
+    doc_embeddings: Optional[Array]         # (n_docs, h) — flat codec only
+    doc_assign: Array                       # φ(D), (n_docs,) i32
+    codec: str = "opq"                      # "opq" | "pq" | "flat" (static)
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.doc_assign.shape[0])
+
+
+# --------------------------------------------------------------------------
+# build
+# --------------------------------------------------------------------------
+
+def build(key: Array,
+          doc_embeddings: Array,
+          doc_tokens: Array,
+          vocab_size: int,
+          *,
+          n_clusters: int,
+          k1_terms: int,
+          codec: str = "opq",
+          pq_m: int = 8,
+          pq_k: int = 256,
+          cluster_capacity: Optional[int] = None,
+          term_capacity: Optional[int] = None,
+          cluster_sel: Optional[cs_mod.ClusterSelector] = None,
+          doc_assign: Optional[Array] = None,
+          term_pos_scores: Optional[Array] = None,
+          term_sel: Optional[ts_mod.TermSelector] = None,
+          kmeans_iters: int = 15,
+          use_clusters: bool = True,
+          use_terms: bool = True,
+          ) -> HybridIndex:
+    """Build HI² over a corpus.
+
+    The unsupervised path computes everything here (KMeans + BM25 + OPQ).
+    The supervised path passes pre-trained ``cluster_sel`` /
+    ``term_pos_scores`` / ``term_sel`` from the distillation trainer and
+    reuses the same list construction. ``use_clusters`` / ``use_terms``
+    expose the paper's ablations (w.o. Clus / w.o. Term, §5.3).
+    """
+    n_docs, h = doc_embeddings.shape
+    k_cl, k_pq, k_ts = jax.random.split(key, 3)
+
+    # --- cluster side -----------------------------------------------------
+    if cluster_sel is None:
+        cluster_sel, doc_assign = cs_mod.init_kmeans(
+            k_cl, doc_embeddings, n_clusters, n_iters=kmeans_iters)
+    elif doc_assign is None:
+        doc_assign = cs_mod.select_for_doc(cluster_sel, doc_embeddings)
+
+    if use_clusters:
+        assign_scores = np.asarray(
+            cs_mod.scores(cluster_sel, doc_embeddings)
+        )[np.arange(n_docs), np.asarray(doc_assign)]
+        cluster_lists = il.build(np.arange(n_docs), np.asarray(doc_assign),
+                                 assign_scores, n_lists=n_clusters,
+                                 capacity=cluster_capacity)
+    else:
+        cluster_lists = il.PaddedLists(
+            entries=jnp.full((n_clusters, 1), PAD_DOC, jnp.int32),
+            lengths=jnp.zeros((n_clusters,), jnp.int32))
+
+    # --- term side --------------------------------------------------------
+    if term_sel is None or term_pos_scores is None:
+        term_sel, term_pos_scores, _ = ts_mod.fit_unsup(doc_tokens, vocab_size)
+
+    if use_terms:
+        term_ids, term_scores = ts_mod.doc_terms(doc_tokens, term_pos_scores,
+                                                 k1_terms)
+        doc_rep = np.repeat(np.arange(n_docs), k1_terms)
+        term_lists = il.build(doc_rep, np.asarray(term_ids).reshape(-1),
+                              np.asarray(term_scores).reshape(-1),
+                              n_lists=vocab_size, capacity=term_capacity)
+    else:
+        term_lists = il.PaddedLists(
+            entries=jnp.full((vocab_size, 1), PAD_DOC, jnp.int32),
+            lengths=jnp.zeros((vocab_size,), jnp.int32))
+
+    # --- codec ------------------------------------------------------------
+    opq = None
+    doc_codes = None
+    kept_embeddings = None
+    if codec in ("opq", "pq"):
+        if codec == "opq":
+            opq = opq_mod.train_opq(k_pq, doc_embeddings, m=pq_m, k=pq_k)
+        else:  # plain PQ — identity rotation
+            cb = pq_mod.train_pq(k_pq, doc_embeddings, m=pq_m, k=pq_k)
+            opq = opq_mod.OPQCodebook(
+                rotation=jnp.eye(h, dtype=jnp.float32), codebook=cb)
+        doc_codes = opq_mod.encode(opq, doc_embeddings)
+        if pq_k <= 256:
+            # codes fit a byte (Faiss's uint8 layout): 4× less HBM and
+            # 4× less gather traffic on the candidate hot path (§Perf)
+            doc_codes = doc_codes.astype(jnp.uint8)
+    elif codec == "flat":
+        kept_embeddings = jnp.asarray(doc_embeddings, jnp.float32)
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+
+    return HybridIndex(cluster_sel=cluster_sel, term_sel=term_sel,
+                       cluster_lists=cluster_lists, term_lists=term_lists,
+                       opq=opq, doc_codes=doc_codes,
+                       doc_embeddings=kept_embeddings,
+                       doc_assign=jnp.asarray(doc_assign, jnp.int32),
+                       codec=codec)
+
+
+# --------------------------------------------------------------------------
+# search
+# --------------------------------------------------------------------------
+
+class SearchResult(NamedTuple):
+    doc_ids: Array        # (B, R) i32, PAD_DOC when fewer candidates
+    scores: Array         # (B, R) f32
+    n_candidates: Array   # (B,) i32 — unique docs evaluated (∝ paper's QL)
+
+
+def _codec_scores(index: HybridIndex, queries: Array, candidates: Array,
+                  use_kernel: bool) -> Array:
+    safe = jnp.clip(candidates, 0, None)
+    if index.codec in ("opq", "pq"):
+        lut = opq_mod.adc_lut(index.opq, queries)            # (B, m, k)
+        codes = index.doc_codes[safe]                        # (B, C, m)
+        if use_kernel:
+            from repro.kernels.pq_adc import ops as adc_ops
+            return adc_ops.pq_adc(lut, codes)
+        return pq_mod.adc_score(lut, codes)
+    # flat codec
+    emb = index.doc_embeddings[safe]                         # (B, C, h)
+    return jnp.einsum("bh,bch->bc", queries.astype(jnp.float32), emb)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kc", "k2", "top_r", "use_kernel"))
+def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
+           *, kc: int, k2: int, top_r: int,
+           use_kernel: bool = False) -> SearchResult:
+    """Eq. 5: A(Q) = A^C(Q) ∪ A^T(Q), then codec scoring + top-R."""
+    # dispatch
+    cluster_ids, _ = cs_mod.select_for_query(index.cluster_sel,
+                                             query_embeddings, kc)
+    term_ids = ts_mod.query_terms(index.term_sel, query_tokens, k2)
+
+    # gather + merge
+    cand_c = il.gather_candidates(index.cluster_lists, cluster_ids)
+    cand_t = il.gather_candidates(index.term_lists, term_ids)
+    cands = jnp.concatenate([cand_c, cand_t], axis=-1)       # (B, budget)
+
+    keep = il.dedup_mask(cands)
+    scores = _codec_scores(index, query_embeddings, cands, use_kernel)
+    scores = jnp.where(keep, scores, -jnp.inf)
+
+    # narrow dispatch configs can have a budget smaller than top_r:
+    # clamp the top_k and PAD-fill the tail
+    k_eff = min(top_r, scores.shape[-1])
+    top_s, top_pos = jax.lax.top_k(scores, k_eff)
+    top_ids = jnp.take_along_axis(cands, top_pos, axis=-1)
+    if k_eff < top_r:
+        pad = top_r - k_eff
+        top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        top_ids = jnp.pad(top_ids, ((0, 0), (0, pad)),
+                          constant_values=PAD_DOC)
+    valid = jnp.isfinite(top_s)
+    return SearchResult(
+        doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
+        scores=jnp.where(valid, top_s, 0.0),
+        n_candidates=keep.sum(axis=-1).astype(jnp.int32),
+    )
+
+
+def candidate_budget(index: HybridIndex, kc: int, k2: int) -> int:
+    """Static per-query candidate slots (the latency proxy's upper bound)."""
+    return kc * index.cluster_lists.capacity + k2 * index.term_lists.capacity

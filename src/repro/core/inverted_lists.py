@@ -1,0 +1,114 @@
+"""Fixed-capacity padded inverted lists — the TPU-native replacement for
+Faiss's variable-length postings (DESIGN.md §2).
+
+An inverted file is stored as two dense planes:
+
+    entries: (n_lists, capacity) int32 doc ids, PAD (-1) beyond length
+    lengths: (n_lists,)          int32
+
+Construction happens once, host-side (numpy) — exactly like Faiss's CPU
+index build — but every *search-time* operation (dispatch, gather, merge,
+dedup) is fixed-shape jitted JAX.  Overflowing lists are truncated by
+per-document score, which is the same operation as the paper's static
+index pruning (Appendix B) applied at build time; :mod:`repro.core.pruning`
+implements the percentile-threshold variant on an already-built index.
+
+At scale the ``entries`` plane is sharded over the mesh ``model`` axis
+(row-sharding over lists); see ``repro/distributed/sharding.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+PAD_DOC = -1
+
+
+class PaddedLists(NamedTuple):
+    entries: Array   # (n_lists, capacity) i32, PAD_DOC padded
+    lengths: Array   # (n_lists,) i32
+
+    @property
+    def n_lists(self) -> int:
+        return self.entries.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.entries.shape[1]
+
+
+def build(doc_ids: np.ndarray, list_ids: np.ndarray, scores: Optional[np.ndarray],
+          n_lists: int, capacity: Optional[int] = None) -> PaddedLists:
+    """Bucket (doc, list[, score]) assignment triples into padded lists.
+
+    ``doc_ids``/``list_ids``: (n_assignments,). Assignments with negative
+    list id (PAD terms) are dropped. If a list overflows ``capacity`` the
+    lowest-scoring documents are dropped (score defaults to insertion
+    order → FIFO truncation).
+    """
+    doc_ids = np.asarray(doc_ids).reshape(-1)
+    list_ids = np.asarray(list_ids).reshape(-1)
+    keep = list_ids >= 0
+    doc_ids, list_ids = doc_ids[keep], list_ids[keep]
+    if scores is None:
+        scores = -np.arange(len(doc_ids), dtype=np.float64)  # FIFO
+    else:
+        scores = np.asarray(scores, np.float64).reshape(-1)[keep]
+
+    # sort by (list, -score) then cut each list at capacity
+    order = np.lexsort((-scores, list_ids))
+    doc_ids, list_ids, scores = doc_ids[order], list_ids[order], scores[order]
+    counts = np.bincount(list_ids, minlength=n_lists)
+    if capacity is None:
+        capacity = max(int(counts.max(initial=1)), 1)
+
+    starts = np.zeros(n_lists + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    rank_in_list = np.arange(len(doc_ids)) - starts[list_ids]
+    keep2 = rank_in_list < capacity
+
+    entries = np.full((n_lists, capacity), PAD_DOC, np.int32)
+    entries[list_ids[keep2], rank_in_list[keep2]] = doc_ids[keep2]
+    lengths = np.minimum(counts, capacity).astype(np.int32)
+    return PaddedLists(entries=jnp.asarray(entries), lengths=jnp.asarray(lengths))
+
+
+@jax.jit
+def gather_candidates(lists: PaddedLists, dispatched: Array) -> Array:
+    """Fetch the contents of the dispatched lists for a query batch.
+
+    dispatched: (B, K) list ids (PAD=-1 allowed) →
+    candidates: (B, K·capacity) doc ids with PAD_DOC where invalid.
+    """
+    safe = jnp.clip(dispatched, 0, None)
+    rows = lists.entries[safe]                                   # (B, K, cap)
+    rows = jnp.where((dispatched >= 0)[:, :, None], rows, PAD_DOC)
+    return rows.reshape(dispatched.shape[0], -1)
+
+
+@jax.jit
+def dedup_mask(candidates: Array) -> Array:
+    """First-occurrence mask over each row — TPU-friendly set semantics.
+
+    Duplicates arise when a document sits in several dispatched lists
+    (cluster ∩ term hits). We sort ids, mark repeats, and scatter the
+    mask back — O(B·C log C), fixed shape, no hashing.
+    """
+    b, c = candidates.shape
+    order = jnp.argsort(candidates, axis=-1)
+    sorted_ids = jnp.take_along_axis(candidates, order, axis=-1)
+    is_dup = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), sorted_ids[:, 1:] == sorted_ids[:, :-1]], axis=-1)
+    keep_sorted = (~is_dup) & (sorted_ids != PAD_DOC)
+    # scatter back to original positions via the inverse permutation
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(keep_sorted, inv, axis=-1)
+
+
+def list_size_histogram(lists: PaddedLists) -> np.ndarray:
+    return np.asarray(lists.lengths)

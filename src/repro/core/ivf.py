@@ -1,0 +1,69 @@
+"""IVF baselines (paper §5.1) and the HI² ablations (§5.3).
+
+All of these are degenerate configurations of the hybrid machinery:
+
+    IVF-Flat    — clusters only, Flat codec
+    IVF-PQ      — clusters only, PQ codec        (Jégou et al. 2011)
+    IVF-OPQ     — clusters only, OPQ codec       (Ge et al. 2014)
+    Distill-VQ  — clusters only, *learned* cluster embeddings + OPQ
+                  (Xiao et al. 2022a; our trainer in core/distill.py)
+    w.o. Term   — HI² with the term lists disabled  (≡ IVF-*)
+    w.o. Clus   — HI² with the cluster lists disabled (term-only)
+
+Implementing the baselines through the same code path keeps the
+comparison honest: identical gather/dedup/top-k machinery, only the
+dispatched lists differ — exactly the paper's "same candidates ⇒ same
+latency" argument (§5.1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core import hybrid_index as hi
+
+Array = jax.Array
+
+
+def build_ivf(key: Array, doc_embeddings: Array, doc_tokens: Array,
+              vocab_size: int, *, n_clusters: int, codec: str = "opq",
+              pq_m: int = 8, pq_k: int = 256,
+              cluster_capacity: Optional[int] = None,
+              cluster_sel=None, doc_assign=None,
+              kmeans_iters: int = 15) -> hi.HybridIndex:
+    """Cluster-only index (IVF-Flat / IVF-PQ / IVF-OPQ / Distill-VQ body)."""
+    return hi.build(key, doc_embeddings, doc_tokens, vocab_size,
+                    n_clusters=n_clusters, k1_terms=1, codec=codec,
+                    pq_m=pq_m, pq_k=pq_k, cluster_capacity=cluster_capacity,
+                    cluster_sel=cluster_sel, doc_assign=doc_assign,
+                    kmeans_iters=kmeans_iters,
+                    use_clusters=True, use_terms=False)
+
+
+def build_term_only(key: Array, doc_embeddings: Array, doc_tokens: Array,
+                    vocab_size: int, *, k1_terms: int, codec: str = "opq",
+                    pq_m: int = 8, pq_k: int = 256,
+                    term_capacity: Optional[int] = None,
+                    term_pos_scores=None, term_sel=None) -> hi.HybridIndex:
+    """Term-only index (the paper's w.o. Clus ablation)."""
+    return hi.build(key, doc_embeddings, doc_tokens, vocab_size,
+                    n_clusters=1, k1_terms=k1_terms, codec=codec,
+                    pq_m=pq_m, pq_k=pq_k, term_capacity=term_capacity,
+                    term_pos_scores=term_pos_scores, term_sel=term_sel,
+                    use_clusters=False, use_terms=True)
+
+
+def search_ivf(index: hi.HybridIndex, query_embeddings: Array,
+               query_tokens: Array, *, kc: int, top_r: int,
+               use_kernel: bool = False) -> hi.SearchResult:
+    """Search with the term side off (k2=1 dispatches only PAD lists)."""
+    return hi.search(index, query_embeddings, query_tokens,
+                     kc=kc, k2=1, top_r=top_r, use_kernel=use_kernel)
+
+
+def search_term_only(index: hi.HybridIndex, query_embeddings: Array,
+                     query_tokens: Array, *, k2: int, top_r: int,
+                     use_kernel: bool = False) -> hi.SearchResult:
+    return hi.search(index, query_embeddings, query_tokens,
+                     kc=1, k2=k2, top_r=top_r, use_kernel=use_kernel)

@@ -1,0 +1,38 @@
+"""Retrieval quality metrics (paper §5.1): Recall@K and MRR@K.
+
+qrels are (n_queries,) int32 — one relevant doc per query (our synthetic
+benchmark generates single-positive qrels, matching MS MARCO dev's
+dominant single-judgement structure). Multi-positive variants accept a
+(n_queries, n_pos) padded matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def recall_at_k(retrieved: Array, qrels: Array, k: int) -> float:
+    """retrieved: (B, R) ranked doc ids; qrels: (B,) or (B, P) with -1 pads."""
+    retrieved = jnp.asarray(retrieved)[:, :k]
+    qrels = jnp.asarray(qrels)
+    if qrels.ndim == 1:
+        qrels = qrels[:, None]
+    hit = (retrieved[:, :, None] == qrels[:, None, :]) & (qrels[:, None, :] >= 0)
+    per_q = hit.any(axis=1).sum(axis=-1) / jnp.maximum((qrels >= 0).sum(axis=-1), 1)
+    return float(jnp.mean(per_q))
+
+
+def mrr_at_k(retrieved: Array, qrels: Array, k: int) -> float:
+    retrieved = jnp.asarray(retrieved)[:, :k]
+    qrels = jnp.asarray(qrels)
+    if qrels.ndim == 1:
+        qrels = qrels[:, None]
+    hit = (retrieved[:, :, None] == qrels[:, None, :]) & (qrels[:, None, :] >= 0)
+    hit_any = hit.any(axis=-1)                                  # (B, k)
+    ranks = jnp.argmax(hit_any, axis=-1)                        # first hit
+    found = hit_any.any(axis=-1)
+    rr = jnp.where(found, 1.0 / (ranks + 1.0), 0.0)
+    return float(jnp.mean(rr))

@@ -1,0 +1,133 @@
+"""Product Quantization codec (paper §3.2, Eq. 3–4).
+
+PQ splits an h-dim embedding into ``m`` fragments, quantizing each
+fragment to one of ``k`` codewords.  Storage per document is ``m`` uint8
+codes (k ≤ 256) — 32× smaller than fp32 at the paper's (m=96, k=256, h=768).
+
+Search uses ADC (asymmetric distance computation): for a query we build a
+(m, k) inner-product lookup table once, then score any candidate with an
+``m``-gather + sum (Eq. 4).  On TPU the LUT build is an MXU matmul and
+the gather-sum is the Pallas kernel ``repro.kernels.pq_adc``; this module
+holds the codec logic and a pure-jnp scoring path used as the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+
+Array = jax.Array
+
+
+class PQCodebook(NamedTuple):
+    """codewords: (m, k, dsub) f32 — ``m`` independent sub-codebooks."""
+    codewords: Array
+
+    @property
+    def m(self) -> int:
+        return self.codewords.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codewords.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codewords.shape[2]
+
+
+def split_fragments(x: Array, m: int) -> Array:
+    """(n, h) -> (n, m, h/m)."""
+    n, h = x.shape
+    assert h % m == 0, f"dim {h} not divisible by m={m}"
+    return x.reshape(n, m, h // m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "n_iters"))
+def train_pq(key: Array, x: Array, m: int, k: int = 256,
+             n_iters: int = 15) -> PQCodebook:
+    """One KMeans per fragment, vmapped over the m independent subspaces."""
+    frags = split_fragments(x, m).transpose(1, 0, 2)  # (m, n, dsub)
+    keys = jax.random.split(key, m)
+
+    def fit_one(kk, xf):
+        c, _ = kmeans.kmeans_fit(kk, xf, n_clusters=k, n_iters=n_iters)
+        return c
+
+    codewords = jax.vmap(fit_one)(keys, frags)  # (m, k, dsub)
+    return PQCodebook(codewords=codewords)
+
+
+@jax.jit
+def encode(codebook: PQCodebook, x: Array) -> Array:
+    """Quantize embeddings to codes. (n, h) -> (n, m) int32 (values < k)."""
+    frags = split_fragments(x, codebook.m)  # (n, m, dsub)
+    # distance argmin per subspace: argmax(<x, c> - ||c||²/2)
+    c = codebook.codewords.astype(jnp.float32)  # (m, k, dsub)
+    c_norm = 0.5 * jnp.sum(c * c, axis=-1)  # (m, k)
+    scores = jnp.einsum("nmd,mkd->nmk", frags.astype(jnp.float32), c) - c_norm
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def decode(codebook: PQCodebook, codes: Array) -> Array:
+    """Reconstruct embeddings from codes. (n, m) -> (n, h)."""
+    m = codebook.m
+    gathered = jnp.take_along_axis(
+        codebook.codewords[None],            # (1, m, k, dsub)
+        codes[:, :, None, None],             # (n, m, 1, 1)
+        axis=2,
+    )[:, :, 0]                               # (n, m, dsub)
+    return gathered.reshape(codes.shape[0], -1)
+
+
+@jax.jit
+def adc_lut(codebook: PQCodebook, queries: Array) -> Array:
+    """Inner-product lookup tables for a batch of queries.
+
+    (B, h) -> (B, m, k): lut[b, j, i] = <e_Q^j, v_{j,i}>  (Eq. 4 terms).
+    """
+    qf = split_fragments(queries, codebook.m)  # (B, m, dsub)
+    return jnp.einsum("bmd,mkd->bmk", qf.astype(jnp.float32),
+                      codebook.codewords.astype(jnp.float32))
+
+
+@jax.jit
+def adc_score(lut: Array, codes: Array) -> Array:
+    """Score candidates against per-query LUTs (pure-jnp oracle path).
+
+    lut: (B, m, k); codes: (B, C, m) int -> scores (B, C) f32.
+
+    Implemented as ONE flat 1-D gather: the take_along_axis formulation
+    materializes five (B, C, m, 3) s32 index planes (~18 GB/device at
+    the MS MARCO serving point — EXPERIMENTS.md §Perf); flat indexing
+    needs a single (B, C, m) i32 plane. (The Pallas kernel sidesteps
+    both on TPU; this is the XLA fallback path.)
+    """
+    b, m, k = lut.shape
+    c = codes.shape[1]
+    # flatten only (m, k): the batch axis stays leading so its sharding
+    # survives (a full flatten forces GSPMD to reshard the LUT)
+    lut2 = lut.reshape(b, m * k)
+    idx = (jnp.arange(m, dtype=jnp.int32)[None, None, :] * k
+           + codes.astype(jnp.int32)).reshape(b, c * m)
+    gathered = jnp.take_along_axis(lut2, idx, axis=1)
+    return gathered.reshape(b, c, m).sum(axis=-1)
+
+
+@jax.jit
+def pq_full_scores(codebook: PQCodebook, queries: Array, codes: Array) -> Array:
+    """Exhaustive PQ scoring of a whole corpus: (B, h) × (n, m) -> (B, n)."""
+    lut = adc_lut(codebook, queries)                       # (B, m, k)
+    onehot_free = jnp.take_along_axis(
+        lut[:, None], codes[None, :, :, None], axis=-1)[..., 0]  # (B, n, m)
+    return jnp.sum(onehot_free, axis=-1)
+
+
+def reconstruction_mse(codebook: PQCodebook, x: Array) -> Array:
+    codes = encode(codebook, x)
+    return jnp.mean(jnp.sum((decode(codebook, codes) - x) ** 2, axis=-1))

@@ -1,0 +1,38 @@
+"""Static index pruning (paper Appendix B).
+
+After indexing, term-side inverted lists can become "super big" —
+especially under the learned term selector.  The paper prunes them:
+
+    threshold = size of the list at the γ-th percentile (γ = 0.996)
+    lists above the threshold drop their lowest-scoring references
+    until they equal the threshold.
+
+Our padded lists are stored score-descending (inverted_lists.build sorts
+by score), so pruning is a pure truncation of the trailing columns —
+no re-sort needed at prune time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inverted_lists import PAD_DOC, PaddedLists
+
+
+def prune_percentile(lists: PaddedLists, gamma: float = 0.996) -> PaddedLists:
+    lengths = np.asarray(lists.lengths)
+    threshold = int(np.quantile(lengths, gamma, method="lower"))
+    threshold = max(threshold, 1)
+    return prune_to_threshold(lists, threshold)
+
+
+def prune_to_threshold(lists: PaddedLists, threshold: int) -> PaddedLists:
+    entries = np.asarray(lists.entries).copy()
+    lengths = np.asarray(lists.lengths).copy()
+    cap = entries.shape[1]
+    if threshold < cap:
+        entries[:, threshold:] = PAD_DOC   # score-descending ⇒ tail = lowest
+        lengths = np.minimum(lengths, threshold)
+        entries = entries[:, :threshold]
+    return PaddedLists(entries=jnp.asarray(entries),
+                       lengths=jnp.asarray(lengths))

@@ -1,0 +1,114 @@
+"""Term selector (paper §4.2, Eq. 7–8).
+
+Indexing side: pick the top-K₁ᵀ salient terms of each document.
+Search side:   dispatch the query to ≤ K₂ᵀ of its own terms using only the
+               stored corpus-average term scores s̄ — no model runs on the
+               query path (the paper's efficiency requirement).
+
+Two scoring backends share every function below through a per-position
+score tensor:
+
+  · HI²_unsup — BM25 position scores (:mod:`repro.core.bm25`);
+  · HI²_sup   — a two-layer ReLU MLP f: R^h → R over encoder token states
+                (Eq. 7 middle branch), with max-pooling over repeated
+                terms handled by the shared score_vector/top_terms paths.
+
+The encoder itself lives in :mod:`repro.models.transformer`; training
+wires ``encoder → hidden states → mlp_token_scores`` (see
+``repro/core/distill.py`` and ``examples/train_hi2_distill.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bm25
+from repro.core.bm25 import PAD_ID
+
+Array = jax.Array
+
+
+class TermMLP(NamedTuple):
+    """f(·) in Eq. 7: two-layer MLP with ReLU, R^h → R."""
+    w1: Array  # (h, h)
+    b1: Array  # (h,)
+    w2: Array  # (h, 1)
+    b2: Array  # (1,)
+
+
+def init_mlp(key: Array, hidden: int) -> TermMLP:
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(hidden)
+    return TermMLP(
+        w1=jax.random.normal(k1, (hidden, hidden), jnp.float32) * s,
+        b1=jnp.zeros((hidden,), jnp.float32),
+        w2=jax.random.normal(k2, (hidden, 1), jnp.float32) * s,
+        b2=jnp.zeros((1,), jnp.float32),
+    )
+
+
+def mlp_token_scores(mlp: TermMLP, hidden_states: Array, tokens: Array) -> Array:
+    """Per-position saliency from encoder states: (B, L, h) -> (B, L).
+
+    Softplus keeps scores positive (BM25-comparable saliency scale);
+    pads score 0.
+    """
+    x = jax.nn.relu(hidden_states @ mlp.w1 + mlp.b1)
+    s = (x @ mlp.w2 + mlp.b2)[..., 0]
+    s = jax.nn.softplus(s)
+    return s * (tokens != PAD_ID)
+
+
+class TermSelector(NamedTuple):
+    """Search-time state shared by both variants (model-free query path)."""
+    avg_scores: Array  # s̄_v, (V,) f32
+
+
+@functools.partial(jax.jit, static_argnames=("k1",))
+def doc_terms(tokens: Array, position_scores: Array, k1: int
+              ) -> tuple[Array, Array]:
+    """Indexing side: top-K₁ᵀ unique terms per document (+ their scores)."""
+    return bm25.top_terms(tokens, position_scores, k1)
+
+
+@functools.partial(jax.jit, static_argnames=("k2",))
+def query_terms(selector: TermSelector, query_tokens: Array, k2: int) -> Array:
+    """Search side (Eq. 8), fixed-shape for both branches.
+
+    Unique query terms ranked by stored s̄; top-k of ≤ k2 valid terms
+    *is* "select all terms" for short queries, so one path covers both.
+    Returns (B, k2) term ids with PAD_ID fill.
+    """
+    first = bm25.first_occurrence_mask(query_tokens)
+    sbar = selector.avg_scores[jnp.clip(query_tokens, 0, None)]
+    masked = jnp.where(first, sbar, -jnp.inf)
+    k_eff = min(k2, query_tokens.shape[-1])   # queries shorter than K₂ᵀ
+    top_s, top_i = jax.lax.top_k(masked, k_eff)
+    ids = jnp.take_along_axis(query_tokens, top_i, axis=-1)
+    ids = jnp.where(jnp.isfinite(top_s), ids, PAD_ID).astype(jnp.int32)
+    if k_eff < k2:
+        ids = jnp.pad(ids, ((0, 0), (0, k2 - k_eff)),
+                      constant_values=PAD_ID)
+    return ids
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def score_vectors(tokens: Array, position_scores: Array, vocab_size: int
+                  ) -> Array:
+    """s_D / s_Q over the vocabulary (Eq. 12), max-pooled over repeats."""
+    return bm25.score_vector(tokens, position_scores, vocab_size)
+
+
+def fit_unsup(tokens: Array, vocab_size: int, alpha: float = 0.82,
+              beta: float = 0.68) -> tuple[TermSelector, Array, bm25.BM25Stats]:
+    """HI²_unsup: BM25 stats + s̄ from the corpus.
+
+    Returns (selector, per-position corpus scores (n, L), stats).
+    """
+    stats = bm25.fit(tokens, vocab_size)
+    pos_scores = bm25.score_positions(tokens, stats, alpha=alpha, beta=beta)
+    sbar = bm25.average_term_scores(tokens, pos_scores, vocab_size)
+    return TermSelector(avg_scores=sbar), pos_scores, stats

@@ -1,0 +1,167 @@
+"""Graph data: synthetic generators + the fanout neighbor sampler
+(required substrate for the ``minibatch_lg`` cell).
+
+All outputs are fixed-shape padded ``GraphBatch``es (PAD edges point at a
+sink node with edge_mask=0) so every downstream step is jit-stable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.gnn import GraphBatch
+
+
+def random_graph(seed: int, n_nodes: int, n_edges: int, d_feat: int,
+                 n_classes: int, n_communities: int = 16) -> GraphBatch:
+    """Community-structured random graph (labels correlate with features)."""
+    rng = np.random.default_rng(seed)
+    comm = rng.integers(0, n_communities, n_nodes)
+    # 70% intra-community edges, 30% random
+    n_intra = int(n_edges * 0.7)
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = np.empty(n_edges, np.int32)
+    # intra: rewire dst to a node of the same community (approx via sort buckets)
+    order = np.argsort(comm, kind="stable")
+    starts = np.searchsorted(comm[order], np.arange(n_communities + 1))
+    for i in range(n_intra):
+        c = comm[src[i]]
+        lo, hi = starts[c], starts[c + 1]
+        dst[i] = order[rng.integers(lo, hi)] if hi > lo else src[i]
+    dst[n_intra:] = rng.integers(0, n_nodes, n_edges - n_intra)
+
+    centers = rng.normal(size=(n_communities, d_feat)).astype(np.float32)
+    feat = centers[comm] + rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    labels = (comm % n_classes).astype(np.int32)
+    return GraphBatch(
+        node_feat=jnp.asarray(feat), edge_src=jnp.asarray(src),
+        edge_dst=jnp.asarray(dst),
+        edge_mask=jnp.ones((n_edges,), jnp.float32),
+        node_mask=jnp.ones((n_nodes,), jnp.float32),
+        labels=jnp.asarray(labels), graph_id=jnp.zeros((n_nodes,), jnp.int32),
+        n_graphs=1)
+
+
+class NeighborSampler:
+    """GraphSAGE-style fanout sampling over a CSR adjacency (host-side)."""
+
+    def __init__(self, n_nodes: int, edge_src: np.ndarray,
+                 edge_dst: np.ndarray):
+        self.n_nodes = n_nodes
+        order = np.argsort(edge_dst, kind="stable")
+        self.sorted_src = np.asarray(edge_src)[order]
+        self.indptr = np.searchsorted(np.asarray(edge_dst)[order],
+                                      np.arange(n_nodes + 1))
+
+    def sample(self, seed: int, seeds: np.ndarray, fanouts: tuple[int, ...],
+               node_feat: np.ndarray, labels: np.ndarray) -> GraphBatch:
+        """Returns the padded union subgraph of ``seeds`` + sampled hops.
+
+        Fixed shapes: n_sub = Σ_l seeds·Π fanouts[:l];
+        edges point child→parent (messages flow to the seeds).
+        """
+        rng = np.random.default_rng(seed)
+        frontier = np.asarray(seeds, np.int64)
+        all_nodes = [frontier]
+        src_list, dst_list, mask_list = [], [], []
+        offset = 0
+        for f in fanouts:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            picks = rng.integers(0, np.maximum(deg, 1)[:, None],
+                                 size=(len(frontier), f))
+            nbr = self.sorted_src[self.indptr[frontier][:, None] + picks]
+            valid = (deg > 0)[:, None] & np.ones_like(picks, bool)
+            parent_pos = offset + np.arange(len(frontier))
+            child_pos = offset + len(frontier) + np.arange(nbr.size)
+            src_list.append(child_pos.astype(np.int32))
+            dst_list.append(np.repeat(parent_pos, f).astype(np.int32))
+            mask_list.append(valid.reshape(-1).astype(np.float32))
+            offset += len(frontier)
+            frontier = nbr.reshape(-1)
+            all_nodes.append(frontier)
+
+        nodes = np.concatenate(all_nodes)
+        src = np.concatenate(src_list)
+        dst = np.concatenate(dst_list)
+        mask = np.concatenate(mask_list)
+        labels_out = np.full(len(nodes), -1, np.int32)
+        labels_out[:len(seeds)] = np.asarray(labels)[seeds]
+        node_mask = np.zeros(len(nodes), np.float32)
+        node_mask[:len(seeds)] = 1.0          # loss only on the seed nodes
+        return GraphBatch(
+            node_feat=jnp.asarray(node_feat[nodes].astype(np.float32)),
+            edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+            edge_mask=jnp.asarray(mask),
+            node_mask=jnp.asarray(node_mask),
+            labels=jnp.asarray(labels_out),
+            graph_id=jnp.zeros(len(nodes), jnp.int32), n_graphs=1)
+
+
+def molecule_batch(seed: int, batch: int, n_nodes: int, n_edges: int,
+                   d_feat: int, n_classes: int) -> GraphBatch:
+    """Disjoint union of ``batch`` small graphs (the ``molecule`` cell)."""
+    rng = np.random.default_rng(seed)
+    total_n = batch * n_nodes
+    total_e = batch * n_edges
+    offs = np.repeat(np.arange(batch) * n_nodes, n_edges)
+    src = rng.integers(0, n_nodes, total_e) + offs
+    dst = rng.integers(0, n_nodes, total_e) + offs
+    feat = rng.normal(size=(total_n, d_feat)).astype(np.float32)
+    labels = rng.integers(0, n_classes, batch).astype(np.int32)
+    return GraphBatch(
+        node_feat=jnp.asarray(feat),
+        edge_src=jnp.asarray(src.astype(np.int32)),
+        edge_dst=jnp.asarray(dst.astype(np.int32)),
+        edge_mask=jnp.ones((total_e,), jnp.float32),
+        node_mask=jnp.ones((total_n,), jnp.float32),
+        labels=jnp.asarray(labels),
+        graph_id=jnp.asarray(np.repeat(np.arange(batch), n_nodes)
+                             .astype(np.int32)),
+        n_graphs=batch)
+
+
+def partition_by_dst(batch: GraphBatch, n_shards: int) -> GraphBatch:
+    """Owner-computes range partitioning (gnn.forward_partitioned input
+    contract): nodes padded to a multiple of n_shards; edges reordered so
+    shard s holds exactly E/n_shards edges whose dst ∈ s's node range
+    (PAD edges fill the slack; real edges never drop)."""
+    import numpy as np
+    src = np.asarray(batch.edge_src)
+    dst = np.asarray(batch.edge_dst)
+    mask = np.asarray(batch.edge_mask)
+    feat = np.asarray(batch.node_feat)
+    nmask = np.asarray(batch.node_mask)
+    labels = np.asarray(batch.labels)
+
+    n_nodes = feat.shape[0]
+    n_pad_nodes = -n_nodes % n_shards
+    if n_pad_nodes:
+        feat = np.pad(feat, ((0, n_pad_nodes), (0, 0)))
+        nmask = np.pad(nmask, (0, n_pad_nodes))
+        labels = np.pad(labels, (0, n_pad_nodes), constant_values=-1)
+    n_total = n_nodes + n_pad_nodes
+    n_local = n_total // n_shards
+
+    owner = dst // n_local
+    counts = np.bincount(owner[mask > 0], minlength=n_shards)
+    e_local = int(counts.max(initial=1))
+    src_out = np.zeros((n_shards, e_local), np.int32)
+    dst_out = np.tile((np.arange(n_shards) * n_local)[:, None],
+                      (1, e_local)).astype(np.int32)   # PAD → own range
+    mask_out = np.zeros((n_shards, e_local), np.float32)
+    for s in range(n_shards):
+        sel = (owner == s) & (mask > 0)
+        k = sel.sum()
+        src_out[s, :k] = src[sel]
+        dst_out[s, :k] = dst[sel]
+        mask_out[s, :k] = 1.0
+    return GraphBatch(
+        node_feat=jnp.asarray(feat),
+        edge_src=jnp.asarray(src_out.reshape(-1)),
+        edge_dst=jnp.asarray(dst_out.reshape(-1)),
+        edge_mask=jnp.asarray(mask_out.reshape(-1)),
+        node_mask=jnp.asarray(nmask),
+        labels=jnp.asarray(labels),
+        graph_id=jnp.zeros(n_total, jnp.int32),
+        n_graphs=batch.n_graphs)

@@ -1,0 +1,64 @@
+"""Synthetic recsys click/behaviour batches (DLRM / SASRec / DIEN / MIND).
+
+Clicks follow a latent-factor model so training actually reduces loss:
+user/item factors are drawn once per seed; labels = σ(⟨u, v⟩ + noise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.recsys import (DIENBatch, DLRMBatch, MINDBatch,
+                                 SASRecBatch)
+
+
+def dlrm_batch(seed: int, batch: int, n_dense: int = 13, n_sparse: int = 26,
+               n_rows: int = 1_000_000) -> DLRMBatch:
+    rng = np.random.default_rng(seed)
+    dense = rng.normal(size=(batch, n_dense)).astype(np.float32)
+    sparse = rng.integers(0, n_rows, size=(batch, n_sparse)).astype(np.int32)
+    # clickiness correlates with the dense features → learnable signal
+    w = np.linspace(-1, 1, n_dense)
+    p = 1 / (1 + np.exp(-(dense @ w + rng.normal(size=batch) * 0.5)))
+    labels = (rng.random(batch) < p).astype(np.float32)
+    return DLRMBatch(dense=jnp.asarray(dense), sparse=jnp.asarray(sparse),
+                     labels=jnp.asarray(labels))
+
+
+def sasrec_batch(seed: int, batch: int, seq_len: int = 50,
+                 n_items: int = 1_000_000) -> SASRecBatch:
+    rng = np.random.default_rng(seed)
+    # random-walk sequences in item space → local transition structure
+    start = rng.integers(0, n_items, batch)
+    steps = rng.integers(-50, 51, size=(batch, seq_len)).cumsum(axis=1)
+    items = ((start[:, None] + steps) % n_items).astype(np.int32)
+    targets = np.roll(items, -1, axis=1)
+    targets[:, -1] = rng.integers(0, n_items, batch)
+    negs = rng.integers(0, n_items, size=(batch, seq_len)).astype(np.int32)
+    return SASRecBatch(items=jnp.asarray(items), targets=jnp.asarray(targets),
+                       negatives=jnp.asarray(negs))
+
+
+def dien_batch(seed: int, batch: int, seq_len: int = 100,
+               n_items: int = 1_000_000) -> DIENBatch:
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(0, n_items, size=(batch, seq_len)).astype(np.int32)
+    target = rng.integers(0, n_items, batch).astype(np.int32)
+    # positive iff the target's category (id % C) appears in the history
+    c = max(n_items // 100, 16)
+    labels = (np.isin(target % c, hist % c, assume_unique=False) &
+              (rng.random(batch) < 0.9)).astype(np.float32)
+    return DIENBatch(history=jnp.asarray(hist), target=jnp.asarray(target),
+                     labels=jnp.asarray(labels))
+
+
+def mind_batch(seed: int, batch: int, seq_len: int = 50, n_neg: int = 10,
+               n_items: int = 1_000_000) -> MINDBatch:
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(0, n_items, size=(batch, seq_len)).astype(np.int32)
+    target = hist[np.arange(batch), rng.integers(0, seq_len, batch)]
+    negs = rng.integers(0, n_items, size=(batch, n_neg)).astype(np.int32)
+    return MINDBatch(history=jnp.asarray(hist),
+                     target=jnp.asarray(target.astype(np.int32)),
+                     negatives=jnp.asarray(negs))

@@ -1,0 +1,29 @@
+"""Hash tokenizer — deterministic text → fixed-vocab ids with no external
+vocabulary files (none are available offline).  Used by the end-to-end
+examples when indexing real text snippets; the synthetic benchmark
+corpus generates ids directly."""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import numpy as np
+
+PAD_ID = -1
+_WORD_RE = re.compile(r"[a-z0-9]+")
+
+
+def tokenize(text: str, vocab_size: int, max_len: int) -> np.ndarray:
+    """Lowercase word split, each word hashed into [0, vocab_size)."""
+    words = _WORD_RE.findall(text.lower())[:max_len]
+    ids = [int.from_bytes(hashlib.blake2b(w.encode(), digest_size=4).digest(),
+                          "little") % vocab_size
+           for w in words]
+    out = np.full(max_len, PAD_ID, np.int32)
+    out[:len(ids)] = ids
+    return out
+
+
+def tokenize_batch(texts: list[str], vocab_size: int,
+                   max_len: int) -> np.ndarray:
+    return np.stack([tokenize(t, vocab_size, max_len) for t in texts])

@@ -1,0 +1,48 @@
+"""Collective helpers for the (pod, data, model) production mesh.
+
+The interesting one is the **hierarchical gradient all-reduce**: at 512+
+chips a flat all-reduce over (pod × data) serializes on the slow
+cross-pod (DCI) links.  The bandwidth-optimal schedule is
+
+    reduce_scatter(data)  →  all_reduce(pod)  →  all_gather(data)
+
+which moves 1/|data| of the gradient bytes across pods.  These helpers
+are `shard_map`-body functions; `launch/train.py` applies them when the
+mesh has a pod axis, and `tests/test_distributed.py` proves numerical
+equality with the flat psum on the 8-device host mesh.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def flat_allreduce(grads: PyTree, axis_names: tuple[str, ...]) -> PyTree:
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_names), grads)
+
+
+def hierarchical_allreduce(grads: PyTree, data_axis: str = "data",
+                           pod_axis: str = "pod") -> PyTree:
+    """reduce_scatter(data) → psum(pod) → all_gather(data), leafwise.
+
+    Falls back to a flat psum for leaves too small to scatter.
+    """
+    data_size = jax.lax.axis_size(data_axis)
+
+    def one(g):
+        if g.ndim == 0 or g.shape[0] % data_size != 0:
+            return jax.lax.psum(g, (data_axis, pod_axis))
+        scattered = jax.lax.psum_scatter(g, data_axis,
+                                         scatter_dimension=0, tiled=True)
+        scattered = jax.lax.psum(scattered, pod_axis)
+        return jax.lax.all_gather(scattered, data_axis, axis=0, tiled=True)
+
+    return jax.tree.map(one, grads)
+
+
+def pmean_metrics(metrics: PyTree, axis_names: tuple[str, ...]) -> PyTree:
+    return jax.tree.map(lambda m: jax.lax.pmean(m, axis_names), metrics)

@@ -1,0 +1,114 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); a process-wide rule table maps
+logical names to mesh axes.  Outside a mesh context (CPU unit tests) the
+annotation is a no-op, so the same model code runs everywhere.
+
+Default rules target the production (pod, data, model) mesh:
+
+    batch    → ("pod", "data")   pure DP over pods + data axis
+    seq      → "model"           sequence-sharded residual stream between
+                                  blocks (Megatron sequence parallelism —
+                                  XLA inserts the all-gather/reduce-scatter
+                                  pair around attention/FFN)
+    heads    → "model"           tensor parallelism over (kv-)heads
+    ff       → "model"           tensor parallelism over the FFN hidden dim
+    expert_ff→ "model"           MoE experts: TP inside each expert
+    vocab    → "model"           sharded unembedding / embedding rows
+    table    → "model"           recsys embedding-table row sharding
+    edges    → ("data", "model") GNN edge planes over the whole pod
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, tuple, None]
+
+DEFAULT_RULES: dict[str, AxisName] = {
+    "batch": ("pod", "data"),
+    # ZeRO-3 weight sharding: spans pods on the multi-pod mesh (cross-pod
+    # all-gather of weights is the price of fitting 141B×16B of state)
+    "fsdp": ("pod", "data"),
+    "seq": "model",
+    "seq_kv": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": None,
+    "expert_ff": "model",
+    "moe_capacity": "data",
+    "moe_flat": "data",   # flattened (token, slot) assignment axis
+    "vocab": "model",
+    "table": "model",
+    "rows": None,
+    "edges": ("data", "model"),
+    "nodes": None,
+    "clusters": None,
+    "candidates": "model",
+}
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict[str, AxisName]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict[str, AxisName]] = None):
+    """Activate sharding annotations for model code built under ``mesh``."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop rules that reference axes the mesh doesn't have
+    def filter_axis(ax):
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in mesh.axis_names)
+            return kept if kept else None
+        return ax if ax in mesh.axis_names else None
+
+    merged = {k: filter_axis(v) for k, v in merged.items()}
+    prev_rules, prev_mesh = _rules(), _mesh()
+    _state.rules, _state.mesh = merged, mesh
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.rules, _state.mesh = prev_rules, prev_mesh
+
+
+def spec(*logical_axes: Optional[str]) -> P:
+    """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None
+               for a in logical_axes])
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside use_mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(*logical_axes)))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = _mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical_axes))

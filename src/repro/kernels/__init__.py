@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+    pq_adc          — PQ asymmetric-distance scoring (paper Eq. 4), the
+                      per-query candidate-evaluation hot path of HI².
+    assign_topk     — fused embedding×centroid scoring with running
+                      argmax: KMeans assignment + cluster dispatch
+                      (paper Eq. 6) over large L.
+    flash_attention — SWA/GQA-capable flash attention for the LM-family
+                      architecture backbones (beyond-paper optimization).
+
+Every kernel ships ``kernel.py`` (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper with an ``interpret``
+switch so CPU CI exercises the kernel body), and ``ref.py`` (pure-jnp
+oracle used by the tests' assert_allclose sweeps).
+"""

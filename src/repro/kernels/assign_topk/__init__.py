@@ -1,0 +1,1 @@
+from repro.kernels.assign_topk import kernel, ops, ref

@@ -1,0 +1,77 @@
+"""Fused embedding×centroid scoring with running argmax — the KMeans
+assignment / cluster-dispatch hot spot (paper Eq. 6, DESIGN.md §2).
+
+Faiss scans centroids with a CPU heap; on TPU the score plane is an MXU
+matmul tiled so the (N_blk, L_blk) tile lives in VMEM, with a *running*
+max/argmax folded across centroid tiles — the full (N, L) plane never
+reaches HBM.  The centroid ``-½‖c‖²`` bias (inner-product ↔ L2 argmin
+equivalence) is computed in-kernel per tile.
+
+Grid: (N/N_blk, L/L_blk), centroid axis innermost; the output blocks are
+indexed by the N tile only, so they are *revisited* across centroid
+tiles — the legal sequential-reduction pattern on TPU grids.
+
+VMEM per step (N_blk=256, L_blk=512, h=128):
+    x 128 KiB + c 256 KiB + tile 512 KiB + outs 2 KiB ≈ 0.9 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(x_ref, c_ref, best_s_ref, best_i_ref, *, l_blk: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)            # (n_blk, h)
+    c = c_ref[...].astype(jnp.float32)            # (l_blk, h)
+    c_norm = 0.5 * jnp.sum(c * c, axis=-1)        # (l_blk,)
+    s = jnp.dot(x, c.T, preferred_element_type=jnp.float32) - c_norm[None, :]
+    local_s = jnp.max(s, axis=-1)
+    local_i = jnp.argmax(s, axis=-1).astype(jnp.int32) + j * l_blk
+
+    @pl.when(j == 0)
+    def _init():
+        best_s_ref[...] = local_s
+        best_i_ref[...] = local_i
+
+    @pl.when(j > 0)
+    def _merge():
+        prev_s = best_s_ref[...]
+        take = local_s > prev_s
+        best_s_ref[...] = jnp.where(take, local_s, prev_s)
+        best_i_ref[...] = jnp.where(take, local_i, best_i_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n_blk", "l_blk", "interpret"))
+def assign_argmax(x: jax.Array, centroids: jax.Array, *, n_blk: int = 256,
+                  l_blk: int = 512, interpret: bool = False
+                  ) -> tuple[jax.Array, jax.Array]:
+    """x: (N, h); centroids: (L, h) → (best_score (N,), best_idx (N,)).
+
+    argmax_j ⟨x, c_j⟩ − ½‖c_j‖²  ==  argmin_j ‖x − c_j‖².
+    N % n_blk == 0 and L % l_blk == 0 (ops.py pads).
+    """
+    n, h = x.shape
+    l, _ = centroids.shape
+    assert n % n_blk == 0 and l % l_blk == 0, (n, n_blk, l, l_blk)
+    grid = (n // n_blk, l // l_blk)
+    return pl.pallas_call(
+        functools.partial(_assign_kernel, l_blk=l_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_blk, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((l_blk, h), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_blk,), lambda i, j: (i,)),
+            pl.BlockSpec((n_blk,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, centroids)

@@ -1,0 +1,39 @@
+"""Public wrapper: pads N/L to tile multiples, strips the padding, and
+switches to interpret mode off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.assign_topk import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_blk", "l_blk", "use_kernel"))
+def assign_argmax(x: jax.Array, centroids: jax.Array, *, n_blk: int = 256,
+                  l_blk: int = 512, use_kernel: bool = True
+                  ) -> tuple[jax.Array, jax.Array]:
+    if not use_kernel:
+        return ref.assign_argmax(x, centroids)
+    n, h = x.shape
+    l = centroids.shape[0]
+    n_blk = min(n_blk, max(8, n))
+    l_blk = min(l_blk, max(8, l))
+    pad_n = (-n) % n_blk
+    pad_l = (-l) % l_blk
+    xp = jnp.pad(x, ((0, pad_n), (0, 0)))
+    # pad centroids with COPIES of centroid 0: duplicates can only tie,
+    # and the running-max merge breaks ties toward the earlier tile, so
+    # the original index always wins. (A huge-norm sentinel was tried
+    # first and refuted by hypothesis: x·c − ‖c‖²/2 = inf − inf = NaN.)
+    cp = (jnp.concatenate(
+        [centroids, jnp.broadcast_to(centroids[:1], (pad_l, h))])
+        if pad_l else centroids)
+    s, i = kernel.assign_argmax(xp, cp, n_blk=n_blk, l_blk=l_blk,
+                                interpret=not _on_tpu())
+    return s[:n], i[:n]

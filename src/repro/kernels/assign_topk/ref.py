@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the assignment kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assign_argmax(x: jax.Array, centroids: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    c = centroids.astype(jnp.float32)
+    s = x.astype(jnp.float32) @ c.T - 0.5 * jnp.sum(c * c, axis=-1)[None, :]
+    return jnp.max(s, axis=-1), jnp.argmax(s, axis=-1).astype(jnp.int32)

@@ -1,0 +1,144 @@
+"""Flash attention (fwd) with causal, sliding-window (SWA) and GQA
+support — the compute hot spot of every LM-family assigned architecture.
+
+TPU adaptation of the FlashAttention recurrence: the score tile
+(blk_q, blk_k) is an MXU matmul held in VMEM; the online-softmax running
+(max, sum, acc) statistics live in VMEM scratch and persist across the
+kv-tile grid dimension (innermost, sequential on TPU).  The O(S²) score
+plane never exists in HBM; with a window W the kv loop only contributes
+O(S·W) work (fully-masked tiles short-circuit via ``pl.when``).
+
+GQA is handled by BlockSpec index mapping — query head ``h`` reads kv
+head ``h // group`` — so grouped KV is never materialized to Hq heads.
+
+Grid: (B, Hq, Sq/blk_q, Sk/blk_k).
+VMEM per step (blk_q=blk_k=128, d=128):
+    q/k/v tiles 3·64 KiB + scores 64 KiB + acc 64 KiB + stats 1 KiB ≈ 0.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  blk_q: int, blk_k: int, causal: bool, window: int,
+                  scale: float, sq: int, sk: int):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_pos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = jk * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+
+    # tile-level skip: under causal/SWA masks, whole kv tiles are dead —
+    # with a window W only O(S·W) tiles do work
+    first_q = iq * blk_q
+    last_q = first_q + blk_q - 1
+    first_k = jk * blk_k
+    last_k = first_k + blk_k - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= first_k <= last_q
+    if window > 0:
+        live &= last_k > first_q - window           # kv not too far behind
+        if not causal:
+            live &= first_k < last_q + window       # kv not too far ahead
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (blk_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (blk_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+        mask = (q_pos < sq) & (k_pos < sk)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+            if not causal:
+                mask &= (k_pos - q_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = jnp.where(l > 0.0, m_ref[...] + jnp.log(safe_l),
+                                  NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "blk_q", "blk_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False
+                    ) -> tuple[jax.Array, jax.Array]:
+    """q: (B, Hq, Sq, d); k/v: (B, Hkv, Sk, d), Hq % Hkv == 0.
+
+    Sq % blk_q == 0 and Sk % blk_k == 0 (ops.py pads; the kernel masks
+    padded positions via the true ``sq``/``sk`` carried statically).
+    Returns (out (B, Hq, Sq, d), lse (B, Hq, Sq)).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    grid = (b, hq, sq // blk_q, sk // blk_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+                          causal=causal, window=window, scale=scale,
+                          sq=sq, sk=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda b_, h, i, j: (b_, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, d), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        grid_spec=None,
+        interpret=interpret,
+    )(q, k, v)

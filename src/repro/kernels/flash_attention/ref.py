@@ -1,0 +1,79 @@
+"""Pure-jnp dense-attention oracle (causal / sliding-window / GQA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              scale: float | None = None) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+        if not causal:
+            mask &= (k_pos - q_pos) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (possible under non-causal windows with sq != sk)
+    # emit zeros — the flash-kernel convention — not a uniform artifact
+    p = jnp.where(mask.any(axis=-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      scale: float | None = None,
+                      q_chunk: int = 512) -> jax.Array:
+    """XLA-native flash-memory attention: lax.map over query chunks keeps
+    the live score plane at (B, H, q_chunk, S) instead of (B, H, S, S).
+
+    This is the lowering used off-TPU (and by the dry-run): it mirrors the
+    Pallas kernel's O(S·chunk) memory so ``memory_analysis`` reflects the
+    TPU deployment, where the real kernel runs.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if sq % q_chunk != 0:
+        return attention(q, k, v, causal=causal, window=window, scale=scale)
+    kg = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vg = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    k_pos = jnp.arange(sk)[None, :]
+
+    def one_chunk(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32) * scale, kg)
+        q_pos = i * q_chunk + jnp.arange(q_chunk)[:, None]
+        mask = jnp.ones((q_chunk, sk), bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+            if not causal:
+                mask &= (k_pos - q_pos) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask.any(axis=-1)[None, None, :, None], p, 0.0)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vg).astype(q.dtype)
+
+    chunks = jax.lax.map(one_chunk, jnp.arange(sq // q_chunk))
+    return jnp.moveaxis(chunks, 0, 2).reshape(b, hq, sq, d)

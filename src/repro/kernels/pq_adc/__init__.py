@@ -1,0 +1,1 @@
+from repro.kernels.pq_adc import kernel, ops, ref

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the PQ ADC kernel.
+
+Handles layout (candidate-major → fragment-major), padding C to the tile
+size, and the CPU/TPU switch: on non-TPU backends the pallas_call runs in
+``interpret=True`` mode (the kernel body executed by XLA:CPU) so the same
+code path is exercised everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pq_adc import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "use_kernel"))
+def pq_adc(lut: jax.Array, codes: jax.Array, *, c_blk: int = 512,
+           use_kernel: bool = True) -> jax.Array:
+    """lut: (B, m, k) f32; codes: (B, C, m) i32 → scores (B, C) f32."""
+    if not use_kernel:
+        return ref.pq_adc(lut, codes)
+    b, c, m = codes.shape
+    pad = (-c) % c_blk
+    codes_fm = jnp.swapaxes(codes, 1, 2)                     # (B, m, C)
+    if pad:
+        codes_fm = jnp.pad(codes_fm, ((0, 0), (0, 0), (0, pad)))
+    out = kernel.pq_adc_fragmajor(lut, codes_fm, c_blk=c_blk,
+                                  interpret=not _on_tpu())
+    return out[:, :c]

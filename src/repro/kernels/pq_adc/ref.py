@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the PQ ADC kernel (same math as core/pq.adc_score)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_adc(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """lut: (B, m, k); codes: (B, C, m) i32 → (B, C) f32."""
+    gathered = jnp.take_along_axis(
+        lut[:, None],            # (B, 1, m, k)
+        codes[..., None],        # (B, C, m, 1)
+        axis=-1,
+    )[..., 0]
+    return jnp.sum(gathered, axis=-1).astype(jnp.float32)

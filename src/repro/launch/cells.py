@@ -1,0 +1,508 @@
+"""Dry-run cell construction: for every (architecture × input shape)
+pair, the concrete step function, abstract inputs (ShapeDtypeStruct —
+never allocated), and in_shardings for the production mesh.
+
+Cell kinds
+    lm/train      train_step  = value_and_grad(loss) + clip + AdamW
+    lm/prefill    prefill_step (full forward emitting KV caches)
+    lm/decode     serve_step   (1 token vs a seq_len KV cache)
+    gnn/*         train_step over padded GraphBatch
+    recsys/train  train_step over click batches
+    recsys/serve  forward scoring
+    recsys/retrieval   1 query × 10⁶ candidates top-R
+
+Padding policy: GNN node/edge counts are padded up to multiples of 512
+(PAD entries are masked in the model); all other assigned dims divide
+the mesh axes exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry, shapes as sh
+from repro.distributed import sharding as shd
+from repro.models import attention, gnn, recsys, transformer as tfm
+from repro.models.gnn import GraphBatch
+from repro.models.recsys import DIENBatch, DLRMBatch, MINDBatch, SASRecBatch
+from repro.optim import AdamConfig, adam_init, adam_update, clip_by_global_norm
+
+Array = jax.Array
+
+ADAM = AdamConfig(lr=1e-4, weight_decay=0.0)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: tuple                 # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    donate_argnums: tuple
+    rules: dict                 # sharding-rule overrides used for this cell
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch_id}/{self.shape_name}"
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _shardings_by_path(tree, rule_fn):
+    """NamedSharding pytree from a (path_str, ndim) -> logical-axes fn."""
+    def one(path, leaf):
+        axes = rule_fn(jax.tree_util.keystr(path), len(leaf.shape))
+        return shd.named_sharding(*axes)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _replicated(tree):
+    return jax.tree.map(lambda l: shd.named_sharding(*([None] * len(l.shape))),
+                        tree)
+
+
+def _batch_sharded(tree, axis: str = "batch"):
+    return jax.tree.map(
+        lambda l: shd.named_sharding(axis, *([None] * (len(l.shape) - 1))),
+        tree)
+
+
+def _adam_shardings(param_sh):
+    from repro.optim.adam import AdamState
+    return AdamState(step=shd.named_sharding(),
+                     mu=param_sh, nu=jax.tree.map(lambda x: x, param_sh))
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+
+def _lm_param_axes(path: str, ndim: int) -> tuple:
+    """TP over heads/ff/vocab (model axis) × FSDP over d_model (data axis).
+
+    The FSDP ("fsdp" → data) factor is what lets Mixtral-8x22B's 141B
+    parameters + Adam state fit a v5e pod: TP alone leaves 140+ GB per
+    device; ZeRO-3 sharding brings it to ~9 GB (weights are all-gathered
+    at use inside the layer scan — the standard FSDP exchange).
+    """
+    if "embed" in path and "unembed" not in path:
+        return ("vocab", "fsdp")
+    if "unembed" in path:
+        return ("fsdp", "vocab")
+    if "['moe']" in path:
+        if "router" in path:
+            return (None, "fsdp", None)
+        if "w_down" in path:
+            return (None, "experts", "expert_ff", "fsdp")
+        return (None, "experts", "fsdp", "expert_ff")    # w_gate / w_up
+    if "['attn']" in path:
+        if "wo" in path:
+            return (None, "heads", "fsdp")
+        if "wq" in path:
+            return (None, "fsdp", "heads")
+        return (None, "fsdp", "kv_joint")                # wk / wv columns
+    if "['mlp']" in path:
+        if "w_down" in path:
+            return (None, "ff", "fsdp")
+        return (None, "fsdp", "ff")                      # w_gate / w_up
+    return tuple([None] * ndim)                          # norms etc.
+
+
+def _lm_rules(cfg: tfm.TransformerConfig, mesh: Mesh, kind: str) -> dict:
+    model_size = mesh.shape.get("model", 1)
+    kv_sharded = cfg.n_kv_heads % model_size == 0
+    rules: dict[str, Any] = {
+        "kv_joint": ("model" if (cfg.n_kv_heads * cfg.head_dim)
+                     % model_size == 0 else None),
+        "kv_heads": "model" if kv_sharded else None,
+    }
+    if kind == "decode":
+        rules["seq"] = None
+        # decode cache capacity comes from kv_heads OR head_dim on the
+        # model axis (never seq: dynamic-update-slice along a sharded dim
+        # forces full rematerialization in GSPMD)
+        if not kv_sharded and cfg.head_dim % model_size == 0:
+            rules["head_dim"] = "model"
+    return rules
+
+
+def _lm_train_cell(arch, shape: sh.LMShape, cfg) -> Cell:
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return tfm.loss_fn(p, cfg, batch["tokens"], batch["labels"])
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adam_update(grads, opt_state, params, ADAM)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    params_a = _abstract(functools.partial(tfm.init, cfg=cfg),
+                         jax.random.key(0))
+    opt_a = _abstract(adam_init, params_a)
+    batch_a = {"tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32),
+               "labels": _sds((shape.global_batch, shape.seq_len), jnp.int32)}
+    p_sh = _shardings_by_path(params_a, _lm_param_axes)
+    return Cell(arch.arch_id, shape.name, "lm/train", train_step,
+                (params_a, opt_a, batch_a),
+                (p_sh, _adam_shardings(p_sh), _batch_sharded(batch_a)),
+                donate_argnums=(0, 1), rules={})
+
+
+def _lm_prefill_cell(arch, shape: sh.LMShape, cfg) -> Cell:
+    def prefill(params, tokens):
+        return tfm.prefill_step(params, cfg, tokens)
+
+    params_a = _abstract(functools.partial(tfm.init, cfg=cfg),
+                         jax.random.key(0))
+    tokens_a = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+    p_sh = _shardings_by_path(params_a, _lm_param_axes)
+    return Cell(arch.arch_id, shape.name, "lm/prefill", prefill,
+                (params_a, tokens_a),
+                (p_sh, shd.named_sharding("batch", None)),
+                donate_argnums=(), rules={})
+
+
+def _lm_decode_cell(arch, shape: sh.LMShape, cfg, rules: dict) -> Cell:
+    def decode(params, caches, tokens_new, pos):
+        return tfm.serve_step(params, cfg, caches, tokens_new, pos)
+
+    params_a = _abstract(functools.partial(tfm.init, cfg=cfg),
+                         jax.random.key(0))
+    caches_a = _abstract(
+        functools.partial(tfm.init_decode_caches, cfg, shape.global_batch,
+                          shape.seq_len))
+    tokens_a = _sds((shape.global_batch, 1), jnp.int32)
+    pos_a = _sds((), jnp.int32)
+    p_sh = _shardings_by_path(params_a, _lm_param_axes)
+    cache_sh = attention.KVCache(
+        k=shd.named_sharding(None, "batch", "kv_heads", None, "head_dim"),
+        v=shd.named_sharding(None, "batch", "kv_heads", None, "head_dim"),
+        cache_pos=shd.named_sharding(None, None))
+    return Cell(arch.arch_id, shape.name, "lm/decode", decode,
+                (params_a, caches_a, tokens_a, pos_a),
+                (p_sh, cache_sh,
+                 shd.named_sharding("batch", None), shd.named_sharding()),
+                donate_argnums=(1,), rules=rules)
+
+
+# --------------------------------------------------------------------------
+# GNN family
+# --------------------------------------------------------------------------
+
+def _gnn_abstract_batch(shape: sh.GNNShape, cfg) -> GraphBatch:
+    if shape.kind == "minibatch":
+        seeds = shape.batch_nodes
+        n_nodes = seeds
+        n_edges = 0
+        frontier = seeds
+        for f in shape.fanout:
+            n_edges += frontier * f
+            frontier *= f
+            n_nodes += frontier
+    elif shape.kind == "molecule":
+        n_nodes = shape.batch_graphs * shape.n_nodes
+        n_edges = shape.batch_graphs * shape.n_edges
+    else:
+        n_nodes, n_edges = shape.n_nodes, shape.n_edges
+    n_nodes = sh.pad_to_multiple(n_nodes, 512)
+    n_edges = sh.pad_to_multiple(n_edges, 512)
+    n_graphs = shape.batch_graphs if shape.kind == "molecule" else 1
+    labels_shape = (n_graphs,) if shape.kind == "molecule" else (n_nodes,)
+    return GraphBatch(
+        node_feat=_sds((n_nodes, shape.d_feat), jnp.float32),
+        edge_src=_sds((n_edges,), jnp.int32),
+        edge_dst=_sds((n_edges,), jnp.int32),
+        edge_mask=_sds((n_edges,), jnp.float32),
+        node_mask=_sds((n_nodes,), jnp.float32),
+        labels=_sds(labels_shape, jnp.int32),
+        graph_id=_sds((n_nodes,), jnp.int32),
+        n_graphs=n_graphs)
+
+
+def _gnn_cell(arch, shape: sh.GNNShape) -> Cell:
+    cfg = arch.make_config(shape)
+    loss = (gnn.loss_fn_partitioned if cfg.impl == "partitioned"
+            and not cfg.graph_level else gnn.loss_fn)
+
+    def train_step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(
+            lambda p: loss(p, cfg, batch), has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adam_update(grads, opt_state, params, ADAM)
+        return params, opt_state, dict(metrics, grad_norm=gnorm)
+
+    params_a = _abstract(functools.partial(gnn.init, cfg=cfg),
+                         jax.random.key(0))
+    opt_a = _abstract(adam_init, params_a)
+    batch_a = _gnn_abstract_batch(shape, cfg)
+    p_sh = _replicated(params_a)
+    batch_sh = GraphBatch(
+        node_feat=shd.named_sharding("nodes", None),
+        edge_src=shd.named_sharding("edges"),
+        edge_dst=shd.named_sharding("edges"),
+        edge_mask=shd.named_sharding("edges"),
+        node_mask=shd.named_sharding("nodes"),
+        labels=shd.named_sharding(None if cfg.graph_level else "nodes"),
+        graph_id=shd.named_sharding("nodes"),
+        n_graphs=batch_a.n_graphs)
+    rules = ({"nodes": ("data", "model")}
+             if cfg.impl == "partitioned" else {"nodes": "model"})
+    return Cell(arch.arch_id, shape.name, f"gnn/{shape.kind}", train_step,
+                (params_a, opt_a, batch_a),
+                (p_sh, _adam_shardings(p_sh), batch_sh),
+                donate_argnums=(0, 1),
+                rules=rules)
+
+
+# --------------------------------------------------------------------------
+# RecSys family
+# --------------------------------------------------------------------------
+
+_REC_LOSS = {
+    "dlrm-rm2": (recsys.dlrm_loss, recsys.dlrm_init),
+    "sasrec": (recsys.sasrec_loss, recsys.sasrec_init),
+    "dien": (recsys.dien_loss, recsys.dien_init),
+    "mind": (recsys.mind_loss, recsys.mind_init),
+}
+
+
+def _rec_abstract_batch(arch_id: str, cfg, batch: int):
+    if arch_id == "dlrm-rm2":
+        return DLRMBatch(dense=_sds((batch, cfg.n_dense), jnp.float32),
+                         sparse=_sds((batch, cfg.n_sparse), jnp.int32),
+                         labels=_sds((batch,), jnp.float32))
+    if arch_id == "sasrec":
+        s = (batch, cfg.seq_len)
+        return SASRecBatch(items=_sds(s, jnp.int32),
+                           targets=_sds(s, jnp.int32),
+                           negatives=_sds(s, jnp.int32))
+    if arch_id == "dien":
+        return DIENBatch(history=_sds((batch, cfg.seq_len), jnp.int32),
+                         target=_sds((batch,), jnp.int32),
+                         labels=_sds((batch,), jnp.float32))
+    if arch_id == "mind":
+        return MINDBatch(history=_sds((batch, cfg.seq_len), jnp.int32),
+                         target=_sds((batch,), jnp.int32),
+                         negatives=_sds((batch, 10), jnp.int32))
+    raise KeyError(arch_id)
+
+
+def _rec_param_axes(path: str, ndim: int) -> tuple:
+    if "tables" in path:                       # DLRM (F, R, D)
+        return (None, "table", None)
+    if "item_embed" in path:                   # (R, D)
+        return ("table", None)
+    return tuple([None] * ndim)
+
+
+def _rec_train_cell(arch, shape: sh.RecShape, cfg) -> Cell:
+    loss_fn, init_fn = _REC_LOSS[arch.arch_id]
+
+    def train_step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adam_update(grads, opt_state, params, ADAM)
+        return params, opt_state, dict(metrics, grad_norm=gnorm)
+
+    params_a = _abstract(functools.partial(init_fn, cfg=cfg),
+                         jax.random.key(0))
+    opt_a = _abstract(adam_init, params_a)
+    batch_a = _rec_abstract_batch(arch.arch_id, cfg, shape.batch)
+    p_sh = _shardings_by_path(params_a, _rec_param_axes)
+    return Cell(arch.arch_id, shape.name, "recsys/train", train_step,
+                (params_a, opt_a, batch_a),
+                (p_sh, _adam_shardings(p_sh), _batch_sharded(batch_a)),
+                donate_argnums=(0, 1), rules={})
+
+
+def _rec_serve_cell(arch, shape: sh.RecShape, cfg) -> Cell:
+    loss_fn, init_fn = _REC_LOSS[arch.arch_id]
+    fwd = {
+        "dlrm-rm2": lambda p, b: recsys.dlrm_forward(p, cfg, b),
+        "sasrec": lambda p, b: recsys.sasrec_user_embedding(p, cfg, b.items),
+        "dien": lambda p, b: recsys.dien_forward(p, cfg, b),
+        "mind": lambda p, b: recsys.mind_interests(p, cfg, b.history),
+    }[arch.arch_id]
+
+    params_a = _abstract(functools.partial(init_fn, cfg=cfg),
+                         jax.random.key(0))
+    batch_a = _rec_abstract_batch(arch.arch_id, cfg, shape.batch)
+    p_sh = _shardings_by_path(params_a, _rec_param_axes)
+    return Cell(arch.arch_id, shape.name, "recsys/serve", fwd,
+                (params_a, batch_a),
+                (p_sh, _batch_sharded(batch_a)),
+                donate_argnums=(), rules={})
+
+
+def _rec_retrieval_cell(arch, shape: sh.RecShape, cfg) -> Cell:
+    n_cand = shape.n_candidates
+    params_a = _abstract(
+        functools.partial(_REC_LOSS[arch.arch_id][1], cfg=cfg),
+        jax.random.key(0))
+    p_sh = _shardings_by_path(params_a, _rec_param_axes)
+    rep = shd.named_sharding
+    if arch.arch_id == "sasrec":
+        fn = lambda p, items: recsys.sasrec_retrieval(p, cfg, items)
+        args = (params_a, _sds((1, cfg.seq_len), jnp.int32))
+        in_sh = (p_sh, rep(None, None))
+    elif arch.arch_id == "mind":
+        fn = lambda p, hist: recsys.mind_retrieval(p, cfg, hist)
+        args = (params_a, _sds((1, cfg.seq_len), jnp.int32))
+        in_sh = (p_sh, rep(None, None))
+    elif arch.arch_id == "dien":
+        fn = lambda p, hist, cand: recsys.dien_retrieval(p, cfg, hist, cand)
+        args = (params_a, _sds((1, cfg.seq_len), jnp.int32),
+                _sds((n_cand,), jnp.int32))
+        in_sh = (p_sh, rep(None, None), rep("candidates"))
+    else:  # dlrm
+        fn = lambda p, dense, ctx, cand: recsys.dlrm_retrieval(
+            p, cfg, dense, ctx, cand)
+        args = (params_a, _sds((1, cfg.n_dense), jnp.float32),
+                _sds((1, cfg.n_sparse - 1), jnp.int32),
+                _sds((n_cand,), jnp.int32))
+        in_sh = (p_sh, rep(None, None), rep(None, None), rep("candidates"))
+    return Cell(arch.arch_id, shape.name, "recsys/retrieval", fn, args,
+                in_sh, donate_argnums=(), rules={})
+
+
+# --------------------------------------------------------------------------
+# hi2-synth: the paper's own serving step at MS MARCO scale (extra cell)
+# --------------------------------------------------------------------------
+
+def _hi2_abstract_index(shape):
+    from repro.core import cluster_selector as cs_mod
+    from repro.core import hybrid_index as hixm
+    from repro.core import inverted_lists as il
+    from repro.core import opq as opq_mod, pq as pq_mod
+    from repro.core import term_selector as ts_mod
+    h, L, V = shape.hidden, shape.n_clusters, shape.vocab
+    return hixm.HybridIndex(
+        cluster_sel=cs_mod.ClusterSelector(
+            embeddings=_sds((L, h), jnp.float32)),
+        term_sel=ts_mod.TermSelector(avg_scores=_sds((V,), jnp.float32)),
+        cluster_lists=il.PaddedLists(
+            entries=_sds((L, shape.cluster_capacity), jnp.int32),
+            lengths=_sds((L,), jnp.int32)),
+        term_lists=il.PaddedLists(
+            entries=_sds((V, shape.term_capacity), jnp.int32),
+            lengths=_sds((V,), jnp.int32)),
+        opq=opq_mod.OPQCodebook(
+            rotation=_sds((h, h), jnp.float32),
+            codebook=pq_mod.PQCodebook(
+                codewords=_sds((shape.pq_m, shape.pq_k, h // shape.pq_m),
+                               jnp.float32))),
+        doc_codes=_sds((shape.n_docs, shape.pq_m),
+                       jnp.uint8 if shape.pq_k <= 256 else jnp.int32),
+        doc_embeddings=None,
+        doc_assign=_sds((shape.n_docs,), jnp.int32),
+        codec="opq")
+
+
+def _hi2_serve_cell(arch, shape) -> Cell:
+    from repro.core import hybrid_index as hixm
+
+    def serve(index, q_emb, q_tokens):
+        return hixm.search(index, q_emb, q_tokens, kc=shape.kc, k2=shape.k2,
+                           top_r=shape.top_r)
+
+    index_a = _hi2_abstract_index(shape)
+    qe_a = _sds((shape.query_batch, shape.hidden), jnp.float32)
+    qt_a = _sds((shape.query_batch, shape.query_len), jnp.int32)
+    # index planes doc/list-sharded over the model axis; queries over data
+    rep = shd.named_sharding
+    from repro.core import cluster_selector as cs_mod
+    from repro.core import hybrid_index as hixm2
+    from repro.core import inverted_lists as il
+    from repro.core import opq as opq_mod, pq as pq_mod
+    from repro.core import term_selector as ts_mod
+    index_sh = hixm2.HybridIndex(
+        cluster_sel=cs_mod.ClusterSelector(embeddings=rep("clusters", None)),
+        term_sel=ts_mod.TermSelector(avg_scores=rep(None)),
+        cluster_lists=il.PaddedLists(entries=rep("clusters", None),
+                                     lengths=rep("clusters")),
+        term_lists=il.PaddedLists(entries=rep("vocab", None),
+                                  lengths=rep("vocab")),
+        opq=opq_mod.OPQCodebook(rotation=rep(None, None),
+                                codebook=pq_mod.PQCodebook(
+                                    codewords=rep(None, None, None))),
+        doc_codes=rep("docs", None),
+        doc_embeddings=None,
+        doc_assign=rep("docs"),
+        codec="opq")
+    rules = {"clusters": "model", "docs": "model", "vocab": "model"}
+    return Cell(arch.arch_id, shape.name, "hi2/serve", serve,
+                (index_a, qe_a, qt_a),
+                (index_sh, rep("batch", None), rep("batch", None)),
+                donate_argnums=(), rules=rules)
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
+    """Build the cell *under* the mesh's sharding rules (two passes: the
+    rule overrides are decided per cell, then shardings are materialized
+    inside a use_mesh(rules) context)."""
+    arch = registry.get(arch_id)
+    shape = arch.shapes[shape_name]
+
+    # decide rule overrides first
+    rules: dict[str, Any] = {}
+    if arch.family == "hi2":
+        with shd.use_mesh(mesh, {"clusters": "model", "docs": "model",
+                                 "vocab": "model"}):
+            return _hi2_serve_cell(arch, shape)
+    if arch.family == "lm":
+        cfg = arch.make_config(shape)
+        rules = _lm_rules(cfg, mesh, shape.kind)
+        if shape.name == "long_500k":
+            rules["batch"] = None        # batch=1 cannot shard
+    elif arch.family == "gnn":
+        rules = {"nodes": "model"}
+    elif arch.family == "recsys" and shape.kind == "retrieval":
+        rules = {"batch": None}
+
+    with shd.use_mesh(mesh, rules):
+        if arch.family == "lm":
+            if shape.kind == "train":
+                cell = _lm_train_cell(arch, shape, cfg)
+            elif shape.kind == "prefill":
+                cell = _lm_prefill_cell(arch, shape, cfg)
+            else:
+                cell = _lm_decode_cell(arch, shape, cfg, rules)
+        elif arch.family == "gnn":
+            cell = _gnn_cell(arch, shape)
+        else:
+            cfg = arch.make_config(shape)
+            if shape.kind == "train":
+                cell = _rec_train_cell(arch, shape, cfg)
+            elif shape.kind == "serve":
+                cell = _rec_serve_cell(arch, shape, cfg)
+            else:
+                cell = _rec_retrieval_cell(arch, shape, cfg)
+    cell.rules = rules
+    return cell
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """jit → lower under the cell's mesh+rules. Returns the Lowered."""
+    with shd.use_mesh(mesh, cell.rules):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.args)

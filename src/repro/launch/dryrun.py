@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod      # 2×16×16
+
+Success criterion (the brief): ``.lower().compile()`` must succeed for
+every cell on the 16×16 single-pod mesh AND the (2,16,16) multi-pod
+mesh; ``memory_analysis()`` proves the per-device footprint fits a v5e
+(16 GB HBM); cost/collective numbers feed EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, save_hlo: bool = False) -> dict:
+    import jax
+    from repro.configs import registry
+    from repro.launch import cells as cells_mod
+    from repro.launch import mesh as mesh_mod
+    from repro.launch import roofline
+
+    arch = registry.get(arch_id)
+    if shape_name in arch.skip_shapes:
+        return {"cell": f"{arch_id}/{shape_name}", "status": "skipped",
+                "reason": arch.skip_shapes[shape_name]}
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    record: dict = {"cell": f"{arch_id}/{shape_name}",
+                    "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                    "n_devices": mesh.devices.size}
+    try:
+        cell = cells_mod.build_cell(arch_id, shape_name, mesh)
+        with mesh:
+            lowered = cells_mod.lower_cell(cell, mesh)
+            record["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t1, 1)
+
+            # NOTE: memory_analysis() reports the *per-device* SPMD module
+            # (verified empirically: argument bytes match the sharded
+            # shapes) — no further division by device count.
+            mem = compiled.memory_analysis()
+            record["memory"] = {
+                "argument_gb": mem.argument_size_in_bytes / 2**30,
+                "output_gb": mem.output_size_in_bytes / 2**30,
+                "temp_gb": mem.temp_size_in_bytes / 2**30,
+                "alias_gb": mem.alias_size_in_bytes / 2**30,
+                "per_device_gb": (mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes) / 2**30,
+            }
+            hlo_txt = compiled.as_text()
+            record["cost"] = roofline.cost_summary(compiled)
+            # XLA:CPU cost_analysis counts while (scan) bodies once — the
+            # weighted variant re-derives flops/bytes with trip counts
+            record["weighted"] = roofline.weighted_cost(hlo_txt)
+            record["collectives"] = roofline.collective_summary(hlo_txt)
+            record["kind"] = cell.kind
+            record["status"] = "ok"
+            if save_hlo and out_dir:
+                with open(os.path.join(
+                        out_dir, f"{arch_id}_{shape_name}"
+                        f"{'_mp' if multi_pod else ''}.hlo"), "w") as f:
+                    f.write(compiled.as_text())
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        record["status"] = "FAILED"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--extra", action="store_true",
+                    help="include beyond-assignment cells (hi2-synth)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+
+    os.makedirs(args.out, exist_ok=True)
+    grid = registry.cells(include_skipped=True,
+                          include_extra=args.extra or bool(args.arch))
+    if args.arch:
+        grid = [(a, s) for a, s in grid if a == args.arch]
+    if args.shape:
+        grid = [(a, s) for a, s in grid if s == args.shape]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch_id, shape_name in grid:
+            rec = run_cell(arch_id, shape_name, multi_pod, args.out,
+                           args.save_hlo)
+            tag = "mp" if multi_pod else "sp"
+            path = os.path.join(args.out,
+                                f"{arch_id}_{shape_name}_{tag}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f"mem/dev={rec['memory']['per_device_gb']:.2f}GB "
+                         f"lower={rec['lower_s']}s "
+                         f"compile={rec['compile_s']}s")
+            elif status == "FAILED":
+                n_fail += 1
+                extra = rec["error"][:200]
+            print(f"[{tag}] {arch_id}/{shape_name}: {status} {extra}",
+                  flush=True)
+    print(f"done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Hillclimb harness: measure a cell variant (optionally with config
+overrides) and print the three roofline terms + HBM — used to drive the
+hypothesis → change → measure cycles recorded in EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb mixtral-8x22b train_4k \
+        --override moe_impl=shard_map
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def measure(arch_id: str, shape_name: str, overrides: dict,
+            multi_pod: bool = False) -> dict:
+    import jax
+    from repro.configs import registry
+    from repro.launch import cells as cm, mesh as mesh_mod, roofline
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    if overrides:
+        arch = registry.get(arch_id)
+        base_make = arch.make_config
+
+        def patched_make(shape=None):
+            return dataclasses.replace(base_make(shape), **overrides)
+
+        registry.register(dataclasses.replace(arch,
+                                              make_config=patched_make))
+    cell = cm.build_cell(arch_id, shape_name, mesh)
+    with mesh:
+        compiled = cm.lower_cell(cell, mesh).compile()
+    mem = compiled.memory_analysis()
+    hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+           + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30
+    txt = compiled.as_text()
+    wc = roofline.weighted_cost(txt)
+    col = roofline.collective_summary(txt)
+    n = mesh.devices.size
+    terms = roofline.roofline_terms(wc["flops"] * n, wc["bytes"] * n,
+                                    col["total_bytes"] * n, n)
+    return {
+        "cell": f"{arch_id}/{shape_name}", "overrides": overrides,
+        "hbm_gb": round(hbm, 2),
+        "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "collectives_by_op_gb": {k: round(v / 2**30, 3)
+                                 for k, v in col["by_op"].items()},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+    print(json.dumps(measure(args.arch, args.shape, overrides,
+                             args.multi_pod), indent=1))
+
+
+if __name__ == "__main__":
+    main()

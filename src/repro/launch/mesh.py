@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 16×16 = 256 chips per pod; the multi-pod mesh
+stacks a leading "pod" axis (2 pods = 512 chips).  A FUNCTION, not a
+module constant, so importing never touches jax device state (the
+dry-run must set XLA_FLAGS before the first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
+    """Small mesh over host devices for tests (requires
+    xla_force_host_platform_device_count ≥ data·model)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

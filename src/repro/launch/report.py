@@ -1,0 +1,116 @@
+"""Roofline report generator: reads the dry-run JSON records and emits
+the EXPERIMENTS.md §Dry-run and §Roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch import roofline
+
+
+def _model_flops_for(cell: dict) -> float | None:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)."""
+    from repro.configs import registry, shapes as sh
+    arch_id, shape_name = cell["cell"].split("/")
+    arch = registry.get(arch_id)
+    shape = arch.shapes[shape_name]
+    if arch.family != "lm":
+        return None
+    cfg = arch.make_config(shape)
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return roofline.model_flops(n_active, tokens, training=True)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return roofline.model_flops(n_active, tokens, training=False)
+    # decode: one token per sequence
+    return roofline.model_flops(n_active, shape.global_batch,
+                                training=False)
+
+
+def load_records(directory: str, tag: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*_{tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    # per-device SPMD module numbers, globalized for the brief's formula
+    # (identical result). Prefer the trip-count-weighted re-derivation —
+    # XLA:CPU cost_analysis counts scan bodies once.
+    cost = rec.get("weighted", rec["cost"])
+    flops = cost["flops"] * n
+    mem_bytes = cost["bytes"] * n
+    coll = rec["collectives"]["total_bytes"] * n
+    terms = roofline.roofline_terms(flops, mem_bytes, coll, n)
+    mf = _model_flops_for(rec)
+    row = dict(cell=rec["cell"], n_devices=n, hbm_gb=rec["memory"]["per_device_gb"],
+               **terms)
+    row["useful_frac"] = (mf / flops) if (mf and flops) else None
+    # roofline fraction: ideal (dominant-term) time / sum of all terms —
+    # how close a perfectly-overlapped execution would run to the
+    # dominant-resource bound
+    tot = terms["compute_s"] + terms["memory_s"] + terms["collective_s"]
+    dom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    row["roofline_frac"] = dom / tot if tot else None
+    return row
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def emit_tables(directory: str) -> str:
+    out = []
+    for tag, title in (("sp", "single-pod 16×16 (256 chips)"),
+                       ("mp", "multi-pod 2×16×16 (512 chips)")):
+        recs = load_records(directory, tag)
+        if not recs:
+            continue
+        out.append(f"\n### Mesh: {title}\n")
+        out.append("| cell | status | HBM GB/dev | compute | memory | "
+                   "collective | dominant | MODEL/HLO flops | roofline frac |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for rec in recs:
+            if rec["status"] == "skipped":
+                out.append(f"| {rec['cell']} | SKIP ({rec['reason'][:40]}…) "
+                           f"| – | – | – | – | – | – | – |")
+                continue
+            if rec["status"] != "ok":
+                out.append(f"| {rec['cell']} | **FAILED** | – | – | – | – "
+                           f"| – | – | – |")
+                continue
+            row = roofline_row(rec)
+            uf = f"{row['useful_frac']:.2f}" if row["useful_frac"] else "n/a"
+            out.append(
+                f"| {row['cell']} | ok | {row['hbm_gb']:.2f} "
+                f"| {fmt_s(row['compute_s'])} | {fmt_s(row['memory_s'])} "
+                f"| {fmt_s(row['collective_s'])} | {row['dominant']} "
+                f"| {uf} | {row['roofline_frac']:.2f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    print(emit_tables(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Roofline analysis from compiled dry-run artifacts (no TPU in this
+container — the three terms are *derived*, not timed):
+
+    compute term    = HLO_FLOPs      / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes      / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (brief §Roofline).
+
+Sources: ``compiled.cost_analysis()`` provides flops / bytes accessed
+(XLA aggregates while-loop bodies by trip count).  Collective bytes are
+NOT in cost_analysis: we parse the compiled HLO text, summing operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, each multiplied by the estimated trip count of
+its enclosing while loop (scan-over-layers executes its body collectives
+n_layers times — ignoring that would undercount ~50×).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+# --- TPU v5e constants -----------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per chip (ICI, per-link order)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_CALLED_RE = re.compile(r"(?:to_apply|body|condition|branch_computations|"
+                        r"called_computations)=\{?%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name → its body lines.
+
+    HLO pretty-print invariant: computation headers sit at column 0 and
+    end with "{"; body ops are indented; the closing "}" is at column 0.
+    """
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if not line.startswith((" ", "\t")) and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_trip_count(cond_lines: list[str]) -> int:
+    """Best-effort: the largest small-int constant in the condition."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            v = int(m.group(1))
+            if 1 < v < 1_000_000:
+                best = max(best, v)
+    return best
+
+
+def collective_summary(hlo: str) -> dict:
+    """Total collective bytes (trip-count weighted) + per-op breakdown."""
+    comps = _parse_computations(hlo)
+
+    # map computation → multiplier from while loops that call it
+    mult: dict[str, int] = {name: 1 for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line or "= while(" in line:
+                body_m = re.search(r"body=%?([\w.\-]+)", line)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", line)
+                if body_m and cond_m and cond_m.group(1) in comps:
+                    trips = _while_trip_count(comps[cond_m.group(1)])
+                    if body_m.group(1) in mult:
+                        mult[body_m.group(1)] = trips
+
+    # propagate: computations called from a multiplied body inherit it
+    # (one level is enough for scan bodies calling fusions)
+    for name, lines in comps.items():
+        if mult.get(name, 1) == 1:
+            continue
+        for line in lines:
+            for cm in _CALLED_RE.finditer(line):
+                callee = cm.group(1)
+                if callee in mult and mult[callee] < mult[name]:
+                    mult[callee] = mult[name]
+
+    totals: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    count = 0
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            if "-done(" in line:          # start/done pairs: count start only
+                continue
+            type_str, op = om.group(1), om.group(2)
+            b = _shape_bytes(type_str)
+            totals[op] += b * m
+            count += 1
+    total = sum(totals.values())
+    return {"total_bytes": total, "n_ops": count,
+            "by_op": {k: v for k, v in totals.items() if v}}
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, n_chips: int) -> dict:
+    """The three terms in seconds (global work / aggregate capability)."""
+    compute_s = flops / (n_chips * PEAK_FLOPS)
+    memory_s = bytes_accessed / (n_chips * HBM_BW)
+    collective_s = collective_bytes / (n_chips * LINK_BW)
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (collective_s, "collective"))[1]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}
+
+
+def model_flops(n_params_active: int, n_tokens: int,
+                training: bool = True) -> float:
+    """6·N·D for a train step (2 fwd + 4 bwd per param·token);
+    2·N·D for inference."""
+    per = 6.0 if training else 2.0
+    return per * n_params_active * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# trip-count-weighted cost (XLA:CPU cost_analysis counts while bodies ONCE —
+# a scan-over-56-layers step would be undercounted ~56×; we re-derive flops
+# and bytes from the HLO text with the same per-computation multipliers used
+# for collectives)
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s*"
+                     r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)?\)")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "reshape", "copy", "broadcast", "iota",
+                   "after-all", "custom-call", "while", "conditional",
+                   "call"}
+
+
+def _computation_multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    mult: dict[str, int] = {name: 1 for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" in line or "= while(" in line:
+                body_m = re.search(r"body=%?([\w.\-]+)", line)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", line)
+                if body_m and cond_m and cond_m.group(1) in comps:
+                    trips = _while_trip_count(comps[cond_m.group(1)])
+                    if body_m.group(1) in mult:
+                        mult[body_m.group(1)] = trips
+    for name, lines in comps.items():
+        if mult.get(name, 1) == 1:
+            continue
+        for line in lines:
+            for cm in _CALLED_RE.finditer(line):
+                callee = cm.group(1)
+                if callee in mult and mult[callee] < mult[name]:
+                    mult[callee] = mult[name]
+    return mult
+
+
+def _parse_shapes(lines: list[str]) -> dict[str, str]:
+    """op name → its output type string, plus parameter declarations."""
+    shapes: dict[str, str] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    return shapes
+
+
+def _dot_flops(line: str, shapes: dict[str, str]) -> float:
+    """2 · out_elems · K for a dot/dot-general line."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    out_type = m.group(2)
+    out_elems = 0
+    for dtype, dims in _SHAPE_RE.findall(out_type):
+        if dtype in _DTYPE_BYTES:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out_elems += n
+    # contraction size from the lhs operand's contracting dims
+    ops = re.search(r"\((%[\w.\-]+)", line)
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not ops or not cd or ops.group(1) not in shapes:
+        return 2.0 * out_elems  # degenerate: treat as K=1
+    lhs_type = shapes[ops.group(1)]
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for i in cd.group(1).split(","):
+        if i and int(i) < len(lhs_dims):
+            k *= lhs_dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def weighted_cost(hlo: str) -> dict:
+    """Trip-count-weighted {flops, bytes} from the compiled HLO text.
+
+    flops: dot/dot-general MACs ×2 (matmuls dominate every assigned arch).
+    bytes: Σ (operands + output) of every materializing op — the same
+    per-op convention XLA's bytes-accessed uses, fusions counted at their
+    boundaries (internal temps stay in registers/VMEM).
+    """
+    comps = _parse_computations(hlo)
+    mult = _computation_multipliers(comps)
+    flops = 0.0
+    bytes_ = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        shapes = _parse_shapes(lines)
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            op = dm.group(3)
+            if op in ("dot",):
+                flops += _dot_flops(line, shapes) * m
+            if op in _SKIP_BYTES_OPS:
+                continue
+            b = _shape_bytes(dm.group(2))
+            onames = re.search(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)", line)
+            if onames:
+                for oname in re.findall(r"%[\w.\-]+", onames.group(1)):
+                    if oname in shapes:
+                        b += _shape_bytes(shapes[oname])
+            bytes_ += b * m
+    return {"flops": flops, "bytes": bytes_}

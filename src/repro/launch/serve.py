@@ -1,0 +1,93 @@
+"""Serving driver: a persisted HI² index behind a fixed-shape batched
+search step (the production query path).
+
+    PYTHONPATH=src python -m repro.launch.serve        # demo loop
+
+At pod scale the index planes are sharded over the model axis and the
+request batch over (pod, data) — `launch/cells.py::_hi2_serve_cell`
+lowers exactly this step for the dry-run; here the same search runs for
+real at CPU scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import hybrid_index as hi
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    kc: int = 6
+    k2: int = 8
+    top_r: int = 100
+    max_batch: int = 64
+    use_kernel: bool = False     # Pallas ADC on TPU
+
+
+class Server:
+    """Pads request batches to max_batch so one compiled program serves
+    every request size (no recompiles on the hot path)."""
+
+    def __init__(self, index: hi.HybridIndex, cfg: ServeConfig = ServeConfig()):
+        self.index = index
+        self.cfg = cfg
+        self._search = jax.jit(
+            lambda idx, qe, qt: hi.search(idx, qe, qt, kc=cfg.kc, k2=cfg.k2,
+                                          top_r=cfg.top_r,
+                                          use_kernel=cfg.use_kernel))
+        self.n_served = 0
+
+    @classmethod
+    def from_checkpoint(cls, path: str, like: hi.HybridIndex,
+                        cfg: ServeConfig = ServeConfig()) -> "Server":
+        return cls(ckpt.restore(path, like), cfg)
+
+    def warmup(self, hidden: int, query_len: int) -> None:
+        qe = jnp.zeros((self.cfg.max_batch, hidden), jnp.float32)
+        qt = jnp.full((self.cfg.max_batch, query_len), -1, jnp.int32)
+        jax.block_until_ready(self._search(self.index, qe, qt))
+
+    def query(self, query_emb: np.ndarray, query_tokens: np.ndarray
+              ) -> hi.SearchResult:
+        n = query_emb.shape[0]
+        pad = self.cfg.max_batch - n
+        assert pad >= 0, f"batch {n} exceeds max_batch {self.cfg.max_batch}"
+        qe = jnp.asarray(np.pad(query_emb, ((0, pad), (0, 0))))
+        qt = jnp.asarray(np.pad(query_tokens, ((0, pad), (0, 0)),
+                                constant_values=-1))
+        res = self._search(self.index, qe, qt)
+        self.n_served += n
+        return hi.SearchResult(doc_ids=res.doc_ids[:n],
+                               scores=res.scores[:n],
+                               n_candidates=res.n_candidates[:n])
+
+
+def main() -> None:
+    from repro.data import synthetic
+    corpus = synthetic.generate(seed=0, n_docs=8000, n_queries=256,
+                                hidden=64, vocab_size=4096)
+    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                     n_clusters=128, k1_terms=10, codec="opq", pq_m=8,
+                     pq_k=256, cluster_capacity=192, term_capacity=96,
+                     kmeans_iters=8)
+    server = Server(index)
+    server.warmup(64, corpus.query_tokens.shape[1])
+    t0 = time.perf_counter()
+    for i in range(0, 256, 64):
+        server.query(corpus.query_emb[i:i + 64],
+                     corpus.query_tokens[i:i + 64])
+    dt = time.perf_counter() - t0
+    print(f"served {server.n_served} queries in {dt:.3f}s "
+          f"({server.n_served / dt:.0f} q/s)")
+
+
+if __name__ == "__main__":
+    main()

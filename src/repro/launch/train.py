@@ -1,0 +1,187 @@
+"""Training drivers.
+
+Two layers:
+  · ``fit`` — the generic fault-tolerant loop every example uses
+    (checkpoint manager + auto-resume + straggler monitor + optional
+    gradient compression);
+  · ``train_hi2_sup`` — the paper's joint optimization (§4.3): learns
+    cluster embeddings + the term-scorer encoder/MLP by KL distillation
+    from a teacher embedding model, with the commitment loss, then
+    assembles the HI²_sup index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import cluster_selector as cs_mod
+from repro.core import distill, hybrid_index as hi
+from repro.core import term_selector as ts_mod
+from repro.data import synthetic
+from repro.distributed.fault import StragglerMonitor
+from repro.models import transformer as tfm
+from repro.optim import (AdamConfig, adam_init, adam_update,
+                         clip_by_global_norm, warmup_cosine)
+
+
+# --------------------------------------------------------------------------
+# generic loop
+# --------------------------------------------------------------------------
+
+def fit(loss_fn: Callable, params: Any, batches: Callable[[int], Any],
+        n_steps: int, *, adam: AdamConfig = AdamConfig(lr=1e-3),
+        clip_norm: float = 1.0, ckpt_dir: Optional[str] = None,
+        save_every: int = 100, log_every: int = 20,
+        schedule=None) -> tuple[Any, list[float]]:
+    """Generic train loop: value_and_grad + clip + AdamW (+ checkpointing,
+    resume, straggler monitoring)."""
+    schedule = schedule or (lambda s: 1.0)
+    state = adam_init(params)
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep_n=2, save_every=save_every)
+        step0, restored = mgr.restore_latest({"params": params, "opt": state})
+        if step0 is not None:
+            params, state, start = restored["params"], restored["opt"], step0
+
+    @jax.jit
+    def step_fn(p, s, batch, lr_scale):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            p, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        p, s = adam_update(grads, s, p, adam, lr_scale=lr_scale)
+        return p, s, loss, gnorm
+
+    monitor = StragglerMonitor()
+    losses = []
+    for i in range(start, n_steps):
+        monitor.step_start()
+        params, state, loss, gnorm = step_fn(params, state, batches(i),
+                                             schedule(i))
+        losses.append(float(loss))
+        monitor.step_end()
+        if mgr and mgr.should_save(i + 1):
+            mgr.save(i + 1, {"params": params, "opt": state})
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  step {i+1}/{n_steps} loss={float(loss):.4f} "
+                  f"gnorm={float(gnorm):.3f}", flush=True)
+    return params, losses
+
+
+# --------------------------------------------------------------------------
+# HI²_sup distillation (paper §4.3)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SupTrainConfig:
+    n_clusters: int = 128
+    encoder_layers: int = 2
+    encoder_dim: int = 64
+    encoder_heads: int = 4
+    n_steps: int = 300
+    batch_queries: int = 32
+    n_negatives: int = 7
+    lr: float = 2e-3
+    kmeans_iters: int = 10
+    seed: int = 0
+
+
+def train_hi2_sup(corpus: synthetic.Corpus, cfg: SupTrainConfig,
+                  log_every: int = 50):
+    """Returns (DistillParams, encoder cfg, φ assignments, losses)."""
+    key = jax.random.key(cfg.seed)
+    doc_emb = jnp.asarray(corpus.doc_emb)
+
+    # init cluster embeddings from KMeans; φ(D) frozen afterwards (§4.3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cluster_sel, doc_assign = cs_mod.init_kmeans(
+        k1, doc_emb, cfg.n_clusters, n_iters=cfg.kmeans_iters)
+
+    enc_cfg = tfm.TransformerConfig(
+        n_layers=cfg.encoder_layers, d_model=cfg.encoder_dim,
+        n_heads=cfg.encoder_heads, n_kv_heads=cfg.encoder_heads,
+        d_ff=cfg.encoder_dim * 4, vocab_size=corpus.vocab_size,
+        causal=False, compute_dtype=jnp.float32, remat=False)
+    params = distill.DistillParams(
+        cluster_embeddings=cluster_sel.embeddings,
+        term_mlp=ts_mod.init_mlp(k2, cfg.encoder_dim),
+        encoder=tfm.init(k3, enc_cfg),
+    )
+
+    def encoder_apply(enc_params, tokens):
+        hidden, _ = tfm.encode(enc_params, enc_cfg, tokens)
+        return hidden
+
+    negs = synthetic.hard_negatives(corpus, cfg.n_negatives, seed=cfg.seed)
+    nq = corpus.qrels.shape[0]
+
+    def batches(step: int):
+        rng = np.random.default_rng(cfg.seed * 7919 + step)
+        qi = rng.integers(0, nq, cfg.batch_queries)
+        cand = np.concatenate([corpus.qrels[qi][:, None], negs[qi]], axis=1)
+        return distill.DistillBatch(
+            query_emb=jnp.asarray(corpus.query_emb[qi]),
+            query_tokens=jnp.asarray(corpus.query_tokens[qi]),
+            doc_emb=jnp.asarray(corpus.doc_emb[cand]),
+            doc_tokens=jnp.asarray(corpus.doc_tokens[cand]),
+            doc_assign=jnp.asarray(np.asarray(doc_assign)[cand]),
+        )
+
+    def loss_fn(p, batch):
+        return distill.loss_fn(p, batch, encoder_apply=encoder_apply,
+                               vocab_size=corpus.vocab_size)
+
+    params, losses = fit(loss_fn, params, batches, cfg.n_steps,
+                         adam=AdamConfig(lr=cfg.lr),
+                         schedule=warmup_cosine(20, cfg.n_steps),
+                         log_every=log_every)
+    return params, enc_cfg, doc_assign, losses
+
+
+def build_sup_index(corpus: synthetic.Corpus, params: distill.DistillParams,
+                    enc_cfg, doc_assign, *, k1_terms: int, codec: str = "opq",
+                    pq_m: int = 8, pq_k: int = 256,
+                    cluster_capacity=None, term_capacity=None,
+                    prune_gamma: Optional[float] = None,
+                    encode_batch: int = 512) -> hi.HybridIndex:
+    """Assemble HI²_sup: learned cluster embeddings + learned term scores
+    drive the same list construction as the unsupervised path."""
+    doc_tokens = jnp.asarray(corpus.doc_tokens)
+    n_docs = doc_tokens.shape[0]
+
+    @jax.jit
+    def score_chunk(tokens):
+        hidden, _ = tfm.encode(params.encoder, enc_cfg, tokens)
+        return ts_mod.mlp_token_scores(params.term_mlp, hidden, tokens)
+
+    chunks = []
+    for i in range(0, n_docs, encode_batch):
+        chunks.append(score_chunk(doc_tokens[i:i + encode_batch]))
+    pos_scores = jnp.concatenate(chunks, axis=0)
+
+    from repro.core import bm25
+    sbar = bm25.average_term_scores(doc_tokens, pos_scores,
+                                    corpus.vocab_size)
+    term_sel = ts_mod.TermSelector(avg_scores=sbar)
+    index = hi.build(
+        jax.random.key(1), jnp.asarray(corpus.doc_emb), doc_tokens,
+        corpus.vocab_size, n_clusters=params.cluster_embeddings.shape[0],
+        k1_terms=k1_terms, codec=codec, pq_m=pq_m, pq_k=pq_k,
+        cluster_capacity=cluster_capacity, term_capacity=term_capacity,
+        cluster_sel=cs_mod.ClusterSelector(
+            embeddings=params.cluster_embeddings),
+        doc_assign=doc_assign, term_pos_scores=pos_scores,
+        term_sel=term_sel)
+    if prune_gamma is not None:
+        from repro.core import pruning
+        index = dataclasses.replace(
+            index, term_lists=pruning.prune_percentile(index.term_lists,
+                                                       prune_gamma))
+    return index

@@ -1,0 +1,150 @@
+"""GQA attention: full-sequence forward (train / prefill) and KV-cache
+decode, with sliding-window (SWA) support via a rolling cache.
+
+Sharding (logical names → repro.distributed.sharding rules):
+    projections   q: ("batch", None, "heads", None) — TP over query heads
+    kv            replicated over TP when n_kv_heads < model-axis size,
+                  sharded otherwise (rule set per arch at launch)
+    decode cache  ("batch", None, "seq_kv", None) — flash-decode style
+                  sequence-sharded cache; XLA completes the sharded
+                  softmax with the lse-combining collectives.
+
+SWA rolling cache: for window W the cache holds only the last W
+positions (slot = pos mod W), so ``long_500k`` decode is O(W) memory and
+compute — the sub-quadratic path the brief requires for 500k contexts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init(key: Array, d_model: int, n_heads: int, n_kv_heads: int,
+         d_head: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": layers.dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        "wv": layers.dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        "wo": layers.dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+
+
+def _project_qkv(params: dict, x: Array, n_heads: int, n_kv_heads: int,
+                 d_head: int, positions: Array, rope_theta: float):
+    """rope_theta <= 0 disables RoPE (archs with learned positions)."""
+    b, s, _ = x.shape
+    q = layers.dense(params["wq"], x).reshape(b, s, n_heads, d_head)
+    k = layers.dense(params["wk"], x).reshape(b, s, n_kv_heads, d_head)
+    v = layers.dense(params["wv"], x).reshape(b, s, n_kv_heads, d_head)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    q, k = q.swapaxes(1, 2), k.swapaxes(1, 2)
+    if rope_theta > 0:
+        q = layers.apply_rope(q, positions[:, None], rope_theta)
+        k = layers.apply_rope(k, positions[:, None], rope_theta)
+    return q, k, v.swapaxes(1, 2)   # (B, H, S, dh) each
+
+
+def forward(params: dict, x: Array, *, n_heads: int, n_kv_heads: int,
+            d_head: int, causal: bool = True, window: int = 0,
+            rope_theta: float = 10000.0, use_flash: bool = False,
+            positions: Optional[Array] = None, return_kv: bool = False):
+    """Full-sequence attention. x: (B, S, D) -> (B, S, D)[, (k, v)]."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, d_head,
+                           positions, rope_theta)
+    if use_flash:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal, window, None)
+    else:
+        # XLA path with flash-like O(S·chunk) memory (the Pallas kernel's
+        # behavior on TPU) — a dense (S, S) plane would dominate HBM at 4k+
+        from repro.kernels.flash_attention import ref as fa_ref
+        out = fa_ref.attention_chunked(q, k, v, causal=causal, window=window)
+    out = shard(out, "batch", "heads", None, None)
+    out = out.swapaxes(1, 2).reshape(b, s, n_heads * d_head)
+    out = layers.dense(params["wo"], out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array          # (B, n_kv_heads, C, d_head)
+    v: Array          # (B, n_kv_heads, C, d_head)
+    cache_pos: Array  # (C,) i32 — absolute position stored in each slot, -1 empty
+
+
+def init_cache(batch: int, n_kv_heads: int, capacity: int, d_head: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, n_kv_heads, capacity, d_head), dtype),
+        v=jnp.zeros((batch, n_kv_heads, capacity, d_head), dtype),
+        cache_pos=jnp.full((capacity,), -1, jnp.int32),
+    )
+
+
+def cache_capacity(seq_len: int, window: int) -> int:
+    """SWA models only ever need the last ``window`` positions."""
+    return min(seq_len, window) if window > 0 else seq_len
+
+
+def decode_step(params: dict, cache: KVCache, x_new: Array, pos: Array, *,
+                n_heads: int, n_kv_heads: int, d_head: int, window: int = 0,
+                rope_theta: float = 10000.0) -> tuple[Array, KVCache]:
+    """One decode step. x_new: (B, 1, D); pos: () absolute position."""
+    b, _, _ = x_new.shape
+    group = n_heads // n_kv_heads
+    capacity = cache.k.shape[2]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k_new, v_new = _project_qkv(params, x_new, n_heads, n_kv_heads,
+                                   d_head, positions, rope_theta)
+
+    slot = (pos % capacity).astype(jnp.int32)       # rolling for SWA
+    # NOTE the cache seq axis is deliberately NOT sharded: a dynamic
+    # update-slice along a sharded dim triggers GSPMD "involuntary full
+    # rematerialization" (the whole cache replicates per step). Model-axis
+    # capacity comes from kv_heads when divisible, else head_dim.
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, 0, slot, 0))
+    cache_pos = jax.lax.dynamic_update_slice(cache.cache_pos,
+                                             pos[None].astype(jnp.int32),
+                                             (slot,))
+    k = shard(k, "batch", "kv_heads", None, "head_dim")
+    v = shard(v, "batch", "kv_heads", None, "head_dim")
+
+    # grouped-query scoring without materializing repeated KV. The cache
+    # stays in its storage dtype inside the dots (preferred_element_type
+    # accumulates in f32) — an explicit .astype(f32) would materialize a
+    # 2× copy of the whole per-device cache every step.
+    qg = q.reshape(b, n_kv_heads, group, d_head).astype(k.dtype)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qg, k,
+                   preferred_element_type=jnp.float32) * (d_head ** -0.5)
+    valid = cache_pos >= 0
+    valid &= cache_pos <= pos
+    if window > 0:
+        valid &= cache_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgc,bhcd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, n_heads * d_head).astype(x_new.dtype)
+    return layers.dense(params["wo"], out), KVCache(k=k, v=v,
+                                                    cache_pos=cache_pos)

@@ -1,0 +1,98 @@
+"""Common neural layers as pure functions over param dicts.
+
+No framework (flax/haiku unavailable offline): parameters are nested
+dicts of arrays; ``init_*`` builds them, ``apply``-style functions
+consume them. All matmuls run in the param dtype with f32 accumulation
+via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    if scale is None:
+        scale = d_in ** -0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                  * scale).astype(dtype)}
+
+
+def dense(params: dict, x: Array) -> Array:
+    # master weights may be f32 while activations are bf16: cast the
+    # WEIGHT down (small) — mixed-dtype matmuls would promote the
+    # activation tensor to f32 and double its HBM footprint
+    w = params["w"]
+    if jnp.issubdtype(x.dtype, jnp.floating) and w.dtype != x.dtype:
+        w = w.astype(x.dtype)
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32
+                      ).astype(x.dtype)
+
+
+def embedding_init(key: Array, n_rows: int, dim: int, dtype=jnp.float32,
+                   scale: float = 0.02) -> dict:
+    return {"table": (jax.random.normal(key, (n_rows, dim), jnp.float32)
+                      * scale).astype(dtype)}
+
+
+def embedding_lookup(params: dict, ids: Array) -> Array:
+    return jnp.take(params["table"], jnp.clip(ids, 0, None), axis=0)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> Array:
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponent)                    # (d_head/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, d_head); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: Array, labels: Array, ignore_id: int = -1) -> Array:
+    """Mean next-token cross entropy; positions with ``ignore_id`` skipped."""
+    mask = labels != ignore_id
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.clip(labels, 0, None)[..., None],
+                             axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,482 @@
+"""RecSys architecture family: DLRM, SASRec, DIEN, MIND.
+
+Shared substrate — **EmbeddingBag in JAX** (the brief's required gap-fill:
+no ``nn.EmbeddingBag`` / CSR in JAX): fixed-shape padded bags via
+``jnp.take`` + masked reduction; the ragged-offset variant via
+``jax.ops.segment_sum`` is provided for host-side pipelines.
+
+Scale-out: the embedding tables are the memory giants (26 × 10⁶⁺ rows for
+DLRM) — row-sharded over the mesh model axis ("table" logical axis);
+dense MLPs replicated; batch over data.  ``retrieval_cand`` scores one
+query against 10⁶ candidates with a single sharded matmul + top-k
+(never a loop), reusing ``repro.core.flat``; HI² indexes the same item
+tower in ``examples/recsys_retrieval.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention, layers
+
+Array = jax.Array
+
+PAD_ID = -1
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag
+# --------------------------------------------------------------------------
+
+def embedding_bag(table: Array, ids: Array, mode: str = "sum") -> Array:
+    """Padded-bag lookup: table (R, D), ids (..., bag) with PAD_ID pads.
+
+    Fixed-shape equivalent of torch's EmbeddingBag: gather + masked sum /
+    mean over the bag axis.
+    """
+    table = shard(table, "table", None)
+    mask = (ids != PAD_ID)[..., None]
+    emb = jnp.take(table, jnp.clip(ids, 0, None), axis=0) * mask
+    out = emb.sum(axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(mask.sum(axis=-2), 1.0)
+    return out
+
+
+def embedding_bag_ragged(table: Array, flat_ids: Array, offsets: Array,
+                         n_bags: int) -> Array:
+    """Ragged-offset variant (torch-style CSR offsets) via segment_sum."""
+    seg = jnp.searchsorted(offsets, jnp.arange(flat_ids.shape[0]),
+                           side="right") - 1
+    emb = jnp.take(table, jnp.clip(flat_ids, 0, None), axis=0)
+    emb = emb * (flat_ids != PAD_ID)[:, None]
+    return jax.ops.segment_sum(emb, seg, num_segments=n_bags)
+
+
+def _mlp_init(key: Array, dims: list[int]) -> list[dict]:
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": layers.dense_init(ks[i], dims[i], dims[i + 1])["w"],
+             "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp(params: list[dict], x: Array, final_act: bool = False) -> Array:
+    for i, p in enumerate(params):
+        x = jnp.matmul(x, p["w"], preferred_element_type=jnp.float32) + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# --------------------------------------------------------------------------
+# DLRM  (Naumov et al., arXiv:1906.00091 — RM2 scale)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    n_rows: int = 1_000_000          # rows per sparse table
+    bot_mlp: tuple = (13, 512, 256, 64)
+    top_mlp_hidden: tuple = (512, 512, 256, 1)
+
+
+class DLRMBatch(NamedTuple):
+    dense: Array      # (B, n_dense) f32
+    sparse: Array     # (B, n_sparse) i32 ids (single-hot; bags via pipeline)
+    labels: Array     # (B,) f32 clicks
+
+
+def dlrm_init(key: Array, cfg: DLRMConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    tables = (jax.random.normal(ks[0],
+                                (cfg.n_sparse, cfg.n_rows, cfg.embed_dim),
+                                jnp.float32)
+              * (cfg.embed_dim ** -0.5)).astype(jnp.float32)
+    n_feat = cfg.n_sparse + 1
+    n_inter = n_feat * (n_feat - 1) // 2
+    top_in = n_inter + cfg.bot_mlp[-1]
+    return {
+        "tables": tables,
+        "bot": _mlp_init(ks[1], list(cfg.bot_mlp)),
+        "top": _mlp_init(ks[2], [top_in] + list(cfg.top_mlp_hidden)),
+    }
+
+
+def dlrm_forward(params: dict, cfg: DLRMConfig, batch: DLRMBatch) -> Array:
+    b = batch.dense.shape[0]
+    dense_v = _mlp(params["bot"], batch.dense, final_act=True)   # (B, D)
+    tables = shard(params["tables"], None, "table", None)
+    # per-feature single-id lookup (gather over row-sharded tables)
+    emb = jnp.take_along_axis(
+        tables[None],                                            # (1, F, R, D)
+        jnp.clip(batch.sparse, 0, None).T[None, :, :, None],     # (1, F, B, 1)
+        axis=2,
+    )[0].transpose(1, 0, 2)                                      # (B, F, D)
+    feats = jnp.concatenate([dense_v[:, None], emb], axis=1)     # (B, F+1, D)
+    feats = shard(feats, "batch", None, None)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats,
+                       preferred_element_type=jnp.float32)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    z = inter[:, iu, ju]                                         # (B, F(F-1)/2)
+    top_in = jnp.concatenate([dense_v, z], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0]                     # logits (B,)
+
+
+def dlrm_loss(params: dict, cfg: DLRMConfig, batch: DLRMBatch
+              ) -> tuple[Array, dict]:
+    logits = dlrm_forward(params, cfg, batch)
+    loss = bce_loss(logits, batch.labels)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------
+# SASRec  (Kang & McAuley, arXiv:1808.09781)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+
+
+class SASRecBatch(NamedTuple):
+    items: Array      # (B, S) i32 behaviour sequence, PAD_ID padded
+    targets: Array    # (B, S) i32 next-item labels
+    negatives: Array  # (B, S) i32 sampled negatives
+
+
+def sasrec_init(key: Array, cfg: SASRecConfig) -> dict:
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+
+    def block_init(k):
+        kk = jax.random.split(k, 3)
+        return {
+            "attn_norm": layers.layernorm_init(d),
+            "attn": attention.init(kk[0], d, cfg.n_heads, cfg.n_heads,
+                                   d // cfg.n_heads),
+            "ff_norm": layers.layernorm_init(d),
+            "ff1": layers.dense_init(kk[1], d, d),
+            "ff2": layers.dense_init(kk[2], d, d),
+        }
+
+    stacked = jax.vmap(block_init)(jax.random.split(ks[0], cfg.n_blocks))
+    return {
+        "item_embed": layers.embedding_init(ks[1], cfg.n_items, d),
+        "pos_embed": layers.embedding_init(jax.random.fold_in(ks[1], 1),
+                                           cfg.seq_len, d),
+        "blocks": stacked,
+        "final_norm": layers.layernorm_init(d),
+    }
+
+
+def sasrec_hidden(params: dict, cfg: SASRecConfig, items: Array) -> Array:
+    b, s = items.shape
+    table = shard(params["item_embed"]["table"], "table", None)
+    x = jnp.take(table, jnp.clip(items, 0, None), axis=0)
+    x = x * (cfg.embed_dim ** 0.5) + params["pos_embed"]["table"][None, :s]
+    x = x * (items != PAD_ID)[..., None]
+    x = shard(x, "batch", None, None)
+
+    def body(carry, bp):
+        h = layers.layernorm(bp["attn_norm"], carry)
+        h = attention.forward(bp["attn"], h, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_heads,
+                              d_head=cfg.embed_dim // cfg.n_heads,
+                              causal=True, rope_theta=0.0, use_flash=False)
+        x1 = carry + h
+        h = layers.layernorm(bp["ff_norm"], x1)
+        h = layers.dense(bp["ff2"], jax.nn.relu(layers.dense(bp["ff1"], h)))
+        return x1 + h, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return layers.layernorm(params["final_norm"], x)
+
+
+def sasrec_loss(params: dict, cfg: SASRecConfig, batch: SASRecBatch
+                ) -> tuple[Array, dict]:
+    """BPR-style binary loss with sampled negatives (paper's objective)."""
+    h = sasrec_hidden(params, cfg, batch.items)                 # (B, S, D)
+    table = shard(params["item_embed"]["table"], "table", None)
+    pos_e = jnp.take(table, jnp.clip(batch.targets, 0, None), axis=0)
+    neg_e = jnp.take(table, jnp.clip(batch.negatives, 0, None), axis=0)
+    pos_s = jnp.einsum("bsd,bsd->bs", h, pos_e)
+    neg_s = jnp.einsum("bsd,bsd->bs", h, neg_e)
+    mask = (batch.targets != PAD_ID)
+    loss = -(jax.nn.log_sigmoid(pos_s) + jax.nn.log_sigmoid(-neg_s))
+    loss = (loss * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return loss, {"loss": loss}
+
+
+def sasrec_user_embedding(params: dict, cfg: SASRecConfig, items: Array
+                          ) -> Array:
+    """Last hidden state = the retrieval query vector."""
+    return sasrec_hidden(params, cfg, items)[:, -1]
+
+
+# --------------------------------------------------------------------------
+# DIEN  (Zhou et al., arXiv:1809.03672) — GRU + AUGRU interest evolution
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_hidden: tuple = (200, 80)
+
+
+class DIENBatch(NamedTuple):
+    history: Array    # (B, S) i32
+    target: Array     # (B,) i32
+    labels: Array     # (B,) f32
+
+
+def _gru_init(key: Array, d_in: int, d_h: int) -> dict:
+    ks = jax.random.split(key, 3)
+    s = (d_in + d_h) ** -0.5
+    def w(k):
+        return (jax.random.normal(k, (d_in + d_h, d_h), jnp.float32) * s)
+    return {"wz": w(ks[0]), "wr": w(ks[1]), "wh": w(ks[2]),
+            "bz": jnp.zeros((d_h,)), "br": jnp.zeros((d_h,)),
+            "bh": jnp.zeros((d_h,))}
+
+
+def _gru_cell(p: dict, h: Array, x: Array, att: Optional[Array] = None
+              ) -> Array:
+    xh = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    hh = jnp.tanh(xrh @ p["wh"] + p["bh"])
+    if att is not None:          # AUGRU: attention scales the update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * hh
+
+
+def dien_init(key: Array, cfg: DIENConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d_in = cfg.embed_dim * 2     # item ⊕ category embedding (paper)
+    top_in = cfg.gru_dim + d_in
+    return {
+        "item_embed": layers.embedding_init(ks[0], cfg.n_items, cfg.embed_dim),
+        "cat_embed": layers.embedding_init(ks[1], max(cfg.n_items // 100, 16),
+                                           cfg.embed_dim),
+        "gru1": _gru_init(ks[2], d_in, cfg.gru_dim),
+        "augru": _gru_init(ks[3], cfg.gru_dim, cfg.gru_dim),
+        "top": _mlp_init(ks[4], [top_in] + list(cfg.mlp_hidden) + [1]),
+    }
+
+
+def _dien_embed(params: dict, cfg: DIENConfig, ids: Array) -> Array:
+    item_t = shard(params["item_embed"]["table"], "table", None)
+    cat_t = params["cat_embed"]["table"]
+    cat_ids = jnp.clip(ids, 0, None) % cat_t.shape[0]
+    return jnp.concatenate([
+        jnp.take(item_t, jnp.clip(ids, 0, None), axis=0),
+        jnp.take(cat_t, cat_ids, axis=0)], axis=-1)
+
+
+def dien_forward(params: dict, cfg: DIENConfig, batch: DIENBatch) -> Array:
+    b, s = batch.history.shape
+    hist = _dien_embed(params, cfg, batch.history)              # (B, S, 2d)
+    tgt = _dien_embed(params, cfg, batch.target[:, None])[:, 0]  # (B, 2d)
+    mask = (batch.history != PAD_ID).astype(jnp.float32)
+
+    # interest extraction GRU
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(m[:, None] > 0, h_new, h)
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    _, states = jax.lax.scan(step1, h0, (hist.swapaxes(0, 1),
+                                         mask.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)                              # (B, S, H)
+
+    # attention of target on interest states → AUGRU
+    att_proj = states[..., :tgt.shape[-1]]
+    att = jnp.einsum("bsd,bd->bs", att_proj, tgt)
+    att = jax.nn.softmax(jnp.where(mask > 0, att, -1e30), axis=-1)
+
+    def step2(h, xs):
+        x, a, m = xs
+        h_new = _gru_cell(params["augru"], h, x, att=a)
+        h = jnp.where(m[:, None] > 0, h_new, h)
+        return h, None
+
+    h_final, _ = jax.lax.scan(step2, h0, (states.swapaxes(0, 1),
+                                          att.swapaxes(0, 1),
+                                          mask.swapaxes(0, 1)))
+    top_in = jnp.concatenate([h_final, tgt], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def dien_loss(params: dict, cfg: DIENConfig, batch: DIENBatch
+              ) -> tuple[Array, dict]:
+    logits = dien_forward(params, cfg, batch)
+    loss = bce_loss(logits, batch.labels)
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------
+# MIND  (Li et al., arXiv:1904.08030) — multi-interest capsule routing
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+
+
+class MINDBatch(NamedTuple):
+    history: Array    # (B, S) i32
+    target: Array     # (B,) i32 positive item
+    negatives: Array  # (B, N) i32 sampled negatives
+
+
+def mind_init(key: Array, cfg: MINDConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "item_embed": layers.embedding_init(ks[0], cfg.n_items,
+                                            cfg.embed_dim),
+        "bilinear": layers.dense_init(ks[1], cfg.embed_dim, cfg.embed_dim),
+    }
+
+
+def mind_interests(params: dict, cfg: MINDConfig, history: Array) -> Array:
+    """B2I dynamic routing → (B, n_interests, D) user interest capsules."""
+    b, s = history.shape
+    table = shard(params["item_embed"]["table"], "table", None)
+    beh = jnp.take(table, jnp.clip(history, 0, None), axis=0)   # (B, S, D)
+    mask = (history != PAD_ID).astype(jnp.float32)
+    beh_hat = layers.dense(params["bilinear"], beh)             # shared S
+
+    # routing logits fixed-init to 0 (deterministic variant; the paper's
+    # random init is a no-op in expectation under squash)
+    logits = jnp.zeros((b, cfg.n_interests, s), jnp.float32)
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(logits, axis=1)                      # over interests
+        w = w * mask[:, None, :]
+        caps = jnp.einsum("bks,bsd->bkd", w, beh_hat)
+        norm2 = jnp.sum(caps * caps, axis=-1, keepdims=True)
+        caps = caps * (norm2 / (1 + norm2)) / jnp.sqrt(norm2 + 1e-9)  # squash
+        logits = logits + jnp.einsum("bkd,bsd->bks", caps, beh_hat)
+    return caps
+
+
+def mind_loss(params: dict, cfg: MINDConfig, batch: MINDBatch
+              ) -> tuple[Array, dict]:
+    """Sampled-softmax with label-aware attention (hard max over interests)."""
+    caps = mind_interests(params, cfg, batch.history)           # (B, K, D)
+    table = shard(params["item_embed"]["table"], "table", None)
+    cand = jnp.concatenate([batch.target[:, None], batch.negatives], axis=1)
+    cand_e = jnp.take(table, jnp.clip(cand, 0, None), axis=0)   # (B, 1+N, D)
+    scores = jnp.einsum("bkd,bnd->bkn", caps, cand_e)
+    scores = jnp.max(scores, axis=1)                            # label-aware max
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    loss = -logp[:, 0].mean()
+    return loss, {"loss": loss}
+
+
+# --------------------------------------------------------------------------
+# retrieval scoring (the ``retrieval_cand`` cells: 1 query × 10⁶ candidates,
+# one batched pass — never a loop; HI² indexes the same item towers)
+# --------------------------------------------------------------------------
+
+def sasrec_retrieval(params: dict, cfg: SASRecConfig, items: Array,
+                     top_r: int = 100) -> tuple[Array, Array]:
+    """items: (1, S) history → (scores, ids) of the top_r of all n_items."""
+    user = sasrec_user_embedding(params, cfg, items)            # (1, D)
+    table = shard(params["item_embed"]["table"], "candidates", None)
+    scores = jnp.matmul(user, table.T,
+                        preferred_element_type=jnp.float32)     # (1, R)
+    return jax.lax.top_k(scores, top_r)
+
+
+def mind_retrieval(params: dict, cfg: MINDConfig, history: Array,
+                   top_r: int = 100) -> tuple[Array, Array]:
+    """Multi-interest retrieval: max over the K interest capsules."""
+    caps = mind_interests(params, cfg, history)                 # (1, K, D)
+    table = shard(params["item_embed"]["table"], "candidates", None)
+    scores = jnp.einsum("bkd,rd->bkr", caps, table)
+    return jax.lax.top_k(jnp.max(scores, axis=1), top_r)
+
+
+def dien_retrieval(params: dict, cfg: DIENConfig, history: Array,
+                   candidates: Array, top_r: int = 100
+                   ) -> tuple[Array, Array]:
+    """DIEN is target-conditioned (AUGRU depends on the candidate), so
+    retrieval re-runs the evolution layer per candidate — batched over the
+    sharded candidate axis, GRU-extracted interests computed once."""
+    b, s = history.shape
+    n = candidates.shape[0]
+    hist = _dien_embed(params, cfg, history)                    # (1, S, 2d)
+    mask = (history != PAD_ID).astype(jnp.float32)
+
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_cell(params["gru1"], h, x)
+        return jnp.where(m[:, None] > 0, h_new, h), jnp.where(
+            m[:, None] > 0, h_new, h)
+
+    h0 = jnp.zeros((b, cfg.gru_dim), jnp.float32)
+    _, states = jax.lax.scan(step1, h0, (hist.swapaxes(0, 1),
+                                         mask.swapaxes(0, 1)))
+    states = states[:, 0]                                       # (S, H)
+
+    tgt = _dien_embed(params, cfg, candidates[:, None])[:, 0]   # (N, 2d)
+    tgt = shard(tgt, "candidates", None)
+    att = jnp.einsum("sh,nh->ns", states[:, :tgt.shape[-1]], tgt)
+    att = jax.nn.softmax(jnp.where(mask[0][None] > 0, att, -1e30), axis=-1)
+    att = shard(att, "candidates", None)
+
+    def step2(h, xs):
+        x, a = xs                                               # (H,), (N,)
+        h_new = _gru_cell(params["augru"],
+                          h, jnp.broadcast_to(x[None], (n, x.shape[0])),
+                          att=a)
+        return h_new, None
+
+    hn0 = jnp.zeros((n, cfg.gru_dim), jnp.float32)
+    h_final, _ = jax.lax.scan(step2, hn0, (states, att.T))
+    top_in = jnp.concatenate([h_final, tgt], axis=-1)
+    scores = _mlp(params["top"], top_in)[:, 0]                  # (N,)
+    return jax.lax.top_k(scores[None], top_r)
+
+
+def dlrm_retrieval(params: dict, cfg: DLRMConfig, dense: Array,
+                   sparse_ctx: Array, candidates: Array, top_r: int = 100
+                   ) -> tuple[Array, Array]:
+    """Score 1 user context against N candidate items: the candidate id
+    fills the last sparse slot; everything else broadcasts."""
+    n = candidates.shape[0]
+    sparse = jnp.broadcast_to(sparse_ctx, (n, cfg.n_sparse - 1))
+    sparse = jnp.concatenate([sparse, candidates[:, None]], axis=-1)
+    sparse = shard(sparse, "candidates", None)
+    batch = DLRMBatch(dense=jnp.broadcast_to(dense, (n, cfg.n_dense)),
+                      sparse=sparse, labels=jnp.zeros((n,), jnp.float32))
+    scores = dlrm_forward(params, cfg, batch)
+    return jax.lax.top_k(scores[None], top_r)

@@ -1,0 +1,341 @@
+"""Transformer LM family: dense + MoE decoder LMs (GQA, RoPE, SWA) and a
+bidirectional encoder mode (the HI² term-selector / bi-encoder tower).
+
+Production structure:
+  · layers are stacked (leading L axis) and iterated with ``jax.lax.scan``
+    so HLO size and compile time stay flat at 56 layers (Mixtral);
+  · per-layer ``jax.checkpoint`` (full remat) bounds activation memory to
+    one layer plus the scan-carried residuals;
+  · residual stream is sequence-sharded between blocks (logical "seq" →
+    model axis), attention/FFN internals are TP-sharded — XLA inserts the
+    Megatron sequence-parallel all-gather/reduce-scatter pairs;
+  · decode uses the rolling KV cache from models.attention, scanned over
+    layers with stacked caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention, layers, moe
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None           # default d_model // n_heads
+    # MoE (n_experts=0 → dense)
+    n_experts: int = 0
+    moe_top_k: int = 2
+    capacity_factor: float = 1.25
+    # attention
+    causal: bool = True
+    window: int = 0                        # SWA window; 0 = full attention
+    rope_theta: float = 10000.0
+    # numerics / structure
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    use_flash: bool = False
+    remat: bool = True
+    moe_impl: str = "gspmd"                # "gspmd" | "shard_map" (§Perf)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def n_params(self) -> int:
+        """Total parameter count (embeddings + layers + unembed)."""
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            mlp = 3 * d * f
+        per_layer = attn + mlp + 2 * d
+        return (self.vocab_size * d * 2 + self.n_layers * per_layer + d)
+
+    def n_active_params(self) -> int:
+        """Activated parameters per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.head_dim * 2 \
+            + d * self.n_kv_heads * self.head_dim * 2
+        mlp = self.moe_top_k * 3 * d * f + d * self.n_experts
+        per_layer = attn + mlp + 2 * d
+        return (self.vocab_size * d * 2 + self.n_layers * per_layer + d)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(key: Array, cfg: TransformerConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attention.init(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, cfg.param_dtype),
+        "mlp_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe.init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.param_dtype)
+    else:
+        s_in, s_out = cfg.d_model ** -0.5, cfg.d_ff ** -0.5
+        p["mlp"] = {
+            "w_gate": layers.dense_init(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.param_dtype, s_in),
+            "w_up": layers.dense_init(ks[2], cfg.d_model, cfg.d_ff,
+                                      cfg.param_dtype, s_in),
+            "w_down": layers.dense_init(ks[3], cfg.d_ff, cfg.d_model,
+                                        cfg.param_dtype, s_out),
+        }
+    return p
+
+
+def init(key: Array, cfg: TransformerConfig) -> dict:
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": layers.embedding_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                       cfg.param_dtype),
+        "layers": stacked,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "unembed": layers.dense_init(k_out, cfg.d_model, cfg.vocab_size,
+                                     cfg.param_dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill / encode)
+# --------------------------------------------------------------------------
+
+def _mlp_forward(p: dict, x: Array) -> Array:
+    w_gate = shard(p["w_gate"]["w"], "embed", "ff").astype(x.dtype)
+    w_up = shard(p["w_up"]["w"], "embed", "ff").astype(x.dtype)
+    w_down = shard(p["w_down"]["w"], "ff", "embed").astype(x.dtype)
+    h = jax.nn.silu(jnp.matmul(x, w_gate, preferred_element_type=jnp.float32))
+    h = (h * jnp.matmul(x, w_up, preferred_element_type=jnp.float32)
+         ).astype(x.dtype)
+    h = shard(h, "batch", None, "ff")
+    return jnp.matmul(h, w_down,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _layer_forward(lp: dict, cfg: TransformerConfig, x: Array) -> tuple[Array, Array]:
+    h = layers.rmsnorm(lp["attn_norm"], x)
+    h = attention.forward(
+        lp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim, causal=cfg.causal, window=cfg.window,
+        rope_theta=cfg.rope_theta, use_flash=cfg.use_flash)
+    x = x + h
+    x = shard(x, "batch", "seq", None)
+    h = layers.rmsnorm(lp["mlp_norm"], x)
+    if cfg.is_moe:
+        moe_fn = (moe.forward_shard_map if cfg.moe_impl == "shard_map"
+                  else moe.forward)
+        h, stats = moe_fn(
+            lp["moe"], h, n_experts=cfg.n_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.capacity_factor)
+        aux = stats.aux_loss
+    else:
+        h = _mlp_forward(lp["mlp"], h)
+        aux = jnp.float32(0.0)
+    x = x + h
+    x = shard(x, "batch", "seq", None)
+    return x, aux
+
+
+def hidden_states(params: dict, cfg: TransformerConfig, tokens: Array
+                  ) -> tuple[Array, Array]:
+    """(B, S) -> ((B, S, D) final hidden states, scalar moe aux loss)."""
+    table = shard(params["embed"]["table"], "vocab", None)
+    x = jnp.take(table, jnp.clip(tokens, 0, None), axis=0)
+    x = x.astype(cfg.compute_dtype)
+    x = shard(x, "batch", "seq", None)
+
+    body = functools.partial(_layer_forward, cfg=cfg)
+
+    def scan_body(carry, lp):
+        fn = (lambda c, p: body(p, x=c))
+        if cfg.remat:
+            fn = jax.checkpoint(fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        new_x, aux = fn(carry, lp)
+        return new_x, aux
+
+    x, auxes = jax.lax.scan(scan_body, x, params["layers"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    return x, jnp.sum(auxes)
+
+
+def logits_fn(params: dict, cfg: TransformerConfig, tokens: Array
+              ) -> tuple[Array, Array]:
+    x, aux = hidden_states(params, cfg, tokens)
+    unembed = shard(params["unembed"]["w"], None, "vocab").astype(x.dtype)
+    logits = jnp.matmul(x, unembed, preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "vocab"), aux
+
+
+def loss_fn(params: dict, cfg: TransformerConfig, tokens: Array,
+            labels: Array, aux_weight: float = 0.01) -> tuple[Array, dict]:
+    logits, aux = logits_fn(params, cfg, tokens)
+    xent = layers.softmax_xent(logits, labels)
+    loss = xent + aux_weight * aux
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+
+def encode(params: dict, cfg: TransformerConfig, tokens: Array,
+           pad_id: int = -1) -> tuple[Array, Array]:
+    """Encoder mode (causal=False configs): (hidden (B,S,D), pooled (B,D)).
+
+    Pooled embedding is masked mean-pool — the bi-encoder tower for HI²
+    and the term-selector backbone (paper Eq. 7 BERT slot).
+    """
+    hidden, _ = hidden_states(params, cfg, tokens)
+    mask = (tokens != pad_id)[..., None].astype(hidden.dtype)
+    pooled = (hidden * mask).sum(axis=1) / jnp.maximum(mask.sum(axis=1), 1.0)
+    return hidden, pooled
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def init_decode_caches(cfg: TransformerConfig, batch: int, seq_len: int
+                       ) -> attention.KVCache:
+    """Stacked per-layer caches (leading L axis) for the scan."""
+    capacity = attention.cache_capacity(seq_len, cfg.window)
+
+    def one(_):
+        return attention.init_cache(batch, cfg.n_kv_heads, capacity,
+                                    cfg.head_dim, cfg.compute_dtype)
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def serve_step(params: dict, cfg: TransformerConfig,
+               caches: attention.KVCache, tokens_new: Array, pos: Array
+               ) -> tuple[Array, attention.KVCache]:
+    """One token for the whole batch against the KV caches.
+
+    tokens_new: (B, 1); pos: () absolute position. Returns
+    (logits (B, 1, V), updated caches).
+    """
+    table = shard(params["embed"]["table"], "vocab", None)
+    x = jnp.take(table, jnp.clip(tokens_new, 0, None), axis=0)
+    x = x.astype(cfg.compute_dtype)
+    x = shard(x, "batch", None, None)
+
+    def body(carry, xs):
+        lp, cache = xs
+        h = layers.rmsnorm(lp["attn_norm"], carry)
+        h, new_cache = attention.decode_step(
+            lp["attn"], cache, h, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+            window=cfg.window, rope_theta=cfg.rope_theta)
+        x1 = carry + h
+        h = layers.rmsnorm(lp["mlp_norm"], x1)
+        if cfg.is_moe:
+            h, _ = moe.forward(lp["moe"], h, n_experts=cfg.n_experts,
+                               top_k=cfg.moe_top_k,
+                               capacity_factor=cfg.capacity_factor)
+        else:
+            h = _mlp_forward(lp["mlp"], h)
+        return x1 + h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = layers.rmsnorm(params["final_norm"], x)
+    unembed = shard(params["unembed"]["w"], None, "vocab").astype(x.dtype)
+    logits = jnp.matmul(x, unembed, preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "vocab"), new_caches
+
+
+def prefill_step(params: dict, cfg: TransformerConfig, tokens: Array
+                 ) -> tuple[Array, attention.KVCache]:
+    """Production prefill: one full-sequence forward that also emits the
+    stacked KV caches (scan ys) and the last-token logits — the graph the
+    ``prefill_*`` dry-run cells lower."""
+    b, s = tokens.shape
+    table = shard(params["embed"]["table"], "vocab", None)
+    x = jnp.take(table, jnp.clip(tokens, 0, None), axis=0)
+    x = x.astype(cfg.compute_dtype)
+    x = shard(x, "batch", "seq", None)
+
+    def body(carry, lp):
+        def fn(c, p):
+            h = layers.rmsnorm(p["attn_norm"], c)
+            h, (k, v) = attention.forward(
+                p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim, causal=cfg.causal, window=cfg.window,
+                rope_theta=cfg.rope_theta, use_flash=cfg.use_flash,
+                return_kv=True)
+            x1 = c + h
+            h2 = layers.rmsnorm(p["mlp_norm"], x1)
+            if cfg.is_moe:
+                h2, _ = moe.forward(p["moe"], h2, n_experts=cfg.n_experts,
+                                    top_k=cfg.moe_top_k,
+                                    capacity_factor=cfg.capacity_factor)
+            else:
+                h2 = _mlp_forward(p["mlp"], h2)
+            return x1 + h2, (k, v)
+        if cfg.remat:
+            fn = jax.checkpoint(fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        new_x, kv = fn(carry, lp)
+        kv = jax.tree.map(
+            lambda t: shard(t, "batch", "kv_heads", "seq_kv", None), kv)
+        return new_x, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:])
+    unembed = shard(params["unembed"]["w"], None, "vocab").astype(x.dtype)
+    logits = jnp.matmul(x, unembed, preferred_element_type=jnp.float32)
+    capacity = attention.cache_capacity(s, cfg.window)
+    # rolling-cache layout: position p must land in slot p % capacity so
+    # that continued decode (slot = pos % capacity) evicts the *oldest*
+    # position, never a live one
+    p0 = s - capacity
+    shift = p0 % capacity if capacity else 0
+    caches = attention.KVCache(
+        k=jnp.roll(ks[..., -capacity:, :], shift, axis=-2
+                   ).astype(cfg.compute_dtype),
+        v=jnp.roll(vs[..., -capacity:, :], shift, axis=-2
+                   ).astype(cfg.compute_dtype),
+        cache_pos=jnp.broadcast_to(
+            jnp.roll(jnp.arange(p0, s, dtype=jnp.int32), shift),
+            (cfg.n_layers, capacity)),
+    )
+    return logits, caches
+
+
+def prefill(params: dict, cfg: TransformerConfig, tokens: Array
+            ) -> tuple[Array, attention.KVCache]:
+    """Sequential prefill via serve_step (example-scale oracle for tests;
+    production prefill is :func:`prefill_step`)."""
+    b, s = tokens.shape
+    caches = init_decode_caches(cfg, b, s)
+    logits = None
+    for i in range(s):
+        logits, caches = serve_step(params, cfg, caches, tokens[:, i:i + 1],
+                                    jnp.int32(i))
+    return logits, caches

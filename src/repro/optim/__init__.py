@@ -1,0 +1,5 @@
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.optim.schedule import (constant, cosine_decay, linear_warmup,
+                                  warmup_cosine)
+from repro.optim.grad import (accumulate_grads, clip_by_global_norm,
+                              global_norm)

@@ -1,0 +1,70 @@
+"""AdamW from scratch (no optax in this environment) over arbitrary pytrees.
+
+Used for HI²_sup distillation (cluster embeddings + term-scorer encoder,
+paper §4.3) and by the LM/GNN/recsys training drivers.  State lives in
+the same sharding as the parameters — on a (data, model) mesh the first
+and second moments inherit the parameter PartitionSpecs, so the optimizer
+adds zero extra collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class AdamConfig(NamedTuple):
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+class AdamState(NamedTuple):
+    step: Array     # () i32
+    mu: PyTree      # first moment
+    nu: PyTree      # second moment
+
+
+def adam_init(params: PyTree) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adam_update(grads: PyTree, state: AdamState, params: PyTree,
+                config: AdamConfig, lr_scale: Array | float = 1.0
+                ) -> tuple[PyTree, AdamState]:
+    """One AdamW step. ``lr_scale`` multiplies the base lr (schedules)."""
+    step = state.step + 1
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = config.lr * lr_scale
+
+    def moment1(m, g):
+        return b1 * m + (1 - b1) * g.astype(jnp.float32)
+
+    def moment2(v, g):
+        g = g.astype(jnp.float32)
+        return b2 * v + (1 - b2) * g * g
+
+    mu = jax.tree.map(moment1, state.mu, grads)
+    nu = jax.tree.map(moment2, state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        if config.weight_decay:
+            delta = delta + config.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

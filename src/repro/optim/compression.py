@@ -1,0 +1,62 @@
+"""int8 gradient compression with error feedback (1-bit-Adam lineage).
+
+Cross-pod gradient traffic is the scaling bottleneck of the pod axis
+(DESIGN.md §5).  Per-tensor symmetric int8 quantization cuts it 4×
+versus f32 (2× vs bf16); the quantization error is fed back into the
+next step's gradient (error feedback), which keeps SGD/Adam convergence
+unbiased in the long run (Karimireddy et al., 2019).
+
+Usage (see launch/train.py): compress → all_reduce int8→f32 sums →
+decompress; EF state lives next to the optimizer state and is
+checkpointed with it.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressedLeaf(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # () f32
+
+
+def compress_leaf(g: jax.Array) -> CompressedLeaf:
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return CompressedLeaf(q=q, scale=scale)
+
+
+def decompress_leaf(c: CompressedLeaf) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def ef_init(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_ef(grads: PyTree, ef: PyTree
+                     ) -> tuple[PyTree, PyTree]:
+    """Returns (compressed grads tree, new error-feedback state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        c = compress_leaf(corrected)
+        return c, corrected - decompress_leaf(c)
+
+    pairs = jax.tree.map(one, grads, ef)
+    comp = jax.tree.map(lambda pr: pr[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda pr: pr[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_ef
+
+
+def decompress(comp: PyTree) -> PyTree:
+    return jax.tree.map(decompress_leaf, comp,
+                        is_leaf=lambda x: isinstance(x, CompressedLeaf))

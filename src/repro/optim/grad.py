@@ -1,0 +1,43 @@
+"""Gradient tooling: global-norm clipping and microbatch accumulation."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def accumulate_grads(loss_fn, params: PyTree, microbatches, *args) -> tuple[jax.Array, PyTree]:
+    """Sequential gradient accumulation over a stacked microbatch pytree.
+
+    ``microbatches`` leaves have a leading microbatch axis; the scan keeps
+    activation memory at one microbatch.
+    """
+    grad_fn = jax.grad(loss_fn, has_aux=False)
+
+    def body(carry, mb):
+        acc, total = carry
+        g = grad_fn(params, mb, *args)
+        loss = loss_fn(params, mb, *args)
+        acc = jax.tree.map(jnp.add, acc, g)
+        return (acc, total + loss), None
+
+    n = jax.tree.leaves(microbatches)[0].shape[0]
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (acc, total), _ = jax.lax.scan(body, (zeros, 0.0), microbatches)
+    inv = 1.0 / n
+    return total * inv, jax.tree.map(lambda g: g * inv, acc)

@@ -1,0 +1,31 @@
+"""Learning-rate schedules as pure ``step -> scale`` functions."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def linear_warmup(warmup_steps: int):
+    def fn(step):
+        return jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1)).astype(jnp.float32)
+    return fn
+
+
+def cosine_decay(total_steps: int, final_scale: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return (final_scale + (1.0 - final_scale) * cos).astype(jnp.float32)
+    return fn
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_scale: float = 0.1):
+    wu = linear_warmup(warmup_steps)
+    cd = cosine_decay(max(total_steps - warmup_steps, 1), final_scale)
+    def fn(step):
+        return jnp.where(step < warmup_steps, wu(step),
+                         cd(step - warmup_steps))
+    return fn

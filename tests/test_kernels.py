@@ -1,0 +1,123 @@
+"""Per-kernel validation: shape/dtype sweeps (hypothesis) asserting
+allclose against the pure-jnp oracles, in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.assign_topk import ops as at_ops, ref as at_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.pq_adc import ops as adc_ops, ref as adc_ref
+
+settings.register_profile("kernels", max_examples=12, deadline=None)
+settings.load_profile("kernels")
+
+
+# --------------------------------------------------------------------------
+# pq_adc
+# --------------------------------------------------------------------------
+
+@given(b=st.integers(1, 4), c=st.integers(1, 700), m=st.sampled_from([1, 3, 8, 16]),
+       k=st.sampled_from([128, 256]))
+def test_pq_adc_matches_oracle(b, c, m, k):
+    key = jax.random.key(b * 1000 + c)
+    lut = jax.random.normal(key, (b, m, k), jnp.float32)
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (b, c, m), 0, k)
+    out = adc_ops.pq_adc(lut, codes, c_blk=128)
+    expect = adc_ref.pq_adc(lut, codes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_adc_paper_scale():
+    """The paper's production config: m=96, k=256."""
+    key = jax.random.key(0)
+    lut = jax.random.normal(key, (2, 96, 256), jnp.float32)
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (2, 2048, 96),
+                               0, 256)
+    out = adc_ops.pq_adc(lut, codes)
+    expect = adc_ref.pq_adc(lut, codes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# assign_topk
+# --------------------------------------------------------------------------
+
+@given(n=st.integers(1, 1200), l=st.integers(2, 600),
+       h=st.sampled_from([16, 64, 128]))
+def test_assign_argmax_matches_oracle(n, l, h):
+    key = jax.random.key(n * 7 + l)
+    x = jax.random.normal(key, (n, h), jnp.float32)
+    c = jax.random.normal(jax.random.fold_in(key, 1), (l, h), jnp.float32)
+    s, i = at_ops.assign_argmax(x, c)
+    es, ei = at_ref.assign_argmax(x, c)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(es),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+
+
+def test_assign_argmax_is_l2_argmin():
+    """⟨x,c⟩ − ½‖c‖² argmax == L2 argmin (the KMeans contract)."""
+    key = jax.random.key(3)
+    x = jax.random.normal(key, (64, 32))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (40, 32))
+    _, i = at_ops.assign_argmax(x, c)
+    d = np.linalg.norm(np.asarray(x)[:, None] - np.asarray(c)[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(i), d.argmin(axis=1))
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+
+@given(sq=st.sampled_from([64, 200, 256]), sk=st.sampled_from([64, 256, 384]),
+       d=st.sampled_from([32, 64]), causal=st.booleans(),
+       window=st.sampled_from([0, 32]),
+       heads=st.sampled_from([(4, 4), (4, 2), (8, 1)]))
+def test_flash_attention_matches_oracle(sq, sk, d, causal, window, heads):
+    if causal and sk != sq:
+        sk = sq  # causal masks assume aligned positions
+    hq, hkv = heads
+    key = jax.random.key(sq * 31 + sk)
+    q = jax.random.normal(key, (1, hq, sq, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, hkv, sk, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, hkv, sk, d))
+    out = fa_ops.flash_attention(q, k, v, causal, window, None)
+    expect = fa_ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_gradient_path():
+    key = jax.random.key(9)
+    q = jax.random.normal(key, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32))
+
+    def loss_kernel(q_):
+        return fa_ops.flash_attention(q_, k, v, True, 0, None).sum()
+
+    def loss_ref(q_):
+        return fa_ref.attention(q_, k, v, causal=True).sum()
+
+    g_k = jax.grad(loss_kernel)(q)
+    g_r = jax.grad(loss_ref)(q)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(q_chunk=st.sampled_from([64, 128, 256]), causal=st.booleans(),
+       window=st.sampled_from([0, 48]))
+def test_chunked_attention_matches_dense(q_chunk, causal, window):
+    key = jax.random.key(q_chunk)
+    q = jax.random.normal(key, (1, 2, 512, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 512, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 512, 32))
+    a = fa_ref.attention(q, k, v, causal=causal, window=window)
+    b = fa_ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
