@@ -1,0 +1,139 @@
+"""Sharded-search benchmark: throughput vs shard count against the
+single-device baseline (DESIGN.md §6).
+
+Must own the process before jax initializes so it can emulate devices:
+
+    PYTHONPATH=src python benchmarks/sharded_search.py --devices 4
+    PYTHONPATH=src python benchmarks/sharded_search.py --devices 4 \\
+        --out results/sharded_search.json
+
+Emits a JSON document: the single-device baseline, one entry per shard
+count in {2, 4, ..., --devices}, equality of the returned top-R against
+the baseline, and per-device doc-plane bytes (the HBM win).  On
+emulated CPU devices collective overhead dominates, so the interesting
+number at laptop scale is the *identical doc_ids* column and the bytes
+column — the throughput column becomes meaningful on real multi-chip
+meshes where the per-shard gather+ADC actually runs in parallel.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4,
+                    help="emulated host devices (= max shard count)")
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--top-r", type=int, default=100)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    return ap.parse_args(argv)
+
+
+def run(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import hybrid_index as hi, sharded_index as shi
+    from repro.data import synthetic
+
+    def time_call(fn, *a, warmup=2, iters=5):
+        import time
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*a))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*a))
+        return (time.perf_counter() - t0) / iters * 1e6  # µs per call
+
+    if jax.device_count() < 2:
+        sys.exit(f"only {jax.device_count()} device(s) visible — nothing "
+                 "to shard (check XLA_FLAGS / --devices)")
+
+    corpus = synthetic.generate(seed=0, n_docs=args.docs,
+                                n_queries=args.queries, hidden=64,
+                                vocab_size=8192, n_topics=128)
+    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                     n_clusters=256, k1_terms=12, codec="opq", pq_m=8,
+                     pq_k=256, cluster_capacity=256, term_capacity=128,
+                     kmeans_iters=10)
+    qe = jnp.asarray(corpus.query_emb)
+    qt = jnp.asarray(corpus.query_tokens)
+    kc, k2, top_r = 6, 8, args.top_r
+
+    def doc_plane_bytes(codes, entries_c, entries_t):
+        return (np.asarray(codes).nbytes + np.asarray(entries_c).nbytes
+                + np.asarray(entries_t).nbytes)
+
+    us = time_call(lambda: hi.search(index, qe, qt, kc=kc, k2=k2,
+                                     top_r=top_r))
+    ref = hi.search(index, qe, qt, kc=kc, k2=k2, top_r=top_r)
+    report = {
+        "n_docs": args.docs,
+        "n_queries": args.queries,
+        "top_r": top_r,
+        "candidate_budget": hi.candidate_budget(index, kc, k2),
+        "devices": jax.device_count(),
+        "baseline": {
+            "us_per_batch": round(us, 1),
+            "qps": round(args.queries / us * 1e6, 1),
+            "doc_plane_bytes_per_device": doc_plane_bytes(
+                index.doc_codes, index.cluster_lists.entries,
+                index.term_lists.entries),
+        },
+        "sharded": [],
+    }
+
+    n = 2
+    while n <= min(args.devices, jax.device_count()):
+        sidx = shi.partition(index, n)
+        mesh = shi.make_shard_mesh(n)
+        sidx = shi.device_put(sidx, mesh)
+        us_n = time_call(lambda: shi.search(
+            sidx, qe, qt, kc=kc, k2=k2, top_r=top_r, mesh=mesh))
+        out = shi.search(sidx, qe, qt, kc=kc, k2=k2, top_r=top_r, mesh=mesh)
+        report["sharded"].append({
+            "shards": n,
+            "us_per_batch": round(us_n, 1),
+            "qps": round(args.queries / us_n * 1e6, 1),
+            "speedup_vs_baseline": round(us / us_n, 3),
+            "doc_ids_identical": bool(
+                (np.asarray(out.doc_ids) == np.asarray(ref.doc_ids)).all()),
+            "doc_plane_bytes_per_device": doc_plane_bytes(
+                sidx.doc_codes[0], sidx.cluster_entries[0],
+                sidx.term_entries[0]),
+        })
+        n *= 2
+    return report
+
+
+def main(argv=None) -> None:
+    args = _parse_args(argv)
+    # must precede the first jax import anywhere in the process; append
+    # to (not replace, not defer to) any existing XLA_FLAGS — otherwise
+    # an inherited value leaves 1 device and the benchmark becomes a
+    # vacuous green no-op
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count"
+            f"={args.devices}").strip()
+    report = run(args)
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if not all(e["doc_ids_identical"] for e in report["sharded"]):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,14 @@ class HI2ServeShape:
 
 
 @dataclasses.dataclass(frozen=True)
+class HI2ShardedServeShape(HI2ServeShape):
+    """Document-sharded serving (DESIGN.md §6): doc planes split over
+    the mesh model axis (16-way on the single-pod mesh → ~553k docs ×
+    96 uint8 codes ≈ 53 MB per device), queries over the data axis."""
+    kind: str = "hi2_serve_sharded"
+
+
+@dataclasses.dataclass(frozen=True)
 class HI2Config:
     pass
 
@@ -44,5 +52,7 @@ ARCH = registry.register(registry.ArchDef(
     arch_id="hi2-synth", family="hi2", source="this paper (HI², §5.1)",
     make_config=lambda shape=None: HI2Config(),
     make_reduced=lambda: HI2Config(),
-    shapes={"serve_msmarco": HI2ServeShape("serve_msmarco")},
+    shapes={"serve_msmarco": HI2ServeShape("serve_msmarco"),
+            "serve_msmarco_sharded":
+                HI2ShardedServeShape("serve_msmarco_sharded")},
     extra=True))

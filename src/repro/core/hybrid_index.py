@@ -6,16 +6,29 @@ embedding cluster** and **K₁ᵀ salient terms**.  A query is dispatched to
 are merged, deduplicated, scored by the codec (OPQ/PQ/Flat) and the
 top-R returned.
 
-All search-time compute is fixed-shape jitted JAX (DESIGN.md §2):
+All search-time compute is fixed-shape jitted JAX (the search contract,
+DESIGN.md §2):
 
     dispatch  : two matmul+top-k (cluster) / table-lookup+top-k (term)
     gather    : rows of the padded list planes → (B, budget) candidates
     dedup     : sort-based first-occurrence mask
     scoring   : PQ ADC (LUT matmul + code gather-sum; Pallas kernel
                 ``repro.kernels.pq_adc`` on TPU, jnp oracle otherwise)
-    top-R     : jax.lax.top_k
+    top-R     : total-order sort by (score desc, doc id asc) — see
+                :func:`topk_by_score` and DESIGN.md §6 (the deterministic
+                tie-break is what makes the document-sharded merge in
+                :mod:`repro.core.sharded_index` bit-identical to this
+                single-device path)
 
 The index build runs once on host+device; searching never reshapes.
+The static per-query candidate count (:func:`candidate_budget`) is the
+latency proxy used throughout ``benchmarks/`` — it upper-bounds the
+paper's QL (queried length) and is what the fixed shapes pin down.
+
+Scaling beyond one device's HBM is document sharding (DESIGN.md §6):
+:func:`repro.core.sharded_index.partition` splits the doc planes and
+list entries over a mesh and reuses this module's dispatch/score ops
+per shard under ``shard_map``.
 """
 from __future__ import annotations
 
@@ -168,6 +181,30 @@ class SearchResult(NamedTuple):
     n_candidates: Array   # (B,) i32 — unique docs evaluated (∝ paper's QL)
 
 
+def topk_by_score(scores: Array, ids: Array, r: int) -> tuple[Array, Array]:
+    """Top-r rows under the total order (score desc, doc id asc).
+
+    ``jax.lax.top_k`` breaks score ties by *position* in the candidate
+    array, which differs between candidate orderings (single-device
+    concat vs per-shard merge).  Sorting on the composite key makes the
+    selection a pure function of the (score, id) *set*, so any
+    partitioning of the candidates merges back bit-identically
+    (DESIGN.md §6).  Invalid slots must carry ``-inf`` scores; they sort
+    last and keep their raw ids — callers mask them (``isfinite``).
+    Returns ``(scores, ids)`` of shape (B, r), ``-inf``/``PAD_DOC``
+    filled when fewer than r slots exist.
+    """
+    k_eff = min(r, scores.shape[-1])
+    neg_s, sorted_ids = jax.lax.sort(
+        (-scores, ids), dimension=-1, num_keys=2)
+    top_s, top_ids = -neg_s[..., :k_eff], sorted_ids[..., :k_eff]
+    if k_eff < r:
+        pad = ((0, 0), (0, r - k_eff))
+        top_s = jnp.pad(top_s, pad, constant_values=-jnp.inf)
+        top_ids = jnp.pad(top_ids, pad, constant_values=PAD_DOC)
+    return top_s, top_ids
+
+
 def _codec_scores(index: HybridIndex, queries: Array, candidates: Array,
                   use_kernel: bool) -> Array:
     safe = jnp.clip(candidates, 0, None)
@@ -203,16 +240,8 @@ def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
     scores = _codec_scores(index, query_embeddings, cands, use_kernel)
     scores = jnp.where(keep, scores, -jnp.inf)
 
-    # narrow dispatch configs can have a budget smaller than top_r:
-    # clamp the top_k and PAD-fill the tail
-    k_eff = min(top_r, scores.shape[-1])
-    top_s, top_pos = jax.lax.top_k(scores, k_eff)
-    top_ids = jnp.take_along_axis(cands, top_pos, axis=-1)
-    if k_eff < top_r:
-        pad = top_r - k_eff
-        top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
-        top_ids = jnp.pad(top_ids, ((0, 0), (0, pad)),
-                          constant_values=PAD_DOC)
+    # total-order top-R (handles budgets smaller than top_r by PAD-fill)
+    top_s, top_ids = topk_by_score(scores, cands, top_r)
     valid = jnp.isfinite(top_s)
     return SearchResult(
         doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
@@ -222,5 +251,14 @@ def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
 
 
 def candidate_budget(index: HybridIndex, kc: int, k2: int) -> int:
-    """Static per-query candidate slots (the latency proxy's upper bound)."""
+    """Static per-query candidate slots — the latency proxy used by
+    ``benchmarks/`` (DESIGN.md §2).
+
+    Search cost is dominated by gather + ADC over this many slots, and
+    because the search step is fixed-shape the compiled program's wall
+    time is monotone in it.  It upper-bounds the paper's measured QL
+    (queried length = unique candidates, reported per query as
+    ``SearchResult.n_candidates``); dedup only masks slots, it never
+    shrinks the compute.
+    """
     return kc * index.cluster_lists.capacity + k2 * index.term_lists.capacity

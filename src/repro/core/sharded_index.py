@@ -1,0 +1,343 @@
+"""Document-sharded HI² — the index-parallel serving path (DESIGN.md §6).
+
+A single-device :class:`~repro.core.hybrid_index.HybridIndex` caps the
+corpus at one device's HBM.  This module splits the *documents* (and
+with them the codec planes and the inverted-list entries) over a device
+mesh and runs the whole fixed-shape search of
+:mod:`repro.core.hybrid_index` per shard under ``shard_map``:
+
+    shard s owns the contiguous doc range [s·P, (s+1)·P)
+
+    replicated per device : cluster/term selectors, OPQ codebook, queries
+    sharded (leading axis) : doc_codes / doc_embeddings, and the list
+                             entry planes filtered to the shard's docs
+
+    per shard : dispatch → gather → dedup → ADC score → local top-R
+    merge     : all-gather of the (B, R) planes along the shard axis +
+                one more total-order top-R (collectives.gather_topk)
+
+The partition happens AFTER global list construction (including
+capacity truncation), so the union of the per-shard lists is exactly
+the single-device lists — no doc is scored on the sharded path that the
+single-device path would have truncated away, and vice versa.  Because
+each doc lives in exactly one shard, per-shard dedup is global dedup,
+and because top-R selection uses the total order of
+:func:`~repro.core.hybrid_index.topk_by_score` (score desc, id asc),
+the merged result is **bit-identical** to single-device ``search()``
+(asserted by ``tests/test_sharded.py``).
+
+Per-shard planes keep the *global* list capacity, so the per-shard
+candidate budget equals the single-device budget; the win is HBM (each
+device holds 1/S of the codes) and throughput (S devices gather+score
+concurrently), not per-shard budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cluster_selector as cs_mod
+from repro.core import hybrid_index as hi
+from repro.core import inverted_lists as il
+from repro.core import opq as opq_mod
+from repro.core import pq as pq_mod
+from repro.core import term_selector as ts_mod
+from repro.core.inverted_lists import PAD_DOC, PaddedLists
+from repro.distributed import collectives, compat
+
+Array = jax.Array
+
+SHARD_AXIS = "shards"
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cluster_sel", "term_sel", "cluster_entries",
+                 "cluster_lengths", "term_entries", "term_lengths", "opq",
+                 "doc_codes", "doc_embeddings", "doc_assign"],
+    meta_fields=["codec", "n_docs"])
+@dataclasses.dataclass(frozen=True)
+class ShardedHybridIndex:
+    """HI² with every document-indexed plane carrying a leading shard
+    axis (S, ...).  Selector/codebook state is replicated."""
+    cluster_sel: cs_mod.ClusterSelector     # replicated
+    term_sel: ts_mod.TermSelector           # replicated
+    cluster_entries: Array                  # (S, L, Cc) i32, global doc ids
+    cluster_lengths: Array                  # (S, L) i32
+    term_entries: Array                     # (S, V, Ct) i32
+    term_lengths: Array                     # (S, V) i32
+    opq: Optional[opq_mod.OPQCodebook]      # replicated (opq/pq codecs)
+    doc_codes: Optional[Array]              # (S, P, m) — opq/pq codecs
+    doc_embeddings: Optional[Array]         # (S, P, h) — flat codec
+    doc_assign: Array                       # (S, P) i32, φ(D) per shard
+    codec: str = "opq"
+    n_docs: int = 0                         # true corpus size (pre-padding)
+
+    @property
+    def n_shards(self) -> int:
+        return self.cluster_entries.shape[0]
+
+    @property
+    def docs_per_shard(self) -> int:
+        return self.doc_assign.shape[1]
+
+
+# --------------------------------------------------------------------------
+# partition (host-side, build-time)
+# --------------------------------------------------------------------------
+
+def _split_lists(entries: Array, n_shards: int, per: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Filter a global (L, C) entries plane into per-shard planes.
+
+    Keeps the global capacity C per shard and left-packs each row, so
+    the union over shards is exactly the global plane (order within a
+    list is preserved; it is irrelevant to scoring anyway).
+    """
+    e = np.asarray(entries)
+    n_lists, cap = e.shape
+    out = np.full((n_shards, n_lists, cap), PAD_DOC, np.int32)
+    lengths = np.zeros((n_shards, n_lists), np.int32)
+    cols = np.arange(cap)[None, :]
+    for s in range(n_shards):
+        mine = (e >= s * per) & (e < (s + 1) * per)
+        order = np.argsort(~mine, axis=1, kind="stable")   # left-pack
+        packed = np.take_along_axis(e, order, axis=1)
+        count = mine.sum(axis=1)
+        out[s] = np.where(cols < count[:, None], packed, PAD_DOC)
+        lengths[s] = count
+    return out, lengths
+
+
+def _split_docs(plane: Array, n_shards: int, per: int) -> np.ndarray:
+    """(n_docs, ...) -> (S, P, ...) with zero-padded tail rows (padded
+    rows are unreachable: no list entry ever points at them)."""
+    x = np.asarray(plane)
+    pad = n_shards * per - x.shape[0]
+    x = np.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x.reshape((n_shards, per) + x.shape[1:])
+
+
+def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
+    """Split a built single-device index into ``n_shards`` contiguous
+    document ranges.  Pure host-side numpy; run once at build time."""
+    assert n_shards >= 1
+    n_docs = index.n_docs
+    per = -(-n_docs // n_shards)    # ceil
+    c_entries, c_lengths = _split_lists(index.cluster_lists.entries,
+                                        n_shards, per)
+    t_entries, t_lengths = _split_lists(index.term_lists.entries,
+                                        n_shards, per)
+    return ShardedHybridIndex(
+        cluster_sel=index.cluster_sel,
+        term_sel=index.term_sel,
+        cluster_entries=jnp.asarray(c_entries),
+        cluster_lengths=jnp.asarray(c_lengths),
+        term_entries=jnp.asarray(t_entries),
+        term_lengths=jnp.asarray(t_lengths),
+        opq=index.opq,
+        doc_codes=(None if index.doc_codes is None
+                   else jnp.asarray(_split_docs(index.doc_codes,
+                                                n_shards, per))),
+        doc_embeddings=(None if index.doc_embeddings is None
+                        else jnp.asarray(_split_docs(index.doc_embeddings,
+                                                     n_shards, per))),
+        doc_assign=jnp.asarray(_split_docs(index.doc_assign, n_shards, per)),
+        codec=index.codec,
+        n_docs=n_docs)
+
+
+# --------------------------------------------------------------------------
+# placement
+# --------------------------------------------------------------------------
+
+def make_shard_mesh(n_shards: int, axis_name: str = SHARD_AXIS) -> Mesh:
+    """1-D serving mesh over the first ``n_shards`` local devices.
+
+    On CPU, emulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise RuntimeError(
+            f"need {n_shards} devices for {n_shards} shards, have "
+            f"{len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards}")
+    return compat.make_mesh((n_shards,), (axis_name,),
+                            devices=devs[:n_shards])
+
+
+def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
+               axis_name: str = SHARD_AXIS) -> ShardedHybridIndex:
+    """Place each shard's planes on its device (1/S of the doc-plane
+    bytes per device — the HBM win), selectors/codebook replicated."""
+    def put_sharded(x):
+        return (None if x is None else jax.device_put(
+            x, NamedSharding(mesh, P(axis_name, *(None,) * (x.ndim - 1)))))
+
+    def put_rep(t):
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, P())), t)
+
+    return dataclasses.replace(
+        sindex,
+        cluster_sel=put_rep(sindex.cluster_sel),
+        term_sel=put_rep(sindex.term_sel),
+        opq=None if sindex.opq is None else put_rep(sindex.opq),
+        cluster_entries=put_sharded(sindex.cluster_entries),
+        cluster_lengths=put_sharded(sindex.cluster_lengths),
+        term_entries=put_sharded(sindex.term_entries),
+        term_lengths=put_sharded(sindex.term_lengths),
+        doc_codes=put_sharded(sindex.doc_codes),
+        doc_embeddings=put_sharded(sindex.doc_embeddings),
+        doc_assign=put_sharded(sindex.doc_assign))
+
+
+# --------------------------------------------------------------------------
+# search
+# --------------------------------------------------------------------------
+
+def _shard_planes(sindex: ShardedHybridIndex) -> dict:
+    planes = {"cluster_entries": sindex.cluster_entries,
+              "cluster_lengths": sindex.cluster_lengths,
+              "term_entries": sindex.term_entries,
+              "term_lengths": sindex.term_lengths}
+    if sindex.codec in ("opq", "pq"):
+        planes["doc_codes"] = sindex.doc_codes
+    else:
+        planes["doc_embeddings"] = sindex.doc_embeddings
+    return planes
+
+
+def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
+                     kc: int, k2: int, top_r: int,
+                     use_kernel: bool = False,
+                     batch_axis: Optional[str] = None):
+    """shard_map'd per-shard search + merge for one static config.
+
+    Returns ``step(planes, rep, qe, qt) -> (doc_ids, scores, n_cands)``
+    (un-jitted, so ``launch/cells.py`` can lower it with explicit
+    in_shardings).  ``batch_axis`` optionally data-shards the query
+    batch over a second mesh axis (the production (data, model) layout:
+    queries over data, index shards over model); None replicates
+    queries, which is the 1-D serving-mesh case.
+    """
+
+    def body(shard, rep, qe, qt):
+        # shard_map hands this device's block with a leading length-1
+        # shard axis; drop it to get the local planes
+        shard = {k: v[0] for k, v in shard.items()}
+        # dispatch runs replicated (identical on every device)
+        cluster_ids, _ = cs_mod.select_for_query(
+            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]), qe, kc)
+        term_ids = ts_mod.query_terms(
+            ts_mod.TermSelector(avg_scores=rep["term_avg"]), qt, k2)
+        # gather + dedup over the LOCAL lists (docs are disjoint across
+        # shards, so per-shard dedup == global dedup)
+        cand_c = il.gather_candidates(
+            PaddedLists(shard["cluster_entries"], shard["cluster_lengths"]),
+            cluster_ids)
+        cand_t = il.gather_candidates(
+            PaddedLists(shard["term_entries"], shard["term_lengths"]),
+            term_ids)
+        cands = jnp.concatenate([cand_c, cand_t], axis=-1)
+        keep = il.dedup_mask(cands)
+        # global doc id -> local row in this shard's doc planes
+        offset = jax.lax.axis_index(axis_name) * per
+        local = jnp.clip(cands - offset, 0, per - 1)
+        if codec in ("opq", "pq"):
+            opq = opq_mod.OPQCodebook(
+                rotation=rep["opq_rotation"],
+                codebook=pq_mod.PQCodebook(codewords=rep["pq_codewords"]))
+            lut = opq_mod.adc_lut(opq, qe)
+            codes = shard["doc_codes"][local]
+            if use_kernel:
+                from repro.kernels.pq_adc import ops as adc_ops
+                scores = adc_ops.pq_adc(lut, codes)
+            else:
+                scores = pq_mod.adc_score(lut, codes)
+        else:
+            emb = shard["doc_embeddings"][local]
+            scores = jnp.einsum("bh,bch->bc", qe.astype(jnp.float32), emb)
+        scores = jnp.where(keep, scores, -jnp.inf)
+        # local top-R, then the cross-shard merge collective
+        top_s, top_ids = hi.topk_by_score(scores, cands, top_r)
+        all_s, all_ids = collectives.gather_topk(top_s, top_ids, axis_name)
+        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, top_r)
+        n_cand = jax.lax.psum(keep.sum(axis=-1).astype(jnp.int32), axis_name)
+        valid = jnp.isfinite(fin_s)
+        return (jnp.where(valid, fin_ids, PAD_DOC).astype(jnp.int32),
+                jnp.where(valid, fin_s, 0.0),
+                n_cand)
+
+    def specs_like(tree, leading):
+        return jax.tree.map(
+            lambda x: P(leading, *(None,) * (x.ndim - 1)) if leading
+            else P(*(None,) * x.ndim), tree)
+
+    qspec = P(batch_axis, None)
+
+    def run(planes, rep, qe, qt):
+        mapped = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(specs_like(planes, axis_name),
+                      specs_like(rep, None),
+                      qspec, qspec),
+            out_specs=(qspec, qspec, P(batch_axis)),
+            check=False)  # outputs are replicated over the shard axis by
+        #                   construction (merge ends in identical
+        #                   all-gathered data on every shard)
+        return mapped(planes, rep, qe, qt)
+
+    return run
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_search(mesh: Mesh, axis_name: str, codec: str, per: int,
+                     kc: int, k2: int, top_r: int, use_kernel: bool):
+    return jax.jit(make_search_step(mesh, axis_name, codec, per,
+                                    kc, k2, top_r, use_kernel))
+
+
+def search(sindex: ShardedHybridIndex, query_embeddings: Array,
+           query_tokens: Array, *, kc: int, k2: int, top_r: int,
+           mesh: Optional[Mesh] = None, axis_name: str = SHARD_AXIS,
+           use_kernel: bool = False) -> hi.SearchResult:
+    """Sharded Eq. 5 — same contract and bit-identical results as
+    :func:`repro.core.hybrid_index.search` (DESIGN.md §6).
+
+    ``mesh`` defaults to a fresh 1-D mesh over the first ``n_shards``
+    devices; pass the mesh from :func:`make_shard_mesh` (after
+    :func:`device_put`) to reuse placement across calls.
+    """
+    if mesh is None:
+        mesh = make_shard_mesh(sindex.n_shards, axis_name)
+    if mesh.shape[axis_name] != sindex.n_shards:
+        # a smaller axis would silently drop shards (each device keeps
+        # only block [0] of its slice) — corrupt results, so hard-fail
+        raise ValueError(
+            f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} "
+            f"but the index has {sindex.n_shards} shards")
+    rep = {"cluster_emb": sindex.cluster_sel.embeddings,
+           "term_avg": sindex.term_sel.avg_scores}
+    if sindex.codec in ("opq", "pq"):
+        rep["opq_rotation"] = sindex.opq.rotation
+        rep["pq_codewords"] = sindex.opq.codebook.codewords
+    fn = _compiled_search(mesh, axis_name, sindex.codec,
+                          sindex.docs_per_shard, kc, k2, top_r, use_kernel)
+    ids, scores, n_cand = fn(_shard_planes(sindex), rep,
+                             query_embeddings, query_tokens)
+    return hi.SearchResult(doc_ids=ids, scores=scores, n_candidates=n_cand)
+
+
+def candidate_budget(sindex: ShardedHybridIndex, kc: int, k2: int) -> int:
+    """Per-shard candidate slots per query (the latency proxy; equals
+    the single-device budget because shards keep the global capacity)."""
+    return (kc * sindex.cluster_entries.shape[2]
+            + k2 * sindex.term_entries.shape[2])

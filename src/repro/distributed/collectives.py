@@ -18,6 +18,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import compat
+
 PyTree = Any
 
 
@@ -31,7 +33,7 @@ def hierarchical_allreduce(grads: PyTree, data_axis: str = "data",
 
     Falls back to a flat psum for leaves too small to scatter.
     """
-    data_size = jax.lax.axis_size(data_axis)
+    data_size = compat.axis_size(data_axis)
 
     def one(g):
         if g.ndim == 0 or g.shape[0] % data_size != 0:
@@ -46,3 +48,23 @@ def hierarchical_allreduce(grads: PyTree, data_axis: str = "data",
 
 def pmean_metrics(metrics: PyTree, axis_names: tuple[str, ...]) -> PyTree:
     return jax.tree.map(lambda m: jax.lax.pmean(m, axis_names), metrics)
+
+
+def gather_topk(scores: jax.Array, ids: jax.Array, axis_name: str
+                ) -> tuple[jax.Array, jax.Array]:
+    """Merge per-shard top-R planes for the sharded HI² search
+    (DESIGN.md §6): all-gather each shard's (B, R) scores/ids along the
+    shard axis and lay them out as one (B, S·R) candidate plane per
+    query, ready for a final total-order top-R.
+
+    Communication is 2·S·B·R values (f32 + i32) — independent of corpus
+    size and list capacities, which is the point: only the tiny merged
+    frontier crosses the interconnect, never candidates or codes.  Runs
+    inside a ``shard_map`` body; every shard returns the identical
+    merged plane (the caller's final top-R is replicated work).
+    """
+    s = jax.lax.all_gather(scores, axis_name)            # (S, B, R)
+    i = jax.lax.all_gather(ids, axis_name)
+    n_shards, b, r = s.shape
+    return (jnp.moveaxis(s, 0, 1).reshape(b, n_shards * r),
+            jnp.moveaxis(i, 0, 1).reshape(b, n_shards * r))

@@ -53,6 +53,10 @@ DEFAULT_RULES: dict[str, AxisName] = {
     "nodes": None,
     "clusters": None,
     "candidates": "model",
+    # document-sharded HI² (DESIGN.md §6): the leading shard axis of
+    # every ShardedHybridIndex doc/list plane. On the production mesh it
+    # rides the model axis; serve.py uses a dedicated 1-D "shards" mesh.
+    "shards": "model",
 }
 
 _state = threading.local()

@@ -451,6 +451,50 @@ def _hi2_serve_cell(arch, shape) -> Cell:
                 donate_argnums=(), rules=rules)
 
 
+def _hi2_sharded_serve_cell(arch, shape, mesh: Mesh) -> Cell:
+    """Document-sharded HI² serving on the production mesh (DESIGN.md
+    §6): index shards ride the model axis, the query batch the data
+    axis.  Exercises the same shard_map step ``launch/serve.py`` runs
+    at CPU scale, at MS MARCO shapes."""
+    from repro.core import sharded_index as shi
+
+    n_shards = mesh.shape["model"]
+    per = -(-shape.n_docs // n_shards)
+    step = shi.make_search_step(mesh, "model", "opq", per, shape.kc,
+                                shape.k2, shape.top_r, batch_axis="data")
+
+    h, L, V = shape.hidden, shape.n_clusters, shape.vocab
+    planes_a = {
+        "cluster_entries": _sds((n_shards, L, shape.cluster_capacity),
+                                jnp.int32),
+        "cluster_lengths": _sds((n_shards, L), jnp.int32),
+        "term_entries": _sds((n_shards, V, shape.term_capacity), jnp.int32),
+        "term_lengths": _sds((n_shards, V), jnp.int32),
+        "doc_codes": _sds((n_shards, per, shape.pq_m),
+                          jnp.uint8 if shape.pq_k <= 256 else jnp.int32),
+    }
+    rep_a = {
+        "cluster_emb": _sds((L, h), jnp.float32),
+        "term_avg": _sds((V,), jnp.float32),
+        "opq_rotation": _sds((h, h), jnp.float32),
+        "pq_codewords": _sds((shape.pq_m, shape.pq_k, h // shape.pq_m),
+                             jnp.float32),
+    }
+    qe_a = _sds((shape.query_batch, h), jnp.float32)
+    qt_a = _sds((shape.query_batch, shape.query_len), jnp.int32)
+
+    def ns(*axes):
+        return NamedSharding(mesh, P(*axes))
+
+    planes_sh = {k: ns("model", *(None,) * (len(v.shape) - 1))
+                 for k, v in planes_a.items()}
+    rep_sh = {k: ns(*(None,) * len(v.shape)) for k, v in rep_a.items()}
+    return Cell(arch.arch_id, shape.name, "hi2/serve_sharded", step,
+                (planes_a, rep_a, qe_a, qt_a),
+                (planes_sh, rep_sh, ns("data", None), ns("data", None)),
+                donate_argnums=(), rules={})
+
+
 # --------------------------------------------------------------------------
 # dispatch
 # --------------------------------------------------------------------------
@@ -465,6 +509,9 @@ def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
     # decide rule overrides first
     rules: dict[str, Any] = {}
     if arch.family == "hi2":
+        if shape.kind == "hi2_serve_sharded":
+            # all shardings are explicit NamedShardings; no rule context
+            return _hi2_sharded_serve_cell(arch, shape, mesh)
         with shd.use_mesh(mesh, {"clusters": "model", "docs": "model",
                                  "vocab": "model"}):
             return _hi2_serve_cell(arch, shape)

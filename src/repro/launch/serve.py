@@ -1,15 +1,30 @@
 """Serving driver: a persisted HI² index behind a fixed-shape batched
-search step (the production query path).
+search step (the production query path, DESIGN.md §2).
 
-    PYTHONPATH=src python -m repro.launch.serve        # demo loop
+    PYTHONPATH=src python -m repro.launch.serve                 # 1 device
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+    PYTHONPATH=src python -m repro.launch.serve --shards 4      # sharded
 
-At pod scale the index planes are sharded over the model axis and the
-request batch over (pod, data) — `launch/cells.py::_hi2_serve_cell`
-lowers exactly this step for the dry-run; here the same search runs for
-real at CPU scale.
+Two serving layouts:
+
+  · :class:`Server` — the whole index on one device; request batches
+    padded to ``max_batch`` so one compiled program serves every
+    request size (no recompiles on the hot path).
+  · :class:`ShardedServer` — the document-sharded layout of
+    DESIGN.md §6: doc planes partitioned over a 1-D device mesh
+    (:mod:`repro.core.sharded_index`), per-shard search under
+    shard_map, top-R merged by one all-gather.  Bit-identical results,
+    1/S of the doc-plane HBM per device.
+
+Latency is governed by the static per-query candidate budget
+(:func:`repro.core.hybrid_index.candidate_budget` — the proxy all of
+``benchmarks/`` reports); ``launch/cells.py::_hi2_serve_cell`` and
+``_hi2_sharded_serve_cell`` lower these same steps at MS MARCO scale
+for the dry-run.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 from typing import Optional
@@ -20,6 +35,7 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import hybrid_index as hi
+from repro.core import sharded_index as shi
 
 
 @dataclasses.dataclass
@@ -29,6 +45,7 @@ class ServeConfig:
     top_r: int = 100
     max_batch: int = 64
     use_kernel: bool = False     # Pallas ADC on TPU
+    n_shards: int = 1            # >1 → document-sharded layout
 
 
 class Server:
@@ -54,14 +71,18 @@ class Server:
         qt = jnp.full((self.cfg.max_batch, query_len), -1, jnp.int32)
         jax.block_until_ready(self._search(self.index, qe, qt))
 
-    def query(self, query_emb: np.ndarray, query_tokens: np.ndarray
-              ) -> hi.SearchResult:
+    def _pad(self, query_emb: np.ndarray, query_tokens: np.ndarray):
         n = query_emb.shape[0]
         pad = self.cfg.max_batch - n
         assert pad >= 0, f"batch {n} exceeds max_batch {self.cfg.max_batch}"
         qe = jnp.asarray(np.pad(query_emb, ((0, pad), (0, 0))))
         qt = jnp.asarray(np.pad(query_tokens, ((0, pad), (0, 0)),
                                 constant_values=-1))
+        return n, qe, qt
+
+    def query(self, query_emb: np.ndarray, query_tokens: np.ndarray
+              ) -> hi.SearchResult:
+        n, qe, qt = self._pad(query_emb, query_tokens)
         res = self._search(self.index, qe, qt)
         self.n_served += n
         return hi.SearchResult(doc_ids=res.doc_ids[:n],
@@ -69,24 +90,60 @@ class Server:
                                n_candidates=res.n_candidates[:n])
 
 
-def main() -> None:
+class ShardedServer(Server):
+    """Document-sharded serving (DESIGN.md §6): same request contract
+    and bit-identical results as :class:`Server`, index split over
+    ``cfg.n_shards`` devices."""
+
+    def __init__(self, index: hi.HybridIndex,
+                 cfg: ServeConfig = ServeConfig(),
+                 mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh or shi.make_shard_mesh(cfg.n_shards)
+        self.index = shi.device_put(shi.partition(index, cfg.n_shards),
+                                    self.mesh)
+        self._search = lambda idx, qe, qt: shi.search(
+            idx, qe, qt, kc=cfg.kc, k2=cfg.k2, top_r=cfg.top_r,
+            mesh=self.mesh, use_kernel=cfg.use_kernel)
+        self.n_served = 0
+
+
+def make_server(index: hi.HybridIndex, cfg: ServeConfig) -> Server:
+    return ShardedServer(index, cfg) if cfg.n_shards > 1 else Server(index,
+                                                                     cfg)
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(description="HI² serving demo loop")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="document shards (devices); on CPU emulate with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--docs", type=int, default=8000)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--codec", default="opq", choices=["opq", "pq", "flat"])
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args(argv)
+
     from repro.data import synthetic
-    corpus = synthetic.generate(seed=0, n_docs=8000, n_queries=256,
+    corpus = synthetic.generate(seed=0, n_docs=args.docs,
+                                n_queries=args.queries,
                                 hidden=64, vocab_size=4096)
     index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
                      jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
-                     n_clusters=128, k1_terms=10, codec="opq", pq_m=8,
+                     n_clusters=128, k1_terms=10, codec=args.codec, pq_m=8,
                      pq_k=256, cluster_capacity=192, term_capacity=96,
                      kmeans_iters=8)
-    server = Server(index)
+    cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards)
+    server = make_server(index, cfg)
     server.warmup(64, corpus.query_tokens.shape[1])
     t0 = time.perf_counter()
-    for i in range(0, 256, 64):
-        server.query(corpus.query_emb[i:i + 64],
-                     corpus.query_tokens[i:i + 64])
+    for i in range(0, args.queries, args.batch):
+        server.query(corpus.query_emb[i:i + args.batch],
+                     corpus.query_tokens[i:i + args.batch])
     dt = time.perf_counter() - t0
+    layout = f"{args.shards} shard(s)" if args.shards > 1 else "1 device"
     print(f"served {server.n_served} queries in {dt:.3f}s "
-          f"({server.n_served / dt:.0f} q/s)")
+          f"({server.n_served / dt:.0f} q/s, {layout})")
 
 
 if __name__ == "__main__":

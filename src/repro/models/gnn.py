@@ -190,9 +190,9 @@ def forward_partitioned(params: dict, cfg: GatedGCNConfig,
     (edge i on shard s ⇒ dst[i] ∈ [s·n_local, (s+1)·n_local)); node
     planes are sharded by the same ranges. Falls back to :func:`forward`
     off-mesh."""
-    from jax import shard_map as _shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed import sharding as shd
+    from repro.distributed.compat import shard_map as _shard_map
 
     mesh = shd._mesh()
     if mesh is None:
@@ -251,7 +251,7 @@ def forward_partitioned(params: dict, cfg: GatedGCNConfig,
         body, mesh=mesh,
         in_specs=(P(), P(ax, None), P(ax), P(ax), P(ax)),
         out_specs=P(ax, None),
-        check_vma=False,
+        check=False,
     )(params, batch.node_feat, batch.edge_src, batch.edge_dst,
       batch.edge_mask)
     return logits

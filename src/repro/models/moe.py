@@ -196,9 +196,9 @@ def forward_shard_map(params: dict, x: Array, *, n_experts: int, top_k: int,
                       ) -> tuple[Array, MoEStats]:
     """shard_map MoE (see header). Falls back to :func:`forward` when no
     mesh is active (CPU unit tests)."""
-    from jax import shard_map as _shard_map
     from jax.sharding import PartitionSpec as P
     from repro.distributed import sharding as shd
+    from repro.distributed.compat import shard_map as _shard_map
 
     mesh = shd._mesh()
     if mesh is None:
@@ -248,7 +248,7 @@ def forward_shard_map(params: dict, x: Array, *, n_experts: int, top_k: int,
                   P(None, data_axes, "model"),         # w_up
                   P(None, "model", data_axes)),        # w_down (E, F, D)
         out_specs=(batch_spec, P(), P()),
-        check_vma=False,
+        check=False,
     )(x, params["router"]["w"], params["w_gate"], params["w_up"],
       params["w_down"])
     return out, MoEStats(aux_loss=aux, dropped_frac=dropped)

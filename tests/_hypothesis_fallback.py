@@ -1,0 +1,92 @@
+"""Deterministic stand-in for the slice of hypothesis this suite uses.
+
+CI installs the real hypothesis from requirements.txt; the accelerator
+image does not ship it and nothing may be pip-installed there.  Rather
+than skip the property tests, this shim *runs* them: ``@given`` draws
+``settings.max_examples`` examples from a fixed-seed RNG (first two
+draws pinned to the strategy's min/max so boundaries are always hit)
+and calls the test once per example.  No shrinking, no database — a
+failing example's kwargs are attached to the assertion message instead.
+
+Only the strategies the suite uses are implemented: ``integers``,
+``sampled_from``, ``booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self.draw = draw                  # rng -> value
+        self.boundaries = tuple(boundaries)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         boundaries=(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        xs = list(elements)
+        return _Strategy(lambda rng: rng.choice(xs),
+                         boundaries=(xs[0], xs[-1]))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5,
+                         boundaries=(False, True))
+
+
+class settings:
+    max_examples = 10
+    _profiles: dict = {}
+
+    def __init__(self, **kwargs):  # @settings(...) decorator form (unused)
+        self.kwargs = kwargs
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, max_examples=10, deadline=None, **_):
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name):
+        cls.max_examples = cls._profiles.get(name, 10)
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0x412)    # fixed seed: reproducible draws
+            names = sorted(strats)
+            for i in range(settings.max_examples):
+                if i < 2:                 # boundary examples first
+                    drawn = {n: strats[n].boundaries[i] for n in names
+                             if len(strats[n].boundaries) > i}
+                    drawn.update({n: strats[n].draw(rng) for n in names
+                                  if n not in drawn})
+                else:
+                    drawn = {n: strats[n].draw(rng) for n in names}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {drawn}") from e
+
+        # pytest must only see the non-strategy params (fixtures): expose
+        # a reduced signature and hide __wrapped__ so nothing unwraps it
+        fixture_params = [p for n, p in
+                          inspect.signature(fn).parameters.items()
+                          if n not in strats]
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

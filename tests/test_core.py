@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # accelerator image: no pip installs; CI has the real one
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (bm25, cluster_selector as cs, inverted_lists as il,
                         kmeans, opq, pq, pruning, term_selector as ts)

@@ -22,10 +22,11 @@ def _run(script: str) -> None:
 def test_sharded_kmeans_matches_psum_semantics():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import PartitionSpec as P
 from repro.core import kmeans
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.distributed import compat
+from repro.distributed.compat import shard_map
+mesh = compat.make_mesh((8,), ("data",))
 x = jax.random.normal(jax.random.key(0), (1024, 16))
 
 fit = shard_map(
@@ -45,10 +46,10 @@ assert cost < cost0, (cost, cost0)
 def test_hierarchical_allreduce_equals_flat():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
-from jax import shard_map
-from repro.distributed import collectives
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(AxisType.Auto,)*2)
+from jax.sharding import PartitionSpec as P
+from repro.distributed import collectives, compat
+from repro.distributed.compat import shard_map
+mesh = compat.make_mesh((2, 4), ("pod", "data"))
 g = {"w": jax.random.normal(jax.random.key(0), (16, 8)),
      "b": jax.random.normal(jax.random.key(1), (5,))}   # 5 not divisible by 4
 
@@ -58,7 +59,7 @@ flat = shard_map(
 hier = shard_map(
     lambda t: collectives.hierarchical_allreduce(t),
     mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
-    check_vma=False)  # RS->AR->AG reconstructs replication; not inferable
+    check=False)  # RS->AR->AG reconstructs replication; not inferable
 
 gs = {"w": jnp.tile(g["w"], (8, 1)), "b": jnp.tile(g["b"], 8)}
 a = flat({"w": gs["w"], "b": gs["b"]})
@@ -73,10 +74,10 @@ def test_sharded_hi2_search_matches_single_device():
     the single-device result (the paper's serving layout, DESIGN.md §2)."""
     _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import hybrid_index as hi
 from repro.data import synthetic
-from repro.distributed import sharding as shd
+from repro.distributed import compat, sharding as shd
 
 corpus = synthetic.generate(seed=0, n_docs=4000, n_queries=128,
                             hidden=32, vocab_size=2048, n_topics=32)
@@ -87,7 +88,7 @@ idx = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
 qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
 ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=20)
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 with shd.use_mesh(mesh, {"batch": "data"}):
     qe_s = jax.device_put(qe, NamedSharding(mesh, P("data")))
     qt_s = jax.device_put(qt, NamedSharding(mesh, P("data")))

@@ -55,10 +55,10 @@ def test_moe_capacity_drops_tokens():
 def test_shard_map_moe_equals_gspmd():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import moe
-from repro.distributed import sharding as shd
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.distributed import compat, sharding as shd
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 mp = moe.init(jax.random.key(0), 32, 64, 4)
 x = jax.random.normal(jax.random.key(5), (4, 16, 32))
 ref_out, _ = moe.forward(mp, x, n_experts=4, top_k=2, capacity_factor=8.0)
@@ -78,16 +78,15 @@ assert all(np.isfinite(np.asarray(v)).all() for v in jax.tree.leaves(g))
 def test_partitioned_gnn_equals_baseline():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.models import gnn
 from repro.data import graph as gdata
-from repro.distributed import sharding as shd
+from repro.distributed import compat, sharding as shd
 cfg = gnn.GatedGCNConfig(n_layers=3, d_hidden=16, d_feat=8, n_classes=4,
                          remat=False)
 params = gnn.init(jax.random.key(0), cfg)
 g = gdata.random_graph(0, n_nodes=200, n_edges=900, d_feat=8, n_classes=4)
 ref, _ = gnn.loss_fn(params, cfg, g)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 gp = gdata.partition_by_dst(g, 8)
 with shd.use_mesh(mesh):
     loss, _ = jax.jit(lambda p, b: gnn.loss_fn_partitioned(p, cfg, b))(params, gp)

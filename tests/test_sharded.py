@@ -1,0 +1,180 @@
+"""Sharded HI² correctness (DESIGN.md §6).
+
+The headline test proves the acceptance criterion: search over 4
+emulated CPU devices returns bit-identical top-R ids/scores to the
+single-device ``search()`` on a 10k-doc corpus.  Multi-device cases
+spawn a fresh interpreter with xla_force_host_platform_device_count
+(same pattern as tests/test_distributed.py); partition-invariant checks
+run in-process on 1 device.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hybrid_index as hi
+from repro.core import sharded_index as shi
+from repro.core.inverted_lists import PAD_DOC
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=4",
+            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+
+
+def _run(script: str) -> None:
+    r = subprocess.run([sys.executable, "-c", script], env=_ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+def _build_small_index(n_docs=3000, codec="opq"):
+    from repro.data import synthetic
+    corpus = synthetic.generate(seed=0, n_docs=n_docs, n_queries=32,
+                                hidden=32, vocab_size=1024, n_topics=16)
+    idx = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                   jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                   n_clusters=32, k1_terms=6, codec=codec, pq_m=4, pq_k=64,
+                   cluster_capacity=96, term_capacity=48, kmeans_iters=5)
+    return corpus, idx
+
+
+def test_partition_preserves_lists_exactly():
+    """Union of the per-shard lists == the global (truncated) lists."""
+    _, idx = _build_small_index()
+    for n_shards in (1, 3, 4):
+        sidx = shi.partition(idx, n_shards)
+        for global_lists, entries, lengths in (
+                (idx.cluster_lists, sidx.cluster_entries,
+                 sidx.cluster_lengths),
+                (idx.term_lists, sidx.term_entries, sidx.term_lengths)):
+            g = np.asarray(global_lists.entries)
+            e = np.asarray(entries)
+            assert e.shape == (n_shards,) + g.shape
+            per = sidx.docs_per_shard
+            for li in range(g.shape[0]):
+                want = sorted(d for d in g[li] if d != PAD_DOC)
+                got = sorted(d for s in range(n_shards)
+                             for d in e[s, li] if d != PAD_DOC)
+                assert got == want, (li, got, want)
+                for s in range(n_shards):
+                    docs = e[s, li][e[s, li] != PAD_DOC]
+                    assert (docs // per == s).all()   # shard owns its range
+            assert (np.asarray(lengths).sum(axis=0)
+                    == np.asarray(global_lists.lengths)).all()
+
+
+def test_partition_doc_planes_roundtrip():
+    _, idx = _build_small_index()
+    sidx = shi.partition(idx, 4)
+    per = sidx.docs_per_shard
+    assert sidx.n_shards == 4 and 4 * per >= idx.n_docs
+    codes = np.asarray(sidx.doc_codes).reshape(4 * per, -1)[:idx.n_docs]
+    np.testing.assert_array_equal(codes, np.asarray(idx.doc_codes))
+    assign = np.asarray(sidx.doc_assign).reshape(-1)[:idx.n_docs]
+    np.testing.assert_array_equal(assign, np.asarray(idx.doc_assign))
+
+
+def test_topk_by_score_total_order():
+    """The canonical top-k is permutation-invariant and breaks ties by
+    doc id — the property the sharded merge relies on."""
+    scores = jnp.asarray([[3.0, 1.0, 3.0, -jnp.inf, 2.0]])
+    ids = jnp.asarray([[7, 5, 2, 9, 4]], dtype=jnp.int32)
+    s, i = hi.topk_by_score(scores, ids, 4)
+    np.testing.assert_array_equal(np.asarray(i), [[2, 7, 4, 5]])  # tie: 2<7
+    np.testing.assert_array_equal(np.asarray(s), [[3.0, 3.0, 2.0, 1.0]])
+    # permuting the candidate layout cannot change the selection
+    perm = jnp.asarray([4, 2, 0, 3, 1])
+    s2, i2 = hi.topk_by_score(scores[:, perm], ids[:, perm], 4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    # r larger than the row PAD-fills the tail
+    s3, i3 = hi.topk_by_score(scores, ids, 7)
+    assert (np.asarray(i3)[0, 5:] == PAD_DOC).all()
+    assert np.isneginf(np.asarray(s3)[0, 5:]).all()
+
+
+def test_sharded_search_matches_single_device_10k():
+    """Acceptance criterion: 4 emulated devices, ≥10k docs, bit-identical
+    top-R ids and scores vs single-device search()."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import hybrid_index as hi, sharded_index as shi
+from repro.data import synthetic
+
+assert jax.device_count() == 4
+corpus = synthetic.generate(seed=0, n_docs=10_000, n_queries=64,
+                            hidden=32, vocab_size=2048, n_topics=32)
+idx = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+               jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+               n_clusters=64, k1_terms=8, codec="opq", pq_m=4, pq_k=64,
+               cluster_capacity=128, term_capacity=64, kmeans_iters=5)
+qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=20)
+
+mesh = shi.make_shard_mesh(4)
+sidx = shi.device_put(shi.partition(idx, 4), mesh)
+out = shi.search(sidx, qe, qt, kc=4, k2=4, top_r=20, mesh=mesh)
+np.testing.assert_array_equal(np.asarray(ref.doc_ids), np.asarray(out.doc_ids))
+np.testing.assert_array_equal(np.asarray(ref.scores), np.asarray(out.scores))
+np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                              np.asarray(out.n_candidates))
+""")
+
+
+def test_sharded_search_flat_codec_and_odd_sizes():
+    """Flat codec + corpus not divisible by the shard count + top_r
+    larger than the valid candidate pool (PAD-fill path)."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import hybrid_index as hi, sharded_index as shi
+from repro.data import synthetic
+
+corpus = synthetic.generate(seed=1, n_docs=4999, n_queries=32,
+                            hidden=32, vocab_size=1024, n_topics=16)
+idx = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+               jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+               n_clusters=32, k1_terms=6, codec="flat",
+               cluster_capacity=96, term_capacity=48, kmeans_iters=5)
+qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+ref = hi.search(idx, qe, qt, kc=3, k2=5, top_r=400)
+for n_shards in (2, 3, 4):
+    mesh = shi.make_shard_mesh(n_shards)
+    sidx = shi.device_put(shi.partition(idx, n_shards), mesh)
+    out = shi.search(sidx, qe, qt, kc=3, k2=5, top_r=400, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores))
+""")
+
+
+def test_sharded_serve_server():
+    """launch/serve.py --shards path end-to-end (batch padding + the
+    ShardedServer wrapper), equal to the single-device Server."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import hybrid_index as hi
+from repro.launch import serve
+from repro.data import synthetic
+
+corpus = synthetic.generate(seed=0, n_docs=3000, n_queries=48,
+                            hidden=32, vocab_size=1024, n_topics=16)
+idx = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+               jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+               n_clusters=32, k1_terms=6, codec="opq", pq_m=4, pq_k=64,
+               cluster_capacity=96, term_capacity=48, kmeans_iters=5)
+cfg1 = serve.ServeConfig(kc=4, k2=4, top_r=10, max_batch=32)
+cfg4 = serve.ServeConfig(kc=4, k2=4, top_r=10, max_batch=32, n_shards=4)
+s1 = serve.make_server(idx, cfg1)
+s4 = serve.make_server(idx, cfg4)
+assert type(s4).__name__ == "ShardedServer"
+for lo in (0, 32):   # full batch + ragged tail batch (16 queries)
+    a = s1.query(corpus.query_emb[lo:lo+32], corpus.query_tokens[lo:lo+32])
+    b = s4.query(corpus.query_emb[lo:lo+32], corpus.query_tokens[lo:lo+32])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+assert s4.n_served == 48
+""")
