@@ -30,6 +30,11 @@ def _parse_args(argv=None):
     ap.add_argument("--docs", type=int, default=20_000)
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--top-r", type=int, default=100)
+    # validated against the codec registry inside run() — the registry
+    # (and jax) must not be imported before XLA_FLAGS is set in main()
+    ap.add_argument("--codec", default=None,
+                    help="codec spec to serve (default: the registry "
+                         "default; any repro.core.codecs name works)")
     ap.add_argument("--out", default=None, help="also write JSON here")
     return ap.parse_args(argv)
 
@@ -39,8 +44,11 @@ def run(args) -> dict:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import hybrid_index as hi, sharded_index as shi
+    from repro.core import codecs, hybrid_index as hi, sharded_index as shi
     from repro.data import synthetic
+
+    codec = args.codec or codecs.DEFAULT
+    codecs.get(codec)   # fail fast (with the registered names) on typos
 
     def time_call(fn, *a, warmup=2, iters=5):
         import time
@@ -60,15 +68,17 @@ def run(args) -> dict:
                                 vocab_size=8192, n_topics=128)
     index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
                      jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
-                     n_clusters=256, k1_terms=12, codec="opq", pq_m=8,
+                     n_clusters=256, k1_terms=12, codec=codec, pq_m=8,
                      pq_k=256, cluster_capacity=256, term_capacity=128,
                      kmeans_iters=10)
     qe = jnp.asarray(corpus.query_emb)
     qt = jnp.asarray(corpus.query_tokens)
     kc, k2, top_r = 6, 8, args.top_r
 
-    def doc_plane_bytes(codes, entries_c, entries_t):
-        return (np.asarray(codes).nbytes + np.asarray(entries_c).nbytes
+    def doc_plane_bytes(doc_planes, entries_c, entries_t):
+        planes = sum(np.asarray(leaf).nbytes
+                     for leaf in jax.tree.leaves(doc_planes))
+        return (planes + np.asarray(entries_c).nbytes
                 + np.asarray(entries_t).nbytes)
 
     us = time_call(lambda: hi.search(index, qe, qt, kc=kc, k2=k2,
@@ -78,13 +88,15 @@ def run(args) -> dict:
         "n_docs": args.docs,
         "n_queries": args.queries,
         "top_r": top_r,
+        "codec": codec,
         "candidate_budget": hi.candidate_budget(index, kc, k2),
+        "candidate_cost": hi.candidate_cost(index, kc, k2, top_r),
         "devices": jax.device_count(),
         "baseline": {
             "us_per_batch": round(us, 1),
             "qps": round(args.queries / us * 1e6, 1),
             "doc_plane_bytes_per_device": doc_plane_bytes(
-                index.doc_codes, index.cluster_lists.entries,
+                index.doc_planes, index.cluster_lists.entries,
                 index.term_lists.entries),
         },
         "sharded": [],
@@ -106,8 +118,8 @@ def run(args) -> dict:
             "doc_ids_identical": bool(
                 (np.asarray(out.doc_ids) == np.asarray(ref.doc_ids)).all()),
             "doc_plane_bytes_per_device": doc_plane_bytes(
-                sidx.doc_codes[0], sidx.cluster_entries[0],
-                sidx.term_entries[0]),
+                jax.tree.map(lambda x: x[0], sidx.doc_planes),
+                sidx.cluster_entries[0], sidx.term_entries[0]),
         })
         n *= 2
     return report

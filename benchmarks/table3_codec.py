@@ -1,35 +1,144 @@
-"""Paper Table 3 (appendix C) — codec analysis: the same HI² lists
-evaluated with the PQ/OPQ codec vs the Flat codec (quality/size trade)."""
+"""Paper Table 3 (appendix C), generalized — the same HI² lists
+evaluated under every codec in the registry (DESIGN.md §7): the
+quality / bytes-per-doc / candidate-cost trade across index settings.
+
+    PYTHONPATH=src python benchmarks/table3_codec.py                # full
+    PYTHONPATH=src python benchmarks/table3_codec.py --smoke \\
+        --out results/BENCH_codec.json                              # CI
+
+Emits ``BENCH_codec.json`` and (with ``--check``) exits nonzero if the
+refine codec fails its contract: recall@R within 0.001 of the flat
+codec at ≤ 1.25× the pq candidate-cost proxy ("lossless at PQ cost").
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import hybrid_index as hi
+from repro.core import codecs, hybrid_index as hi, metrics
+from repro.data import synthetic
+
+#: tolerance/cost bounds of the refine contract (also enforced in CI)
+RECALL_SLACK = 0.001
+COST_RATIO = 1.25
 
 
-def run() -> list[dict]:
-    c = common.corpus()
-    qe, qt = common.queries()
+def _rows(corpus, *, n_clusters, kmeans_iters, index_kwargs,
+          kc, k2, top_r, specs) -> list[dict]:
+    de, dt = jnp.asarray(corpus.doc_emb), jnp.asarray(corpus.doc_tokens)
+    qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
     rows = []
-    for codec in ("opq", "pq", "flat"):
-        kwargs = dict(common.COMMON_INDEX)
-        kwargs["codec"] = codec
-        idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
-                       jnp.asarray(c.doc_tokens), c.vocab_size,
-                       n_clusters=common.N_CLUSTERS, kmeans_iters=10,
-                       **kwargs)
-        r = hi.search(idx, qe, qt, kc=common.KC, k2=common.K2,
-                      top_r=common.TOP_R)
-        rows.append(dict(codec=codec, **common.evaluate(r),
-                         index_bytes=common.index_size_bytes(idx)))
+    sel = {}     # cluster selector/assignment reused after the first build
+    for spec in specs:
+        kwargs = dict(index_kwargs)
+        kwargs["codec"] = spec
+        idx = hi.build(jax.random.key(0), de, dt, corpus.vocab_size,
+                       n_clusters=n_clusters, kmeans_iters=kmeans_iters,
+                       **kwargs, **sel)
+        # identical key+data ⇒ identical lists; skip KMeans (the
+        # dominant build cost) on the remaining codecs
+        sel = {"cluster_sel": idx.cluster_sel, "doc_assign": idx.doc_assign}
+        r = hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=top_r)
+        rows.append(dict(
+            codec=spec,
+            resolved=codecs.get(spec).name,
+            **{"R@10": metrics.recall_at_k(r.doc_ids, corpus.qrels, 10),
+               "R@100": metrics.recall_at_k(r.doc_ids, corpus.qrels, 100),
+               "MRR@10": metrics.mrr_at_k(r.doc_ids, corpus.qrels, 10),
+               "candidates": float(r.n_candidates.mean())},
+            bytes_per_doc=codecs.get(spec).bytes_per_doc(idx.doc_planes),
+            index_bytes=common.index_size_bytes(idx),
+            candidate_budget=hi.candidate_budget(idx, kc, k2),
+            candidate_cost=hi.candidate_cost(idx, kc, k2, top_r)))
     return rows
 
 
-def main():
-    for row in run():
-        print(row)
+def run(smoke: bool = False, specs=None) -> list[dict]:
+    """Sweep the registered codecs; ``smoke`` shrinks the corpus for CI."""
+    specs = list(specs) if specs else codecs.registered()
+    if smoke:
+        corpus = synthetic.generate(seed=0, n_docs=4000, n_queries=128,
+                                    hidden=32, vocab_size=2048, n_topics=32)
+        return _rows(corpus, n_clusters=64, kmeans_iters=5,
+                     index_kwargs=dict(k1_terms=8, pq_m=4, pq_k=64,
+                                       cluster_capacity=192,
+                                       term_capacity=96),
+                     kc=common.KC, k2=common.K2, top_r=common.TOP_R,
+                     specs=specs)
+    kwargs = dict(common.COMMON_INDEX)
+    kwargs.pop("codec")
+    return _rows(common.corpus(), n_clusters=common.N_CLUSTERS,
+                 kmeans_iters=10, index_kwargs=kwargs,
+                 kc=common.KC, k2=common.K2, top_r=common.TOP_R, specs=specs)
+
+
+def check(rows: list[dict]) -> tuple[str, list[str]]:
+    """The refine-over-pq contract: recall within ``RECALL_SLACK`` of
+    flat at ≤ ``COST_RATIO``× the pq cost proxy.
+
+    Rows are matched by *resolved* codec name, so parameterized sweeps
+    (``--codecs flat pq refine:pq:8``) still check.  Returns
+    ``(status, failures)``: status is ``"skipped"`` when the sweep
+    lacks a flat/pq/refine-over-pq triple (a partial ``--codecs`` run,
+    not a contract violation), else ``"checked"``.
+    """
+    def find(pred):
+        return next((r for r in rows if pred(r["resolved"])), None)
+
+    flat = find(lambda n: n == "flat")
+    pq = find(lambda n: n == "pq")
+    refine = find(lambda n: n.startswith("refine:pq"))
+    if not (flat and pq and refine):
+        return "skipped", []
+    failures = []
+    if refine["R@100"] < flat["R@100"] - RECALL_SLACK:
+        failures.append(
+            f"refine R@100 {refine['R@100']:.4f} < flat "
+            f"{flat['R@100']:.4f} - {RECALL_SLACK}")
+    if refine["candidate_cost"] > COST_RATIO * pq["candidate_cost"]:
+        failures.append(
+            f"refine cost {refine['candidate_cost']} > {COST_RATIO}x pq "
+            f"cost {pq['candidate_cost']}")
+    return "checked", failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus (CI scale)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_codec.json here")
+    ap.add_argument("--codecs", nargs="*", default=None,
+                    help="codec specs to sweep (default: the registry)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if the refine contract fails")
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke, specs=args.codecs)
+    status, failures = check(rows)
+    report = {"bench": "codec", "smoke": args.smoke, "rows": rows,
+              "refine_contract": {"recall_slack": RECALL_SLACK,
+                                  "cost_ratio": COST_RATIO,
+                                  "status": status,
+                                  "failures": failures}}
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.check:
+        if status == "skipped":
+            sys.exit("--check needs flat, pq and a refine:pq codec "
+                     "in the sweep")
+        if failures:
+            sys.exit("; ".join(failures))
 
 
 if __name__ == "__main__":

@@ -25,10 +25,12 @@ def main():
                      pq_k=256, cluster_capacity=256, term_capacity=128,
                      kmeans_iters=10)
 
-    # persist + restore the index (the serving fleet's startup path)
+    # persist + restore the index (the serving fleet's startup path);
+    # save_index records the codec spec so a restore against an index
+    # built with a different setting fails loudly
     with tempfile.TemporaryDirectory() as d:
-        path = ckpt.save(d, 0, index)
-        index = ckpt.restore(path, index)
+        path = ckpt.save_index(d, 0, index)
+        index = ckpt.restore_index(path, index)
         print(f"index persisted+restored from {path}")
 
     # serve batched requests

@@ -1,2 +1,3 @@
-from repro.checkpoint.checkpoint import save, restore, restore_resharded
+from repro.checkpoint.checkpoint import (save, save_index, restore,
+                                         restore_index, restore_resharded)
 from repro.checkpoint.manager import CheckpointManager

@@ -91,6 +91,35 @@ def restore(path: str, like: PyTree) -> PyTree:
         treedef, [jnp.asarray(a) for a in arrays])
 
 
+def save_index(directory: str, step: int, index: Any,
+               extra: Optional[dict] = None) -> str:
+    """Checkpoint a built HI² index, recording its codec spec in the
+    manifest so a restore against the wrong index setting fails loudly
+    instead of mis-deserializing planes (DESIGN.md §7).
+
+    The codec spec is *static* pytree metadata — it never changes the
+    leaf layout of two indexes built with the same codec — so this is
+    the only extra bookkeeping persistence needs.
+    """
+    extra = dict(extra or {})
+    extra["codec"] = index.codec
+    return save(directory, step, index, extra=extra)
+
+
+def restore_index(path: str, like: Any) -> Any:
+    """Restore an index checkpoint into the structure of ``like``,
+    validating the recorded codec spec when one was saved
+    (:func:`save_index`); plain :func:`save` checkpoints restore
+    unvalidated."""
+    saved = load_manifest(path).get("extra", {}).get("codec")
+    if saved is not None and saved != like.codec:
+        raise ValueError(
+            f"checkpoint at {path} was built with codec {saved!r} but "
+            f"the restore target uses {like.codec!r}; rebuild the "
+            f"target index with codec={saved!r}")
+    return restore(path, like)
+
+
 def restore_resharded(path: str, like: PyTree, shardings: PyTree) -> PyTree:
     """Restore and place each leaf under the given shardings — the elastic
     path used when the device count changed between save and restore."""

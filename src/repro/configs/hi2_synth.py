@@ -28,6 +28,7 @@ class HI2ServeShape:
     term_capacity: int = 1_024
     pq_m: int = 96
     pq_k: int = 256
+    codec: str = "opq"          # any repro.core.codecs registry spec
     kc: int = 30
     k2: int = 32
     top_r: int = 100
@@ -54,5 +55,11 @@ ARCH = registry.register(registry.ArchDef(
     make_reduced=lambda: HI2Config(),
     shapes={"serve_msmarco": HI2ServeShape("serve_msmarco"),
             "serve_msmarco_sharded":
-                HI2ShardedServeShape("serve_msmarco_sharded")},
+                HI2ShardedServeShape("serve_msmarco_sharded"),
+            # the refine index setting (DESIGN.md §7): sq8 stage-1 codes
+            # (768 B/doc, still 1/4 of flat) + fp16 refine plane, exact
+            # re-rank of the merged top-R′ frontier after the shard merge
+            "serve_msmarco_refine_sq8":
+                HI2ShardedServeShape("serve_msmarco_refine_sq8",
+                                     codec="refine:sq8:4")},
     extra=True))

@@ -1,0 +1,80 @@
+"""Codec registry — the string-keyed seam every layer resolves codecs
+through (DESIGN.md §7).
+
+``HybridIndex.codec`` stays a plain string (the static pytree field
+that keeps checkpoints and jit caches stable); this module turns it
+into a :class:`~repro.core.codecs.base.Codec`:
+
+    >>> codecs.get("opq")           # a registered base codec
+    >>> codecs.get("refine:pq:4")   # parameterized spec (factory args
+    ...                             #   after the first ':')
+    >>> codecs.registered()         # ['flat', 'opq', 'pq', 'refine', 'sq8']
+
+``registered()`` is what benchmarks/serve flags enumerate; an unknown
+name raises with the known names listed.  Register out-of-tree codecs
+with :func:`register` before building an index.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from repro.core.codecs import base as base
+from repro.core.codecs import flat as _flat
+from repro.core.codecs import pq as _pq
+from repro.core.codecs import refine as _refine
+from repro.core.codecs import sq8 as _sq8
+from repro.core.codecs.base import (Codec, RefineCtx, gather_rows,
+                                    plane_bytes_per_doc, single_device_ctx)
+
+#: the default index setting (the paper's evaluation codec, §5.1)
+DEFAULT = "opq"
+
+_FACTORIES: dict[str, Callable[..., Codec]] = {}
+
+
+def register(name: str, factory: Callable[..., Codec]) -> None:
+    """Register a codec factory under ``name``.  The factory receives
+    the ``:``-separated option strings of the spec (none for plain
+    names) and returns a :class:`Codec`."""
+    if name in _FACTORIES:
+        raise ValueError(f"codec {name!r} already registered")
+    _FACTORIES[name] = factory
+
+
+def registered() -> list[str]:
+    """Sorted registered codec names (each a valid ``get()`` spec)."""
+    return sorted(_FACTORIES)
+
+
+@functools.lru_cache(maxsize=None)
+def get(spec: str) -> Codec:
+    """Resolve a codec spec string (``name[:opt[:opt...]]``).
+
+    Cached per spec, so repeated lookups inside jitted search return
+    the same instance.
+    """
+    name, *opts = str(spec).split(":")
+    if name not in _FACTORIES:
+        raise ValueError(
+            f"unknown codec {spec!r}; registered codecs: "
+            f"{', '.join(registered())}")
+    return _FACTORIES[name](*opts)
+
+
+def _make_refine(base_name: str = _refine.DEFAULT_BASE,
+                 mult: str = str(_refine.DEFAULT_MULT)) -> Codec:
+    try:
+        mult = int(mult)
+    except ValueError:
+        raise ValueError(
+            f"bad refine option {mult!r}: the spec grammar is "
+            f"refine[:base[:mult]] with integer mult >= 1") from None
+    return _refine.RefineCodec(get(base_name), mult)
+
+
+register("flat", _flat.FlatCodec)
+register("pq", _pq.PQCodec)
+register("opq", _pq.OPQCodec)
+register("sq8", _sq8.SQ8Codec)
+register("refine", _make_refine)

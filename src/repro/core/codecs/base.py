@@ -1,0 +1,159 @@
+"""The Codec protocol — the pluggable scoring seam of HI² (DESIGN.md §7).
+
+A codec owns everything document-representation-specific on the search
+path, split into two pytrees that the index layers treat opaquely:
+
+    params      replicated per device: codebooks, rotations, per-dim
+                quantizer ranges.  May be ``None`` (flat).
+    doc_planes  dict of per-document arrays, every leaf (n_docs, ...):
+                codes, kept embeddings, refine embeddings.  This is the
+                part :func:`repro.core.sharded_index.partition` splits
+                over the shard axis.
+
+Search integration (``hybrid_index.search`` / ``sharded_index``):
+
+    scorer = codec.make_scorer(params, doc_planes, queries, use_kernel)
+    scores = scorer(candidate_rows)          # stage 1, all candidates
+    top    = topk_by_score(..., codec.refine_width(top_r))
+    top    = codec.refine(..., top_r, ctx)   # stage 2 (identity unless
+                                             # the codec re-ranks)
+
+``refine`` runs after top-k selection — and, on the sharded path, after
+the cross-shard merge — so a refining codec re-ranks the *same*
+(B, R′) frontier on both paths and the sharded result stays
+bit-identical to single-device search (DESIGN.md §7).  :class:`RefineCtx`
+abstracts the two environments: on one device ``gather`` is a plain row
+gather and ``psum`` the identity; under ``shard_map`` ``gather`` maps
+global doc ids to local rows, ``owned`` masks docs of other shards, and
+``psum`` sums the one owner's contribution across shards.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def gather_rows(plane: Array, ids: Array) -> Array:
+    """Row-gather a doc plane at candidate ids, tolerating PAD (-1).
+
+    The shared "safe candidate" pattern: clip ids to a valid row, gather,
+    and let the caller mask the garbage rows (PAD slots always carry
+    ``-inf`` scores downstream).  ``ids`` may be any shape; the result is
+    ``ids.shape + plane.shape[1:]``.
+    """
+    return plane[jnp.clip(ids, 0, None)]
+
+
+def plane_bytes_per_doc(doc_planes: PyTree) -> int:
+    """Per-document bytes of the doc planes (HBM accounting for the
+    README matrix and ``BENCH_codec.json``)."""
+    total = 0
+    for leaf in jax.tree.leaves(doc_planes):
+        row = 1
+        for d in leaf.shape[1:]:
+            row *= d
+        total += row * leaf.dtype.itemsize
+    return total
+
+
+class RefineCtx(NamedTuple):
+    """Environment hooks for the refine stage (single-device vs shard)."""
+    gather: Callable[[Array, Array], Array]   # (plane, (B,R) ids) -> rows
+    owned: Callable[[Array], Array]           # (B,R) ids -> bool mask
+    psum: Callable[[Array], Array]            # cross-shard sum (or id)
+
+
+def single_device_ctx() -> RefineCtx:
+    return RefineCtx(gather=gather_rows,
+                     owned=lambda ids: ids >= 0,
+                     psum=lambda x: x)
+
+
+class Codec:
+    """Base codec: train/encode/score plus the sharding + refine hooks.
+
+    Subclasses set ``name`` and implement ``train``/``encode``/
+    ``make_scorer``/``decode``/``abstract``; the defaults below give
+    non-refining codecs identity refine semantics and generic
+    partition/replicate/bytes accounting.
+    """
+
+    name: str = "?"
+
+    # --- build-time ------------------------------------------------------
+    def train(self, key: Array, embeddings: Array, *,
+              pq_m: int = 8, pq_k: int = 256) -> PyTree:
+        """Fit codec parameters on the corpus; returns the replicated
+        ``params`` pytree (``None`` when the codec is parameter-free)."""
+        return None
+
+    def encode(self, params: PyTree, embeddings: Array) -> dict:
+        """(n_docs, h) -> the per-document ``doc_planes`` dict."""
+        raise NotImplementedError
+
+    def decode(self, params: PyTree, doc_planes: dict) -> Array:
+        """Reconstruct (n_docs, h) f32 embeddings — the numerics oracle
+        used by the round-trip tests; not on the search path."""
+        raise NotImplementedError
+
+    def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
+                 pq_k: int = 256) -> tuple[PyTree, dict]:
+        """(params, doc_planes) as ShapeDtypeStructs — what
+        ``launch/cells.py`` lowers at MS MARCO scale without building."""
+        raise NotImplementedError
+
+    # --- search-time -----------------------------------------------------
+    def make_scorer(self, params: PyTree, doc_planes: dict, queries: Array,
+                    use_kernel: bool = False) -> Callable[[Array], Array]:
+        """Returns ``score(ids) -> (B, C) f32`` over candidate rows.
+
+        ``ids`` index rows of ``doc_planes`` (already shard-local on the
+        sharded path) and may contain PAD (-1): implementations gather
+        via :func:`gather_rows` and never branch on validity — invalid
+        slots are masked by the caller's dedup mask.
+        """
+        raise NotImplementedError
+
+    def refine_width(self, top_r: int) -> int:
+        """Stage-1 selection width R′ ≥ top_r (static).  Non-refining
+        codecs keep R′ = R, making :meth:`refine` the identity."""
+        return top_r
+
+    def refine(self, params: PyTree, doc_planes: dict, queries: Array,
+               scores: Array, ids: Array, top_r: int,
+               ctx: RefineCtx) -> tuple[Array, Array]:
+        """Re-rank the selected (B, R′) frontier down to (B, top_r).
+
+        Called with the total-order top-R′ (already merged across shards
+        on the sharded path).  The default is the identity — valid only
+        because ``refine_width`` is ``top_r`` for non-refining codecs.
+        """
+        return scores, ids
+
+    # --- sharding hooks --------------------------------------------------
+    def partition(self, doc_planes: dict,
+                  split: Callable[[Array], Array]) -> dict:
+        """Apply the document split ((n_docs, ...) -> (S, P, ...)) to
+        every doc plane; override to exclude or re-derive planes."""
+        return jax.tree.map(split, doc_planes)
+
+    def replicate(self, params: PyTree) -> PyTree:
+        """Params placement under sharding — replicated by default."""
+        return params
+
+    # --- accounting ------------------------------------------------------
+    def bytes_per_doc(self, doc_planes: dict) -> int:
+        return plane_bytes_per_doc(doc_planes)
+
+    def candidate_cost(self, budget: int, top_r: int) -> int:
+        """The latency proxy for one query: the stage-1 candidate budget
+        plus any refine work (each refined doc ≈ one exact candidate)."""
+        return budget
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"

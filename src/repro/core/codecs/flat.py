@@ -1,0 +1,38 @@
+"""Flat codec — full-precision embeddings, exact inner product
+(DESIGN.md §7).  The quality upper bound every other codec is measured
+against (paper Table 3); doc-plane cost is 4·h bytes/doc.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codecs import base
+
+Array = jax.Array
+
+
+class FlatCodec(base.Codec):
+    name = "flat"
+
+    def encode(self, params, embeddings: Array) -> dict:
+        return {"emb": jnp.asarray(embeddings, jnp.float32)}
+
+    def decode(self, params, doc_planes: dict) -> Array:
+        return doc_planes["emb"]
+
+    def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
+                 pq_k: int = 256):
+        return None, {"emb": jax.ShapeDtypeStruct((n_docs, hidden),
+                                                  jnp.float32)}
+
+    def make_scorer(self, params, doc_planes: dict, queries: Array,
+                    use_kernel: bool = False):
+        q = queries.astype(jnp.float32)
+        emb = doc_planes["emb"]
+
+        def score(ids: Array) -> Array:
+            rows = base.gather_rows(emb, ids)            # (B, C, h)
+            return jnp.einsum("bh,bch->bc", q, rows)
+
+        return score

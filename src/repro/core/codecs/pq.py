@@ -1,0 +1,102 @@
+"""PQ and OPQ codecs (paper §3.2, Eq. 3–4; DESIGN.md §7).
+
+``PQCodec`` quantizes each embedding to ``m`` sub-codeword ids and
+scores candidates by ADC (per-query LUT + gather-sum; the Pallas kernel
+``repro.kernels.pq_adc`` on TPU, the jnp oracle otherwise).  ``OPQCodec``
+*composes* PQ with a learned orthogonal rotation — its params are an
+:class:`repro.core.opq.OPQCodebook` wrapping the same
+:class:`repro.core.pq.PQCodebook`, and scoring reduces to plain PQ once
+the query is rotated.  Codes are stored uint8 when ``k ≤ 256`` (Faiss's
+layout: 4× less HBM and gather traffic than i32 — §Perf, asserted
+equivalent by ``tests/test_perf_impls.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import opq as opq_mod
+from repro.core import pq as pq_mod
+from repro.core.codecs import base
+
+Array = jax.Array
+
+
+def _pack_codes(codes: Array, k: int) -> Array:
+    return codes.astype(jnp.uint8) if k <= 256 else codes
+
+
+def _code_dtype(k: int):
+    return jnp.uint8 if k <= 256 else jnp.int32
+
+
+def _adc_scorer(lut: Array, codes_plane: Array, use_kernel: bool):
+    def score(ids: Array) -> Array:
+        codes = base.gather_rows(codes_plane, ids)       # (B, C, m)
+        if use_kernel:
+            from repro.kernels.pq_adc import ops as adc_ops
+            return adc_ops.pq_adc(lut, codes)
+        return pq_mod.adc_score(lut, codes)
+
+    return score
+
+
+class PQCodec(base.Codec):
+    name = "pq"
+
+    def train(self, key: Array, embeddings: Array, *, pq_m: int = 8,
+              pq_k: int = 256) -> pq_mod.PQCodebook:
+        return pq_mod.train_pq(key, embeddings.astype(jnp.float32),
+                               m=pq_m, k=pq_k)
+
+    def encode(self, params: pq_mod.PQCodebook, embeddings: Array) -> dict:
+        return {"codes": _pack_codes(pq_mod.encode(params, embeddings),
+                                     params.k)}
+
+    def decode(self, params: pq_mod.PQCodebook, doc_planes: dict) -> Array:
+        return pq_mod.decode(params, doc_planes["codes"].astype(jnp.int32))
+
+    def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
+                 pq_k: int = 256):
+        sds = jax.ShapeDtypeStruct
+        params = pq_mod.PQCodebook(
+            codewords=sds((pq_m, pq_k, hidden // pq_m), jnp.float32))
+        return params, {"codes": sds((n_docs, pq_m), _code_dtype(pq_k))}
+
+    def make_scorer(self, params: pq_mod.PQCodebook, doc_planes: dict,
+                    queries: Array, use_kernel: bool = False):
+        lut = pq_mod.adc_lut(params, queries)            # (B, m, k)
+        return _adc_scorer(lut, doc_planes["codes"], use_kernel)
+
+
+class OPQCodec(PQCodec):
+    name = "opq"
+
+    def train(self, key: Array, embeddings: Array, *, pq_m: int = 8,
+              pq_k: int = 256) -> opq_mod.OPQCodebook:
+        return opq_mod.train_opq(key, embeddings, m=pq_m, k=pq_k)
+
+    def encode(self, params: opq_mod.OPQCodebook, embeddings: Array) -> dict:
+        return {"codes": _pack_codes(opq_mod.encode(params, embeddings),
+                                     params.codebook.k)}
+
+    def decode(self, params: opq_mod.OPQCodebook, doc_planes: dict) -> Array:
+        # decode in rotated space, rotate back (R orthogonal: R⁻¹ = Rᵀ)
+        xr = pq_mod.decode(params.codebook,
+                           doc_planes["codes"].astype(jnp.int32))
+        return xr @ params.rotation.T
+
+    def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
+                 pq_k: int = 256):
+        sds = jax.ShapeDtypeStruct
+        cb, planes = PQCodec.abstract(self, n_docs, hidden,
+                                      pq_m=pq_m, pq_k=pq_k)
+        params = opq_mod.OPQCodebook(
+            rotation=sds((hidden, hidden), jnp.float32), codebook=cb)
+        return params, planes
+
+    def make_scorer(self, params: opq_mod.OPQCodebook, doc_planes: dict,
+                    queries: Array, use_kernel: bool = False):
+        # <xR, c> = <x, cRᵀ>: rotating the query reduces OPQ to PQ (Eq. 4)
+        lut = opq_mod.adc_lut(params, queries)
+        return _adc_scorer(lut, doc_planes["codes"], use_kernel)

@@ -1,0 +1,94 @@
+"""Two-stage refine codec (DESIGN.md §7) — wrap any base codec with an
+exact re-rank of the top-R′ frontier against fp16 embeddings.
+
+Stage 1 scores every candidate with the base codec (cheap, lossy) and
+selects the total-order top-R′, R′ = mult·R.  Stage 2 gathers the fp16
+embeddings of just those R′ docs, rescores them with an exact f32 inner
+product, and takes the final total-order top-R.  The refine budget is
+R′ extra exact-scored docs per query — tiny next to the stage-1
+candidate budget — and buys back the base codec's quantization loss:
+"lossless at PQ cost" up to fp16 rounding of the refine plane (with
+R′ ≥ the whole candidate budget the ranking is the flat codec's over
+fp16-rounded embeddings — bitwise equal to flat when the embeddings
+are fp16-representable, as tests/test_codecs.py constructs; in general
+within fp16 epsilon, which the BENCH_codec.json recall contract
+bounds at ≤ 0.001 recall@100).
+
+Shard story: refine runs strictly AFTER the cross-shard merge, so both
+paths re-rank the identical (B, R′) frontier.  Each shard scores only
+the frontier docs it owns (``ctx.owned``), contributes 0 for the rest,
+and a psum assembles per-doc scores computed exactly once — summing one
+owner's f32 value with zeros is exact, so the sharded result stays
+bit-identical to single-device search (the §6 contract, asserted for
+every registered codec by tests/test_sharded.py).
+
+Spec grammar: ``refine[:base[:mult]]`` — e.g. ``refine`` (over pq, R′=4R),
+``refine:opq``, ``refine:sq8:2``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codecs import base
+
+Array = jax.Array
+
+DEFAULT_BASE = "pq"
+DEFAULT_MULT = 4
+
+
+class RefineCodec(base.Codec):
+    def __init__(self, base_codec: base.Codec, mult: int = DEFAULT_MULT):
+        if mult < 1:
+            raise ValueError(f"refine mult must be >= 1, got {mult}")
+        self.base = base_codec
+        self.mult = int(mult)
+        self.name = f"refine:{base_codec.name}:{self.mult}"
+
+    # --- build-time: base planes + the fp16 refine plane -----------------
+    def train(self, key, embeddings, *, pq_m=8, pq_k=256):
+        return self.base.train(key, embeddings, pq_m=pq_m, pq_k=pq_k)
+
+    def encode(self, params, embeddings: Array) -> dict:
+        planes = dict(self.base.encode(params, embeddings))
+        planes["refine_emb"] = embeddings.astype(jnp.float16)
+        return planes
+
+    def decode(self, params, doc_planes: dict) -> Array:
+        # stage-2 representation — what the final ranking is computed on
+        return doc_planes["refine_emb"].astype(jnp.float32)
+
+    def abstract(self, n_docs, hidden, *, pq_m=8, pq_k=256):
+        params, planes = self.base.abstract(n_docs, hidden,
+                                            pq_m=pq_m, pq_k=pq_k)
+        planes = dict(planes)
+        planes["refine_emb"] = jax.ShapeDtypeStruct((n_docs, hidden),
+                                                    jnp.float16)
+        return params, planes
+
+    # --- search-time -----------------------------------------------------
+    def make_scorer(self, params, doc_planes, queries, use_kernel=False):
+        # stage 1 is the base codec; the refine plane is never gathered
+        # at candidate width
+        return self.base.make_scorer(params, doc_planes, queries,
+                                     use_kernel)
+
+    def refine_width(self, top_r: int) -> int:
+        return self.mult * top_r
+
+    def refine(self, params, doc_planes, queries, scores, ids, top_r,
+               ctx: base.RefineCtx):
+        from repro.core import hybrid_index as hi
+        emb = ctx.gather(doc_planes["refine_emb"], ids)   # (B, R', h)
+        exact = jnp.einsum("bh,brh->br", queries.astype(jnp.float32),
+                           emb.astype(jnp.float32))
+        exact = ctx.psum(jnp.where(ctx.owned(ids), exact, 0.0))
+        # slots beyond the valid frontier stay -inf and sort last
+        exact = jnp.where(jnp.isfinite(scores), exact, -jnp.inf)
+        return hi.topk_by_score(exact, ids, top_r)
+
+    # --- accounting ------------------------------------------------------
+    def candidate_cost(self, budget: int, top_r: int) -> int:
+        # each refined doc ≈ one exact (flat) candidate of gather+dot work
+        return budget + self.refine_width(top_r)

@@ -3,8 +3,14 @@
 Each document is referenced from the inverted lists of exactly **1
 embedding cluster** and **K₁ᵀ salient terms**.  A query is dispatched to
 **K^C clusters** and **≤ K₂ᵀ terms**; candidates from both list families
-are merged, deduplicated, scored by the codec (OPQ/PQ/Flat) and the
-top-R returned.
+are merged, deduplicated, scored by the codec and the top-R returned.
+
+The codec — how documents are stored and scored — is pluggable
+(:mod:`repro.core.codecs`, DESIGN.md §7): ``HybridIndex.codec`` is a
+spec string (static pytree field, so checkpoints and jit caches stay
+stable) resolved through the codec registry; the codec's replicated
+parameters and per-document planes live in ``codec_params`` /
+``doc_planes`` and are treated opaquely here.
 
 All search-time compute is fixed-shape jitted JAX (the search contract,
 DESIGN.md §2):
@@ -12,18 +18,22 @@ DESIGN.md §2):
     dispatch  : two matmul+top-k (cluster) / table-lookup+top-k (term)
     gather    : rows of the padded list planes → (B, budget) candidates
     dedup     : sort-based first-occurrence mask
-    scoring   : PQ ADC (LUT matmul + code gather-sum; Pallas kernel
+    scoring   : codec scorer over the candidate rows (e.g. PQ ADC —
+                LUT matmul + code gather-sum; Pallas kernel
                 ``repro.kernels.pq_adc`` on TPU, jnp oracle otherwise)
-    top-R     : total-order sort by (score desc, doc id asc) — see
+    top-R′    : total-order sort by (score desc, doc id asc) — see
                 :func:`topk_by_score` and DESIGN.md §6 (the deterministic
                 tie-break is what makes the document-sharded merge in
                 :mod:`repro.core.sharded_index` bit-identical to this
                 single-device path)
+    refine    : the codec's optional second stage (exact re-rank of the
+                R′ frontier down to R; identity for plain codecs)
 
 The index build runs once on host+device; searching never reshapes.
 The static per-query candidate count (:func:`candidate_budget`) is the
 latency proxy used throughout ``benchmarks/`` — it upper-bounds the
-paper's QL (queried length) and is what the fixed shapes pin down.
+paper's QL (queried length) and is what the fixed shapes pin down;
+:func:`candidate_cost` adds the codec's refine work on top.
 
 Scaling beyond one device's HBM is document sharding (DESIGN.md §6):
 :func:`repro.core.sharded_index.partition` splits the doc planes and
@@ -34,16 +44,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cluster_selector as cs_mod
+from repro.core import codecs
 from repro.core import inverted_lists as il
-from repro.core import opq as opq_mod
-from repro.core import pq as pq_mod
 from repro.core import term_selector as ts_mod
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
 
@@ -53,7 +62,7 @@ Array = jax.Array
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_lists", "term_lists",
-                 "opq", "doc_codes", "doc_embeddings", "doc_assign"],
+                 "codec_params", "doc_planes", "doc_assign"],
     meta_fields=["codec"])
 @dataclasses.dataclass(frozen=True)
 class HybridIndex:
@@ -61,15 +70,23 @@ class HybridIndex:
     term_sel: ts_mod.TermSelector
     cluster_lists: PaddedLists
     term_lists: PaddedLists
-    opq: Optional[opq_mod.OPQCodebook]      # codec state (opq/pq)
-    doc_codes: Optional[Array]              # (n_docs, m) i32
-    doc_embeddings: Optional[Array]         # (n_docs, h) — flat codec only
-    doc_assign: Array                       # φ(D), (n_docs,) i32
-    codec: str = "opq"                      # "opq" | "pq" | "flat" (static)
+    codec_params: Any               # replicated codec state (may be None)
+    doc_planes: dict                # per-doc planes, every leaf (n_docs, ...)
+    doc_assign: Array               # φ(D), (n_docs,) i32
+    codec: str = codecs.DEFAULT     # registry spec (static)
 
     @property
     def n_docs(self) -> int:
         return int(self.doc_assign.shape[0])
+
+    # convenience views of the codec planes (None when absent)
+    @property
+    def doc_codes(self) -> Optional[Array]:
+        return self.doc_planes.get("codes")
+
+    @property
+    def doc_embeddings(self) -> Optional[Array]:
+        return self.doc_planes.get("emb")
 
 
 # --------------------------------------------------------------------------
@@ -83,7 +100,7 @@ def build(key: Array,
           *,
           n_clusters: int,
           k1_terms: int,
-          codec: str = "opq",
+          codec: str = codecs.DEFAULT,
           pq_m: int = 8,
           pq_k: int = 256,
           cluster_capacity: Optional[int] = None,
@@ -98,14 +115,18 @@ def build(key: Array,
           ) -> HybridIndex:
     """Build HI² over a corpus.
 
-    The unsupervised path computes everything here (KMeans + BM25 + OPQ).
-    The supervised path passes pre-trained ``cluster_sel`` /
-    ``term_pos_scores`` / ``term_sel`` from the distillation trainer and
-    reuses the same list construction. ``use_clusters`` / ``use_terms``
-    expose the paper's ablations (w.o. Clus / w.o. Term, §5.3).
+    The unsupervised path computes everything here (KMeans + BM25 +
+    codec training).  The supervised path passes pre-trained
+    ``cluster_sel`` / ``term_pos_scores`` / ``term_sel`` from the
+    distillation trainer and reuses the same list construction.
+    ``use_clusters`` / ``use_terms`` expose the paper's ablations
+    (w.o. Clus / w.o. Term, §5.3).  ``codec`` is any
+    :func:`repro.core.codecs.get` spec (unknown names raise with the
+    registered list).
     """
-    n_docs, h = doc_embeddings.shape
-    k_cl, k_pq, k_ts = jax.random.split(key, 3)
+    codec_impl = codecs.get(codec)    # fail fast on unknown specs
+    n_docs, _ = doc_embeddings.shape
+    k_cl, k_codec, k_ts = jax.random.split(key, 3)
 
     # --- cluster side -----------------------------------------------------
     if cluster_sel is None:
@@ -143,30 +164,13 @@ def build(key: Array,
             lengths=jnp.zeros((vocab_size,), jnp.int32))
 
     # --- codec ------------------------------------------------------------
-    opq = None
-    doc_codes = None
-    kept_embeddings = None
-    if codec in ("opq", "pq"):
-        if codec == "opq":
-            opq = opq_mod.train_opq(k_pq, doc_embeddings, m=pq_m, k=pq_k)
-        else:  # plain PQ — identity rotation
-            cb = pq_mod.train_pq(k_pq, doc_embeddings, m=pq_m, k=pq_k)
-            opq = opq_mod.OPQCodebook(
-                rotation=jnp.eye(h, dtype=jnp.float32), codebook=cb)
-        doc_codes = opq_mod.encode(opq, doc_embeddings)
-        if pq_k <= 256:
-            # codes fit a byte (Faiss's uint8 layout): 4× less HBM and
-            # 4× less gather traffic on the candidate hot path (§Perf)
-            doc_codes = doc_codes.astype(jnp.uint8)
-    elif codec == "flat":
-        kept_embeddings = jnp.asarray(doc_embeddings, jnp.float32)
-    else:
-        raise ValueError(f"unknown codec {codec!r}")
+    codec_params = codec_impl.train(k_codec, doc_embeddings,
+                                    pq_m=pq_m, pq_k=pq_k)
+    doc_planes = codec_impl.encode(codec_params, doc_embeddings)
 
     return HybridIndex(cluster_sel=cluster_sel, term_sel=term_sel,
                        cluster_lists=cluster_lists, term_lists=term_lists,
-                       opq=opq, doc_codes=doc_codes,
-                       doc_embeddings=kept_embeddings,
+                       codec_params=codec_params, doc_planes=doc_planes,
                        doc_assign=jnp.asarray(doc_assign, jnp.int32),
                        codec=codec)
 
@@ -205,27 +209,14 @@ def topk_by_score(scores: Array, ids: Array, r: int) -> tuple[Array, Array]:
     return top_s, top_ids
 
 
-def _codec_scores(index: HybridIndex, queries: Array, candidates: Array,
-                  use_kernel: bool) -> Array:
-    safe = jnp.clip(candidates, 0, None)
-    if index.codec in ("opq", "pq"):
-        lut = opq_mod.adc_lut(index.opq, queries)            # (B, m, k)
-        codes = index.doc_codes[safe]                        # (B, C, m)
-        if use_kernel:
-            from repro.kernels.pq_adc import ops as adc_ops
-            return adc_ops.pq_adc(lut, codes)
-        return pq_mod.adc_score(lut, codes)
-    # flat codec
-    emb = index.doc_embeddings[safe]                         # (B, C, h)
-    return jnp.einsum("bh,bch->bc", queries.astype(jnp.float32), emb)
-
-
 @functools.partial(jax.jit,
                    static_argnames=("kc", "k2", "top_r", "use_kernel"))
 def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
            *, kc: int, k2: int, top_r: int,
            use_kernel: bool = False) -> SearchResult:
     """Eq. 5: A(Q) = A^C(Q) ∪ A^T(Q), then codec scoring + top-R."""
+    codec_impl = codecs.get(index.codec)
+
     # dispatch
     cluster_ids, _ = cs_mod.select_for_query(index.cluster_sel,
                                              query_embeddings, kc)
@@ -237,11 +228,18 @@ def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
     cands = jnp.concatenate([cand_c, cand_t], axis=-1)       # (B, budget)
 
     keep = il.dedup_mask(cands)
-    scores = _codec_scores(index, query_embeddings, cands, use_kernel)
-    scores = jnp.where(keep, scores, -jnp.inf)
+    scorer = codec_impl.make_scorer(index.codec_params, index.doc_planes,
+                                    query_embeddings, use_kernel)
+    scores = jnp.where(keep, scorer(cands), -jnp.inf)
 
-    # total-order top-R (handles budgets smaller than top_r by PAD-fill)
-    top_s, top_ids = topk_by_score(scores, cands, top_r)
+    # total-order top-R′ (handles budgets smaller than R′ by PAD-fill),
+    # then the codec's refine stage (identity unless it re-ranks)
+    top_s, top_ids = topk_by_score(scores, cands,
+                                   codec_impl.refine_width(top_r))
+    top_s, top_ids = codec_impl.refine(
+        index.codec_params, index.doc_planes, query_embeddings,
+        top_s, top_ids, top_r, codecs.single_device_ctx())
+
     valid = jnp.isfinite(top_s)
     return SearchResult(
         doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
@@ -254,11 +252,19 @@ def candidate_budget(index: HybridIndex, kc: int, k2: int) -> int:
     """Static per-query candidate slots — the latency proxy used by
     ``benchmarks/`` (DESIGN.md §2).
 
-    Search cost is dominated by gather + ADC over this many slots, and
-    because the search step is fixed-shape the compiled program's wall
-    time is monotone in it.  It upper-bounds the paper's measured QL
-    (queried length = unique candidates, reported per query as
-    ``SearchResult.n_candidates``); dedup only masks slots, it never
+    Search cost is dominated by gather + codec scoring over this many
+    slots, and because the search step is fixed-shape the compiled
+    program's wall time is monotone in it.  It upper-bounds the paper's
+    measured QL (queried length = unique candidates, reported per query
+    as ``SearchResult.n_candidates``); dedup only masks slots, it never
     shrinks the compute.
     """
     return kc * index.cluster_lists.capacity + k2 * index.term_lists.capacity
+
+
+def candidate_cost(index: HybridIndex, kc: int, k2: int, top_r: int) -> int:
+    """:func:`candidate_budget` plus the codec's refine work — the full
+    per-query latency proxy (a refining codec exact-scores another R′
+    docs after selection; DESIGN.md §7)."""
+    return codecs.get(index.codec).candidate_cost(
+        candidate_budget(index, kc, k2), top_r)

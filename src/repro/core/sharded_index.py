@@ -2,19 +2,28 @@
 
 A single-device :class:`~repro.core.hybrid_index.HybridIndex` caps the
 corpus at one device's HBM.  This module splits the *documents* (and
-with them the codec planes and the inverted-list entries) over a device
-mesh and runs the whole fixed-shape search of
+with them the codec doc planes and the inverted-list entries) over a
+device mesh and runs the whole fixed-shape search of
 :mod:`repro.core.hybrid_index` per shard under ``shard_map``:
 
     shard s owns the contiguous doc range [s·P, (s+1)·P)
 
-    replicated per device : cluster/term selectors, OPQ codebook, queries
-    sharded (leading axis) : doc_codes / doc_embeddings, and the list
-                             entry planes filtered to the shard's docs
+    replicated per device : cluster/term selectors, codec params, queries
+    sharded (leading axis) : every codec doc plane, and the list entry
+                             planes filtered to the shard's docs
 
-    per shard : dispatch → gather → dedup → ADC score → local top-R
-    merge     : all-gather of the (B, R) planes along the shard axis +
-                one more total-order top-R (collectives.gather_topk)
+    per shard : dispatch → gather → dedup → codec score → local top-R′
+    merge     : all-gather of the (B, R′) planes along the shard axis +
+                one more total-order top-R′ (collectives.gather_topk)
+    refine    : the codec's second stage on the merged frontier — each
+                shard exact-scores the frontier docs it owns, a psum
+                assembles them (identity for non-refining codecs)
+
+The codec is resolved through :mod:`repro.core.codecs` (DESIGN.md §7):
+this module never inspects codec names — the codec's ``partition`` hook
+splits its doc planes, its scorer runs on the shard-local rows, and its
+``refine`` hook sees the shard environment through a
+:class:`~repro.core.codecs.RefineCtx`.
 
 The partition happens AFTER global list construction (including
 capacity truncation), so the union of the per-shard lists is exactly
@@ -22,20 +31,21 @@ the single-device lists — no doc is scored on the sharded path that the
 single-device path would have truncated away, and vice versa.  Because
 each doc lives in exactly one shard, per-shard dedup is global dedup,
 and because top-R selection uses the total order of
-:func:`~repro.core.hybrid_index.topk_by_score` (score desc, id asc),
-the merged result is **bit-identical** to single-device ``search()``
-(asserted by ``tests/test_sharded.py``).
+:func:`~repro.core.hybrid_index.topk_by_score` (score desc, id asc) —
+and any refine stage re-ranks the already-merged frontier — the merged
+result is **bit-identical** to single-device ``search()`` for every
+registered codec (asserted by ``tests/test_sharded.py``).
 
 Per-shard planes keep the *global* list capacity, so the per-shard
 candidate budget equals the single-device budget; the win is HBM (each
-device holds 1/S of the codes) and throughput (S devices gather+score
-concurrently), not per-shard budget.
+device holds 1/S of the codec planes) and throughput (S devices
+gather+score concurrently), not per-shard budget.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +53,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cluster_selector as cs_mod
+from repro.core import codecs
 from repro.core import hybrid_index as hi
 from repro.core import inverted_lists as il
-from repro.core import opq as opq_mod
-from repro.core import pq as pq_mod
 from repro.core import term_selector as ts_mod
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
 from repro.distributed import collectives, compat
@@ -59,24 +68,23 @@ SHARD_AXIS = "shards"
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_entries",
-                 "cluster_lengths", "term_entries", "term_lengths", "opq",
-                 "doc_codes", "doc_embeddings", "doc_assign"],
+                 "cluster_lengths", "term_entries", "term_lengths",
+                 "codec_params", "doc_planes", "doc_assign"],
     meta_fields=["codec", "n_docs"])
 @dataclasses.dataclass(frozen=True)
 class ShardedHybridIndex:
     """HI² with every document-indexed plane carrying a leading shard
-    axis (S, ...).  Selector/codebook state is replicated."""
+    axis (S, ...).  Selector/codec-param state is replicated."""
     cluster_sel: cs_mod.ClusterSelector     # replicated
     term_sel: ts_mod.TermSelector           # replicated
     cluster_entries: Array                  # (S, L, Cc) i32, global doc ids
     cluster_lengths: Array                  # (S, L) i32
     term_entries: Array                     # (S, V, Ct) i32
     term_lengths: Array                     # (S, V) i32
-    opq: Optional[opq_mod.OPQCodebook]      # replicated (opq/pq codecs)
-    doc_codes: Optional[Array]              # (S, P, m) — opq/pq codecs
-    doc_embeddings: Optional[Array]         # (S, P, h) — flat codec
+    codec_params: Any                       # replicated codec state
+    doc_planes: dict                        # codec planes, leaves (S, P, ...)
     doc_assign: Array                       # (S, P) i32, φ(D) per shard
-    codec: str = "opq"
+    codec: str = codecs.DEFAULT
     n_docs: int = 0                         # true corpus size (pre-padding)
 
     @property
@@ -86,6 +94,15 @@ class ShardedHybridIndex:
     @property
     def docs_per_shard(self) -> int:
         return self.doc_assign.shape[1]
+
+    # convenience views matching HybridIndex (None when absent)
+    @property
+    def doc_codes(self) -> Optional[Array]:
+        return self.doc_planes.get("codes")
+
+    @property
+    def doc_embeddings(self) -> Optional[Array]:
+        return self.doc_planes.get("emb")
 
 
 # --------------------------------------------------------------------------
@@ -128,6 +145,7 @@ def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
     """Split a built single-device index into ``n_shards`` contiguous
     document ranges.  Pure host-side numpy; run once at build time."""
     assert n_shards >= 1
+    codec_impl = codecs.get(index.codec)
     n_docs = index.n_docs
     per = -(-n_docs // n_shards)    # ceil
     c_entries, c_lengths = _split_lists(index.cluster_lists.entries,
@@ -141,13 +159,10 @@ def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
         cluster_lengths=jnp.asarray(c_lengths),
         term_entries=jnp.asarray(t_entries),
         term_lengths=jnp.asarray(t_lengths),
-        opq=index.opq,
-        doc_codes=(None if index.doc_codes is None
-                   else jnp.asarray(_split_docs(index.doc_codes,
-                                                n_shards, per))),
-        doc_embeddings=(None if index.doc_embeddings is None
-                        else jnp.asarray(_split_docs(index.doc_embeddings,
-                                                     n_shards, per))),
+        codec_params=codec_impl.replicate(index.codec_params),
+        doc_planes=codec_impl.partition(
+            index.doc_planes,
+            lambda x: jnp.asarray(_split_docs(x, n_shards, per))),
         doc_assign=jnp.asarray(_split_docs(index.doc_assign, n_shards, per)),
         codec=index.codec,
         n_docs=n_docs)
@@ -176,7 +191,7 @@ def make_shard_mesh(n_shards: int, axis_name: str = SHARD_AXIS) -> Mesh:
 def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
                axis_name: str = SHARD_AXIS) -> ShardedHybridIndex:
     """Place each shard's planes on its device (1/S of the doc-plane
-    bytes per device — the HBM win), selectors/codebook replicated."""
+    bytes per device — the HBM win), selectors/codec params replicated."""
     def put_sharded(x):
         return (None if x is None else jax.device_put(
             x, NamedSharding(mesh, P(axis_name, *(None,) * (x.ndim - 1)))))
@@ -189,13 +204,12 @@ def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
         sindex,
         cluster_sel=put_rep(sindex.cluster_sel),
         term_sel=put_rep(sindex.term_sel),
-        opq=None if sindex.opq is None else put_rep(sindex.opq),
+        codec_params=put_rep(sindex.codec_params),
         cluster_entries=put_sharded(sindex.cluster_entries),
         cluster_lengths=put_sharded(sindex.cluster_lengths),
         term_entries=put_sharded(sindex.term_entries),
         term_lengths=put_sharded(sindex.term_lengths),
-        doc_codes=put_sharded(sindex.doc_codes),
-        doc_embeddings=put_sharded(sindex.doc_embeddings),
+        doc_planes=jax.tree.map(put_sharded, sindex.doc_planes),
         doc_assign=put_sharded(sindex.doc_assign))
 
 
@@ -204,15 +218,11 @@ def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
 # --------------------------------------------------------------------------
 
 def _shard_planes(sindex: ShardedHybridIndex) -> dict:
-    planes = {"cluster_entries": sindex.cluster_entries,
-              "cluster_lengths": sindex.cluster_lengths,
-              "term_entries": sindex.term_entries,
-              "term_lengths": sindex.term_lengths}
-    if sindex.codec in ("opq", "pq"):
-        planes["doc_codes"] = sindex.doc_codes
-    else:
-        planes["doc_embeddings"] = sindex.doc_embeddings
-    return planes
+    return {"cluster_entries": sindex.cluster_entries,
+            "cluster_lengths": sindex.cluster_lengths,
+            "term_entries": sindex.term_entries,
+            "term_lengths": sindex.term_lengths,
+            "codec": sindex.doc_planes}
 
 
 def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
@@ -223,16 +233,21 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
 
     Returns ``step(planes, rep, qe, qt) -> (doc_ids, scores, n_cands)``
     (un-jitted, so ``launch/cells.py`` can lower it with explicit
-    in_shardings).  ``batch_axis`` optionally data-shards the query
-    batch over a second mesh axis (the production (data, model) layout:
-    queries over data, index shards over model); None replicates
-    queries, which is the 1-D serving-mesh case.
+    in_shardings).  ``planes`` carries the shard-leading arrays with the
+    codec doc planes nested under ``"codec"``; ``rep`` the replicated
+    selector state with the codec params under ``"codec"``.
+    ``batch_axis`` optionally data-shards the query batch over a second
+    mesh axis (the production (data, model) layout: queries over data,
+    index shards over model); None replicates queries, which is the 1-D
+    serving-mesh case.
     """
+    codec_impl = codecs.get(codec)
+    r_prime = codec_impl.refine_width(top_r)
 
     def body(shard, rep, qe, qt):
         # shard_map hands this device's block with a leading length-1
         # shard axis; drop it to get the local planes
-        shard = {k: v[0] for k, v in shard.items()}
+        shard = jax.tree.map(lambda x: x[0], shard)
         # dispatch runs replicated (identical on every device)
         cluster_ids, _ = cs_mod.select_for_query(
             cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]), qe, kc)
@@ -251,25 +266,24 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
         # global doc id -> local row in this shard's doc planes
         offset = jax.lax.axis_index(axis_name) * per
         local = jnp.clip(cands - offset, 0, per - 1)
-        if codec in ("opq", "pq"):
-            opq = opq_mod.OPQCodebook(
-                rotation=rep["opq_rotation"],
-                codebook=pq_mod.PQCodebook(codewords=rep["pq_codewords"]))
-            lut = opq_mod.adc_lut(opq, qe)
-            codes = shard["doc_codes"][local]
-            if use_kernel:
-                from repro.kernels.pq_adc import ops as adc_ops
-                scores = adc_ops.pq_adc(lut, codes)
-            else:
-                scores = pq_mod.adc_score(lut, codes)
-        else:
-            emb = shard["doc_embeddings"][local]
-            scores = jnp.einsum("bh,bch->bc", qe.astype(jnp.float32), emb)
-        scores = jnp.where(keep, scores, -jnp.inf)
-        # local top-R, then the cross-shard merge collective
-        top_s, top_ids = hi.topk_by_score(scores, cands, top_r)
+        scorer = codec_impl.make_scorer(rep["codec"], shard["codec"], qe,
+                                        use_kernel)
+        scores = jnp.where(keep, scorer(local), -jnp.inf)
+        # local top-R′, the cross-shard merge collective, then the
+        # codec's refine stage on the (replicated) merged frontier —
+        # each shard scores only the frontier docs it owns and a psum
+        # assembles them, keeping the result bit-identical to the
+        # single-device path (DESIGN.md §7)
+        top_s, top_ids = hi.topk_by_score(scores, cands, r_prime)
         all_s, all_ids = collectives.gather_topk(top_s, top_ids, axis_name)
-        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, top_r)
+        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, r_prime)
+        ctx = codecs.RefineCtx(
+            gather=lambda plane, ids: plane[
+                jnp.clip(ids - offset, 0, per - 1)],
+            owned=lambda ids: (ids >= offset) & (ids < offset + per),
+            psum=lambda x: jax.lax.psum(x, axis_name))
+        fin_s, fin_ids = codec_impl.refine(rep["codec"], shard["codec"], qe,
+                                           fin_s, fin_ids, top_r, ctx)
         n_cand = jax.lax.psum(keep.sum(axis=-1).astype(jnp.int32), axis_name)
         valid = jnp.isfinite(fin_s)
         return (jnp.where(valid, fin_ids, PAD_DOC).astype(jnp.int32),
@@ -325,10 +339,8 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
             f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} "
             f"but the index has {sindex.n_shards} shards")
     rep = {"cluster_emb": sindex.cluster_sel.embeddings,
-           "term_avg": sindex.term_sel.avg_scores}
-    if sindex.codec in ("opq", "pq"):
-        rep["opq_rotation"] = sindex.opq.rotation
-        rep["pq_codewords"] = sindex.opq.codebook.codewords
+           "term_avg": sindex.term_sel.avg_scores,
+           "codec": sindex.codec_params}
     fn = _compiled_search(mesh, axis_name, sindex.codec,
                           sindex.docs_per_shard, kc, k2, top_r, use_kernel)
     ids, scores, n_cand = fn(_shard_planes(sindex), rep,

@@ -386,11 +386,14 @@ def _rec_retrieval_cell(arch, shape: sh.RecShape, cfg) -> Cell:
 
 def _hi2_abstract_index(shape):
     from repro.core import cluster_selector as cs_mod
+    from repro.core import codecs
     from repro.core import hybrid_index as hixm
     from repro.core import inverted_lists as il
-    from repro.core import opq as opq_mod, pq as pq_mod
     from repro.core import term_selector as ts_mod
     h, L, V = shape.hidden, shape.n_clusters, shape.vocab
+    # codec state as ShapeDtypeStructs, via the registry (DESIGN.md §7)
+    params_a, planes_a = codecs.get(shape.codec).abstract(
+        shape.n_docs, h, pq_m=shape.pq_m, pq_k=shape.pq_k)
     return hixm.HybridIndex(
         cluster_sel=cs_mod.ClusterSelector(
             embeddings=_sds((L, h), jnp.float32)),
@@ -401,16 +404,10 @@ def _hi2_abstract_index(shape):
         term_lists=il.PaddedLists(
             entries=_sds((V, shape.term_capacity), jnp.int32),
             lengths=_sds((V,), jnp.int32)),
-        opq=opq_mod.OPQCodebook(
-            rotation=_sds((h, h), jnp.float32),
-            codebook=pq_mod.PQCodebook(
-                codewords=_sds((shape.pq_m, shape.pq_k, h // shape.pq_m),
-                               jnp.float32))),
-        doc_codes=_sds((shape.n_docs, shape.pq_m),
-                       jnp.uint8 if shape.pq_k <= 256 else jnp.int32),
-        doc_embeddings=None,
+        codec_params=params_a,
+        doc_planes=planes_a,
         doc_assign=_sds((shape.n_docs,), jnp.int32),
-        codec="opq")
+        codec=shape.codec)
 
 
 def _hi2_serve_cell(arch, shape) -> Cell:
@@ -428,7 +425,6 @@ def _hi2_serve_cell(arch, shape) -> Cell:
     from repro.core import cluster_selector as cs_mod
     from repro.core import hybrid_index as hixm2
     from repro.core import inverted_lists as il
-    from repro.core import opq as opq_mod, pq as pq_mod
     from repro.core import term_selector as ts_mod
     index_sh = hixm2.HybridIndex(
         cluster_sel=cs_mod.ClusterSelector(embeddings=rep("clusters", None)),
@@ -437,13 +433,14 @@ def _hi2_serve_cell(arch, shape) -> Cell:
                                      lengths=rep("clusters")),
         term_lists=il.PaddedLists(entries=rep("vocab", None),
                                   lengths=rep("vocab")),
-        opq=opq_mod.OPQCodebook(rotation=rep(None, None),
-                                codebook=pq_mod.PQCodebook(
-                                    codewords=rep(None, None, None))),
-        doc_codes=rep("docs", None),
-        doc_embeddings=None,
+        # codec params replicated, every doc plane sharded on axis 0
+        codec_params=jax.tree.map(
+            lambda s: rep(*(None,) * s.ndim), index_a.codec_params),
+        doc_planes=jax.tree.map(
+            lambda s: rep("docs", *(None,) * (s.ndim - 1)),
+            index_a.doc_planes),
         doc_assign=rep("docs"),
-        codec="opq")
+        codec=shape.codec)
     rules = {"clusters": "model", "docs": "model", "vocab": "model"}
     return Cell(arch.arch_id, shape.name, "hi2/serve", serve,
                 (index_a, qe_a, qt_a),
@@ -456,29 +453,31 @@ def _hi2_sharded_serve_cell(arch, shape, mesh: Mesh) -> Cell:
     §6): index shards ride the model axis, the query batch the data
     axis.  Exercises the same shard_map step ``launch/serve.py`` runs
     at CPU scale, at MS MARCO shapes."""
+    from repro.core import codecs
     from repro.core import sharded_index as shi
 
     n_shards = mesh.shape["model"]
     per = -(-shape.n_docs // n_shards)
-    step = shi.make_search_step(mesh, "model", "opq", per, shape.kc,
+    step = shi.make_search_step(mesh, "model", shape.codec, per, shape.kc,
                                 shape.k2, shape.top_r, batch_axis="data")
 
     h, L, V = shape.hidden, shape.n_clusters, shape.vocab
+    # per-shard codec planes/params from the registry's abstract shapes
+    codec_params_a, codec_planes_a = codecs.get(shape.codec).abstract(
+        per, h, pq_m=shape.pq_m, pq_k=shape.pq_k)
     planes_a = {
         "cluster_entries": _sds((n_shards, L, shape.cluster_capacity),
                                 jnp.int32),
         "cluster_lengths": _sds((n_shards, L), jnp.int32),
         "term_entries": _sds((n_shards, V, shape.term_capacity), jnp.int32),
         "term_lengths": _sds((n_shards, V), jnp.int32),
-        "doc_codes": _sds((n_shards, per, shape.pq_m),
-                          jnp.uint8 if shape.pq_k <= 256 else jnp.int32),
+        "codec": jax.tree.map(
+            lambda s: _sds((n_shards,) + s.shape, s.dtype), codec_planes_a),
     }
     rep_a = {
         "cluster_emb": _sds((L, h), jnp.float32),
         "term_avg": _sds((V,), jnp.float32),
-        "opq_rotation": _sds((h, h), jnp.float32),
-        "pq_codewords": _sds((shape.pq_m, shape.pq_k, h // shape.pq_m),
-                             jnp.float32),
+        "codec": codec_params_a,
     }
     qe_a = _sds((shape.query_batch, h), jnp.float32)
     qt_a = _sds((shape.query_batch, shape.query_len), jnp.int32)
@@ -486,9 +485,9 @@ def _hi2_sharded_serve_cell(arch, shape, mesh: Mesh) -> Cell:
     def ns(*axes):
         return NamedSharding(mesh, P(*axes))
 
-    planes_sh = {k: ns("model", *(None,) * (len(v.shape) - 1))
-                 for k, v in planes_a.items()}
-    rep_sh = {k: ns(*(None,) * len(v.shape)) for k, v in rep_a.items()}
+    planes_sh = jax.tree.map(
+        lambda s: ns("model", *(None,) * (s.ndim - 1)), planes_a)
+    rep_sh = jax.tree.map(lambda s: ns(*(None,) * s.ndim), rep_a)
     return Cell(arch.arch_id, shape.name, "hi2/serve_sharded", step,
                 (planes_a, rep_a, qe_a, qt_a),
                 (planes_sh, rep_sh, ns("data", None), ns("data", None)),

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Optional
 
@@ -34,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.core import codecs
 from repro.core import hybrid_index as hi
 from repro.core import sharded_index as shi
 
@@ -55,16 +57,18 @@ class Server:
     def __init__(self, index: hi.HybridIndex, cfg: ServeConfig = ServeConfig()):
         self.index = index
         self.cfg = cfg
-        self._search = jax.jit(
-            lambda idx, qe, qt: hi.search(idx, qe, qt, kc=cfg.kc, k2=cfg.k2,
-                                          top_r=cfg.top_r,
-                                          use_kernel=cfg.use_kernel))
+        # hi.search is already jitted (static kc/k2/top_r/use_kernel) —
+        # bind the statics with partial instead of wrapping in a second
+        # jax.jit, which would pay nested-jit dispatch on every request
+        self._search = functools.partial(
+            hi.search, kc=cfg.kc, k2=cfg.k2, top_r=cfg.top_r,
+            use_kernel=cfg.use_kernel)
         self.n_served = 0
 
     @classmethod
     def from_checkpoint(cls, path: str, like: hi.HybridIndex,
                         cfg: ServeConfig = ServeConfig()) -> "Server":
-        return cls(ckpt.restore(path, like), cfg)
+        return cls(ckpt.restore_index(path, like), cfg)
 
     def warmup(self, hidden: int, query_len: int) -> None:
         qe = jnp.zeros((self.cfg.max_batch, hidden), jnp.float32)
@@ -120,9 +124,12 @@ def main(argv: Optional[list] = None) -> None:
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     ap.add_argument("--docs", type=int, default=8000)
     ap.add_argument("--queries", type=int, default=256)
-    ap.add_argument("--codec", default="opq", choices=["opq", "pq", "flat"])
+    ap.add_argument("--codec", default=codecs.DEFAULT,
+                    metavar="|".join(codecs.registered()),
+                    help="any registered codec spec, e.g. sq8 or refine:pq:4")
     ap.add_argument("--batch", type=int, default=64)
     args = ap.parse_args(argv)
+    codecs.get(args.codec)   # fail fast (with the registered names) on typos
 
     from repro.data import synthetic
     corpus = synthetic.generate(seed=0, n_docs=args.docs,

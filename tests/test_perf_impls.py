@@ -147,11 +147,14 @@ def test_uint8_codes_search_identical_to_int32():
                    n_clusters=32, k1_terms=6, codec="opq", pq_m=4, pq_k=64,
                    cluster_capacity=128, term_capacity=64, kmeans_iters=5)
     assert idx.doc_codes.dtype == jnp.uint8
-    idx32 = dataclasses.replace(idx,
-                                doc_codes=idx.doc_codes.astype(jnp.int32))
+    idx32 = dataclasses.replace(
+        idx, doc_planes={**idx.doc_planes,
+                         "codes": idx.doc_codes.astype(jnp.int32)})
     qe = jnp.asarray(corpus.query_emb)
     qt = jnp.asarray(corpus.query_tokens)
     a = hi.search(idx, qe, qt, kc=4, k2=4, top_r=20)
     b = hi.search(idx32, qe, qt, kc=4, k2=4, top_r=20)
     np.testing.assert_array_equal(np.asarray(a.doc_ids),
                                   np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
