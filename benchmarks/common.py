@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import flat, hybrid_index as hi, ivf, metrics
+from repro.core import hybrid_index as hi, metrics
 from repro.data import synthetic
 from repro.launch import train as tr
 

@@ -1,22 +1,45 @@
-"""Benchmark driver — one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+"""Benchmark driver — enumerates and dispatches EVERY ``benchmarks/*.py``
+entry point, so one command reproduces the full bench suite.  Prints
+``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --list      # what would run
+    PYTHONPATH=src python -m benchmarks.run --only table3_codec
+
+Every non-helper module in ``benchmarks/`` must have an entry in
+``DISPATCH`` below; the driver exits nonzero if a benchmark file exists
+without one, so new benchmarks cannot be silently dropped from the
+suite (the mistake that previously left ``table3_codec`` and the
+streaming bench out of this driver).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
 import jax
 
+#: benchmarks/ modules that are infrastructure, not benchmarks
+HELPER_MODULES = {"__init__", "common", "run", "check_regression"}
 
-def main() -> None:
-    from benchmarks import (common, fig3_tradeoff, fig4_ablation,
-                            table1_main, table2_robustness, table3_codec)
+_DIR = pathlib.Path(__file__).resolve().parent
+
+
+def discovered() -> list[str]:
+    """Module names of every benchmark entry point on disk."""
+    return sorted(p.stem for p in _DIR.glob("*.py")
+                  if p.stem not in HELPER_MODULES)
+
+
+def _run_core_search() -> None:
+    from benchmarks import common
     from repro.core import hybrid_index as hi
 
-    print("name,us_per_call,derived")
     qe, qt = common.queries()
-
-    # timed core search call (jit-compiled, the paper's QL analogue)
     idx = common.unsup_index()
     us = common.time_call(
         lambda: hi.search(idx, qe, qt, kc=common.KC, k2=common.K2,
@@ -24,43 +47,18 @@ def main() -> None:
     per_query = us / qe.shape[0]
     print(f"hi2_search_batch,{us:.0f},per_query_us={per_query:.1f}",
           flush=True)
-
     us64 = common.time_call(
         lambda: hi.search(idx, qe[:64], qt[:64], kc=common.KC, k2=common.K2,
                           top_r=common.TOP_R))
     print(f"hi2_search_64q,{us64:.0f},oracle_path", flush=True)
 
-    # Table 1
-    for row in table1_main.run():
-        print(f"table1/{row['method']},0,"
-              f"R@100={row['R@100']:.4f};MRR@10={row['MRR@10']:.4f};"
-              f"cands={row['candidates']:.0f};"
-              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
 
-    # Figure 3
-    for name, pts in fig3_tradeoff.run().items():
-        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
-        print(f"fig3/{name},0,{pts_s}", flush=True)
-
-    # Figure 4
-    for name, pts in fig4_ablation.run().items():
-        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
-        print(f"fig4/{name},0,{pts_s}", flush=True)
-
-    # Table 2
-    for row in table2_robustness.run():
-        print(f"table2/{row['model']}/{row['method']},0,"
-              f"R@100={row['R100']:.4f}", flush=True)
-
-    # Table 3
-    for row in table3_codec.run():
-        print(f"table3/{row['codec']},0,"
-              f"R@100={row['R@100']:.4f};"
-              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
-
-    # kernel microbenchmarks (oracle path timings; the Pallas bodies are
-    # TPU-targeted and validated in interpret mode by the tests)
+def _run_kernels() -> None:
+    # oracle-path timings; the Pallas bodies are TPU-targeted and
+    # validated in interpret mode by the tests
+    from benchmarks import common
     from repro.kernels.pq_adc import ref as adc_ref
+
     lut = jax.random.normal(jax.random.key(0), (64, 8, 256))
     codes = jax.random.randint(jax.random.key(1), (64, 2048, 8), 0, 256)
     f = jax.jit(adc_ref.pq_adc)
@@ -68,6 +66,133 @@ def main() -> None:
     scored = 64 * 2048
     print(f"kernel/pq_adc_oracle,{us:.0f},cands_per_s={scored/us*1e6:.3g}",
           flush=True)
+
+
+def _table1() -> None:
+    from benchmarks import table1_main
+    for row in table1_main.run():
+        print(f"table1/{row['method']},0,"
+              f"R@100={row['R@100']:.4f};MRR@10={row['MRR@10']:.4f};"
+              f"cands={row['candidates']:.0f};"
+              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
+
+
+def _table2() -> None:
+    from benchmarks import table2_robustness
+    for row in table2_robustness.run():
+        print(f"table2/{row['model']}/{row['method']},0,"
+              f"R@100={row['R100']:.4f}", flush=True)
+
+
+def _table3() -> None:
+    from benchmarks import table3_codec
+    for row in table3_codec.run():
+        print(f"table3/{row['codec']},0,"
+              f"R@100={row['R@100']:.4f};"
+              f"index_mb={row['index_bytes']/2**20:.1f}", flush=True)
+
+
+def _fig3() -> None:
+    from benchmarks import fig3_tradeoff
+    for name, pts in fig3_tradeoff.run().items():
+        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
+        print(f"fig3/{name},0,{pts_s}", flush=True)
+
+
+def _fig4() -> None:
+    from benchmarks import fig4_ablation
+    for name, pts in fig4_ablation.run().items():
+        pts_s = ";".join(f"({c:.0f}:{r:.4f})" for c, r in pts)
+        print(f"fig4/{name},0,{pts_s}", flush=True)
+
+
+def _subprocess_json(module: str, extra_args: list[str]) -> dict:
+    """Run a benchmark that must own its process (device emulation via
+    XLA_FLAGS must precede jax import) and parse its JSON stdout."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src:{env.get('PYTHONPATH', '')}".rstrip(":")
+    r = subprocess.run(
+        [sys.executable, str(_DIR / f"{module}.py"), *extra_args],
+        capture_output=True, text=True, cwd=str(_DIR.parent), env=env)
+    if r.returncode != 0:
+        sys.exit(f"{module} failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout[r.stdout.index("{"):])
+
+
+def _sharded_search() -> None:
+    rep = _subprocess_json("sharded_search",
+                           ["--devices", "2", "--docs", "4000",
+                            "--queries", "64"])
+    base = rep["baseline"]
+    print(f"sharded/baseline,{base['us_per_batch']:.0f},"
+          f"qps={base['qps']:.0f}", flush=True)
+    for e in rep["sharded"]:
+        print(f"sharded/{e['shards']}shards,{e['us_per_batch']:.0f},"
+              f"identical={e['doc_ids_identical']};"
+              f"speedup={e['speedup_vs_baseline']}", flush=True)
+
+
+def _streaming_updates() -> None:
+    rep = _subprocess_json("streaming_updates", ["--smoke", "--check"])
+    for p in rep["points"]:
+        print(f"streaming/fill{p['fill_fraction']:.2f},"
+              f"{p['search_us_per_batch']:.0f},R@100={p['R@100']:.4f}",
+              flush=True)
+    c = rep["compaction"]
+    print(f"streaming/compaction,{c['seconds']*1e6:.0f},"
+          f"equal_to_rebuild={c['equal_to_rebuild']};"
+          f"tombstones_absent={rep['deletes']['tombstones_absent']}",
+          flush=True)
+
+
+#: every benchmark entry point; the driver refuses to run if a
+#: benchmarks/*.py exists without a row here
+DISPATCH = {
+    "table1_main": _table1,
+    "table2_robustness": _table2,
+    "table3_codec": _table3,
+    "fig3_tradeoff": _fig3,
+    "fig4_ablation": _fig4,
+    "sharded_search": _sharded_search,
+    "streaming_updates": _streaming_updates,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run just these benchmarks")
+    ap.add_argument("--list", action="store_true",
+                    help="print the dispatch table and exit")
+    args = ap.parse_args(argv)
+
+    names = discovered()
+    missing = sorted(set(names) - set(DISPATCH))
+    if missing:
+        sys.exit(f"benchmarks without a DISPATCH entry in benchmarks/run.py:"
+                 f" {', '.join(missing)} — add one so `python -m "
+                 "benchmarks.run` reproduces the full suite")
+    stale = sorted(set(DISPATCH) - set(names))
+    if stale:
+        sys.exit(f"DISPATCH entries without a benchmarks/*.py file: "
+                 f"{', '.join(stale)}")
+    if args.list:
+        for n in names:
+            print(n)
+        return
+    selected = args.only if args.only else names
+    unknown = sorted(set(selected) - set(DISPATCH))
+    if unknown:
+        sys.exit(f"unknown benchmark(s): {', '.join(unknown)}; "
+                 f"known: {', '.join(names)}")
+
+    print("name,us_per_call,derived")
+    if not args.only:           # driver-level extras only on full runs
+        _run_core_search()
+    for name in selected:
+        DISPATCH[name]()
+    if not args.only:
+        _run_kernels()
 
 
 if __name__ == "__main__":

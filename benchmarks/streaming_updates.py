@@ -1,0 +1,195 @@
+"""Streaming-updates benchmark (DESIGN.md §8): search throughput vs
+delta fill-fraction, tombstone honesty, and compaction cost.
+
+    PYTHONPATH=src python benchmarks/streaming_updates.py --smoke \\
+        --out results/BENCH_streaming.json                          # CI
+    PYTHONPATH=src python benchmarks/streaming_updates.py           # full
+
+Builds a base index over most of the corpus, streams the held-out tail
+through ``add_docs`` in fill-fraction steps, deletes a slice, compacts,
+and reports per-step recall (exact, deterministic — the regression-gate
+fields) plus wall-clock timings (compared within tolerance by
+``benchmarks/check_regression.py``).  With ``--check`` it exits nonzero
+if a tombstoned doc surfaces or the compacted index is not bit-identical
+to a from-scratch rebuild over the survivors — the §8 contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs, hybrid_index as hi, metrics
+from repro.core import segments as seg
+from repro.data import synthetic
+
+FILL_STEPS = (0.25, 0.5, 1.0)
+
+
+def _time_call(fn, *a, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*a))
+    return (time.perf_counter() - t0) / iters * 1e6  # µs per call
+
+
+def run(args) -> dict:
+    codec = args.codec or codecs.DEFAULT
+    codecs.get(codec)    # fail fast on typos, listing registered names
+
+    if args.smoke:
+        n_docs, stream, n_queries = 4000, 512, 64
+        build_kwargs = dict(n_clusters=64, k1_terms=8, codec=codec,
+                            pq_m=4, pq_k=64, cluster_capacity=192,
+                            term_capacity=96, kmeans_iters=5)
+        vocab, hidden, topics = 2048, 32, 32
+    else:
+        n_docs, stream, n_queries = 20_000, 2048, 256
+        build_kwargs = dict(n_clusters=256, k1_terms=12, codec=codec,
+                            pq_m=8, pq_k=256, cluster_capacity=256,
+                            term_capacity=128, kmeans_iters=10)
+        vocab, hidden, topics = 8192, 64, 128
+
+    corpus = synthetic.generate(seed=0, n_docs=n_docs, n_queries=n_queries,
+                                hidden=hidden, vocab_size=vocab,
+                                n_topics=topics)
+    qe = jnp.asarray(corpus.query_emb)
+    qt = jnp.asarray(corpus.query_tokens)
+    kc, k2, top_r = 6, 8, args.top_r
+
+    t0 = time.perf_counter()
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), corpus.doc_emb[:-stream],
+        corpus.doc_tokens[:-stream], corpus.vocab_size,
+        delta_capacity=stream, **build_kwargs)
+    build_s = time.perf_counter() - t0
+
+    def point(fill_fraction: float) -> dict:
+        r = mut.search(qe, qt, kc=kc, k2=k2, top_r=top_r)
+        us = _time_call(lambda: mut.search(qe, qt, kc=kc, k2=k2,
+                                           top_r=top_r))
+        return {
+            "fill_fraction": fill_fraction,
+            "delta_docs": mut.delta_count,
+            "R@100": metrics.recall_at_k(r.doc_ids, corpus.qrels, 100),
+            "mean_candidates": float(np.asarray(r.n_candidates).mean()),
+            "search_us_per_batch": round(us, 1),
+        }
+
+    report = {
+        "bench": "streaming",
+        "smoke": bool(args.smoke),
+        "codec": codec,
+        "n_docs": n_docs,
+        "streamed_docs": stream,
+        "n_queries": n_queries,
+        "top_r": top_r,
+        "candidate_budget_base": hi.candidate_budget(mut.base, kc, k2),
+        "candidate_budget_mutable": mut.candidate_budget(kc, k2),
+        "candidate_cost_mutable": mut.candidate_cost(kc, k2, top_r),
+        "base_build_seconds": round(build_s, 2),
+        "points": [point(0.0)],
+    }
+
+    # --- stream the held-out tail in fill-fraction steps -----------------
+    tail_emb = corpus.doc_emb[-stream:]
+    tail_tok = corpus.doc_tokens[-stream:]
+    added_ids, done = [], 0
+    add_s = 0.0
+    for frac in FILL_STEPS:
+        upto = int(round(frac * stream))
+        t0 = time.perf_counter()
+        ids = mut.add_docs(tail_emb[done:upto], tail_tok[done:upto])
+        add_s += time.perf_counter() - t0
+        added_ids.append(ids)
+        done = upto
+        report["points"].append(point(frac))
+    added = np.concatenate(added_ids)
+    report["add_seconds_total"] = round(add_s, 2)
+    report["dropped_postings"] = mut.dropped_postings
+
+    # --- deletes: a slice of the streamed docs must vanish ---------------
+    doomed = added[:stream // 4]
+    mut.delete_docs(doomed)
+    r = mut.search(qe, qt, kc=kc, k2=k2, top_r=top_r)
+    surfaced = bool(np.isin(np.asarray(r.doc_ids), doomed).any())
+    report["deletes"] = {
+        "n_deleted": int(doomed.size),
+        "tombstones_absent": not surfaced,
+        "R@100": metrics.recall_at_k(r.doc_ids, corpus.qrels, 100),
+        "search_us_per_batch": round(
+            _time_call(lambda: mut.search(qe, qt, kc=kc, k2=k2,
+                                          top_r=top_r)), 1),
+    }
+
+    # --- compaction: cost + bit-identity vs a from-scratch rebuild -------
+    t0 = time.perf_counter()
+    compacted = mut.compact()
+    compact_s = time.perf_counter() - t0
+    emb, tok = mut.surviving_corpus()
+    rebuilt = hi.build(jax.random.key(0), jnp.asarray(emb),
+                       jnp.asarray(tok), corpus.vocab_size, **build_kwargs)
+    rc = compacted.search(qe, qt, kc=kc, k2=k2, top_r=top_r)
+    rr = hi.search(rebuilt, qe, qt, kc=kc, k2=k2, top_r=top_r)
+    equal = (np.array_equal(np.asarray(rc.doc_ids), np.asarray(rr.doc_ids))
+             and np.array_equal(np.asarray(rc.scores),
+                                np.asarray(rr.scores)))
+    # compaction renumbers survivors contiguously — map the qrels
+    # through the old->new correspondence before scoring recall
+    # (deleted positives keep -2: never retrievable, an honest miss)
+    old_to_new = np.full(mut.n_docs, -2, np.int64)
+    old_to_new[mut.survivors()] = np.arange(compacted.n_base)
+    qrels_new = old_to_new[corpus.qrels]
+    report["compaction"] = {
+        "seconds": round(compact_s, 2),
+        "equal_to_rebuild": bool(equal),
+        "n_live": compacted.n_base,
+        "R@100": metrics.recall_at_k(rc.doc_ids, qrels_new, 100),
+        "search_us_per_batch": round(
+            _time_call(lambda: compacted.search(qe, qt, kc=kc, k2=k2,
+                                                top_r=top_r)), 1),
+    }
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus (CI scale)")
+    ap.add_argument("--codec", default=None,
+                    help="codec spec (default: the registry default)")
+    ap.add_argument("--top-r", type=int, default=100)
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_streaming.json here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if a tombstoned doc surfaces or "
+                         "compact() diverges from a from-scratch rebuild")
+    args = ap.parse_args(argv)
+
+    report = run(args)
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.check:
+        failures = []
+        if not report["deletes"]["tombstones_absent"]:
+            failures.append("a tombstoned doc surfaced in the top-R")
+        if not report["compaction"]["equal_to_rebuild"]:
+            failures.append("compact() != from-scratch rebuild")
+        if failures:
+            sys.exit("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

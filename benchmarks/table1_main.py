@@ -8,7 +8,6 @@ latency), index size.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import hybrid_index as hi, metrics

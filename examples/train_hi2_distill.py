@@ -6,7 +6,6 @@ resume), builds the supervised index, and evaluates against HI²_unsup.
 
     PYTHONPATH=src python examples/train_hi2_distill.py
 """
-import tempfile
 
 import jax
 import jax.numpy as jnp

@@ -1,3 +1,7 @@
-from repro.checkpoint.checkpoint import (save, save_index, restore,
-                                         restore_index, restore_resharded)
+from repro.checkpoint.checkpoint import (save, save_index, save_mutable,
+                                         restore, restore_index,
+                                         restore_mutable, restore_resharded)
 from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save", "save_index", "save_mutable", "restore", "restore_index",
+           "restore_mutable", "restore_resharded", "CheckpointManager"]

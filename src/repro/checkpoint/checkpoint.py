@@ -120,6 +120,44 @@ def restore_index(path: str, like: Any) -> Any:
     return restore(path, like)
 
 
+def save_mutable(directory: str, step: int, mut: Any,
+                 extra: Optional[dict] = None) -> str:
+    """Checkpoint a :class:`repro.core.segments.MutableHybridIndex`:
+    base index + delta segment + tombstones + the retained corpus (the
+    compaction source of truth), with the codec spec and the mutation
+    counters recorded in the manifest (DESIGN.md §8).
+
+    Works for any object exposing the ``state_tree()`` /
+    ``state_extra()`` protocol; for a sharded mutable index pass its
+    host-side ``.mut`` — the sharded placement is reconstructed on
+    restore, exactly like the elastic resharding path of §5.
+    """
+    extra = dict(extra or {})
+    extra["codec"] = mut.base.codec
+    extra["mutable"] = mut.state_extra()
+    return save(directory, step, mut.state_tree(), extra=extra)
+
+
+def restore_mutable(path: str, like: Any) -> Any:
+    """Restore a mutable-index checkpoint into a fresh instance shaped
+    like ``like`` (same corpus/delta shapes), validating the recorded
+    codec spec.  The restored index mutates identically to the saved
+    one: list planes, eviction score planes, tombstones and counters
+    all round-trip."""
+    extra = load_manifest(path).get("extra", {})
+    saved = extra.get("codec")
+    if saved is not None and saved != like.base.codec:
+        raise ValueError(
+            f"checkpoint at {path} was built with codec {saved!r} but "
+            f"the restore target uses {like.base.codec!r}")
+    if "mutable" not in extra:
+        raise ValueError(
+            f"checkpoint at {path} is not a mutable-index checkpoint "
+            "(no 'mutable' manifest entry); use restore_index")
+    tree = restore(path, like.state_tree())
+    return type(like).from_state(tree, extra)
+
+
 def restore_resharded(path: str, like: PyTree, shardings: PyTree) -> PyTree:
     """Restore and place each leaf under the given shardings — the elastic
     path used when the device count changed between save and restore."""

@@ -7,9 +7,8 @@ with reasons (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
-from repro.configs import shapes as sh
 
 
 @dataclasses.dataclass(frozen=True)

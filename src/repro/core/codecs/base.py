@@ -29,7 +29,7 @@ global doc ids to local rows, ``owned`` masks docs of other shards, and
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -14,11 +14,9 @@ cross-device traffic is the (L, h) partial-sum planes, never the points.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

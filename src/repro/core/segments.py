@@ -1,0 +1,767 @@
+"""Streaming index mutations — delta segments, tombstones, compaction
+(DESIGN.md §8).
+
+The base :class:`~repro.core.hybrid_index.HybridIndex` is build-once:
+its planes are immutable and its shapes are baked into the compiled
+search program.  Live corpora churn, so this module adds the classic
+segment model on top of it without giving up the fixed-shape search
+contract of DESIGN.md §2:
+
+    MutableHybridIndex = immutable base + one delta segment + tombstones
+
+    add_docs()     assign through the *frozen* base selectors (cluster
+                   argmax, BM25 terms under the base corpus statistics),
+                   encode through the base codec params, append into
+                   fixed-capacity delta planes.  New docs get global ids
+                   ``n_base + slot``.
+    delete_docs()  set a tombstone bit; the mask is applied before the
+                   total-order top-R selection, so a deleted doc can
+                   never surface — not even as a refine-stage candidate.
+    compact()      fold the delta into a fresh base.  Implemented as a
+                   from-scratch :func:`repro.core.hybrid_index.build`
+                   over the surviving corpus with the original key, so
+                   the result is bit-identical to rebuilding — the
+                   correctness anchor (the §6 sharded-equals-single
+                   contract's streaming analogue), enforced for every
+                   registered codec by ``tests/test_segments.py``.
+
+Search stays one fixed-shape jitted program: the delta segment has
+static capacity, base and delta candidates are gathered and scored by
+the *same* dispatch/gather/codec ops as the base-only path, and the two
+frontiers merge through :func:`~repro.core.hybrid_index.topk_by_score`
+before the codec's refine stage — so every registered codec
+(flat/pq/opq/sq8/refine) works unmodified.  Mutations are host-side
+numpy (like the base build); they change plane *values*, never shapes,
+so serving never recompiles between compactions.
+
+:class:`ShardedMutableIndex` runs the same semantics over the
+document-sharded layout of DESIGN.md §6: each shard owns a contiguous
+slice of the delta slots next to its base doc range, adds are routed to
+the owning shard by the slot's global id, and the per-shard frontiers
+merge through the same total-order collective — bit-identical to the
+single-device mutable search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bm25
+from repro.core import cluster_selector as cs_mod
+from repro.core import codecs
+from repro.core import hybrid_index as hi
+from repro.core import inverted_lists as il
+from repro.core import sharded_index as shi
+from repro.core import term_selector as ts_mod
+from repro.core.inverted_lists import PAD_DOC, PaddedLists
+from repro.distributed import collectives, compat
+
+Array = jax.Array
+
+
+class DeltaFull(RuntimeError):
+    """Raised by ``add_docs`` when the delta segment has no free slots;
+    call ``compact()`` to fold the delta into a fresh base first."""
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cluster_lists", "term_lists", "doc_planes", "doc_assign"],
+    meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class DeltaSegment:
+    """The device-side view of the delta: fixed-capacity list planes over
+    the same list ids as the base, codec doc planes with ``capacity``
+    rows, entries holding *global* doc ids (``n_base + slot``)."""
+    cluster_lists: PaddedLists        # (L, Cc') i32
+    term_lists: PaddedLists           # (V, Ct') i32
+    doc_planes: dict                  # codec planes, leaves (capacity, ...)
+    doc_assign: Array                 # (capacity,) i32
+
+    @property
+    def capacity(self) -> int:
+        return int(self.doc_assign.shape[0])
+
+
+def _pair_gather(plane_pair, ids: Array, *, n_base: int, b_lo: int,
+                 b_size: int, d_lo: int, d_size: int) -> Array:
+    """RefineCtx gather over a (base_plane, delta_plane) pair.
+
+    Routes each global id to the segment that stores it: ids below
+    ``n_base`` hit the base plane at row ``id - b_lo``, ids at or above
+    hit the delta plane at row ``id - n_base - d_lo`` (``b_lo``/``d_lo``
+    are 0 on the single-device path and the shard offsets under
+    shard_map).  Out-of-segment rows are clipped garbage — callers mask
+    them via ``ctx.owned`` / finite-score checks.
+    """
+    plane_b, plane_d = plane_pair
+    rows_b = plane_b[jnp.clip(ids - b_lo, 0, b_size - 1)]
+    rows_d = plane_d[jnp.clip(ids - n_base - d_lo, 0, d_size - 1)]
+    is_delta = ids >= n_base
+    is_delta = is_delta.reshape(is_delta.shape
+                                + (1,) * (rows_b.ndim - is_delta.ndim))
+    return jnp.where(is_delta, rows_d, rows_b)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kc", "k2", "top_r", "use_kernel"))
+def search(base: hi.HybridIndex, delta: DeltaSegment, tombstones: Array,
+           query_embeddings: Array, query_tokens: Array, *, kc: int,
+           k2: int, top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+    """Eq. 5 over base ∪ delta minus tombstones — one fixed-shape jitted
+    program (DESIGN.md §8).
+
+    Dispatch runs once on the shared selectors; base and delta
+    candidates are gathered from their own list planes, deduped and
+    tombstone-masked together, scored by the codec against their own doc
+    planes, and the merged frontier goes through the total-order
+    ``topk_by_score`` *before* the codec's refine stage — so refine can
+    never resurrect a tombstoned doc (masked slots carry ``-inf`` and
+    stay ``-inf`` through re-ranking).  ``n_candidates`` counts unique
+    *live* docs evaluated.
+    """
+    codec_impl = codecs.get(base.codec)
+    n_base = base.doc_assign.shape[0]
+    cap = delta.capacity
+
+    cluster_ids, _ = cs_mod.select_for_query(base.cluster_sel,
+                                             query_embeddings, kc)
+    term_ids = ts_mod.query_terms(base.term_sel, query_tokens, k2)
+
+    cand_b = jnp.concatenate(
+        [il.gather_candidates(base.cluster_lists, cluster_ids),
+         il.gather_candidates(base.term_lists, term_ids)], axis=-1)
+    cand_d = jnp.concatenate(
+        [il.gather_candidates(delta.cluster_lists, cluster_ids),
+         il.gather_candidates(delta.term_lists, term_ids)], axis=-1)
+    cands = jnp.concatenate([cand_b, cand_d], axis=-1)
+
+    keep = il.dedup_mask(cands)
+    dead = tombstones[jnp.clip(cands, 0, n_base + cap - 1)]
+    live = keep & ~dead
+
+    scorer_b = codec_impl.make_scorer(base.codec_params, base.doc_planes,
+                                      query_embeddings, use_kernel)
+    scorer_d = codec_impl.make_scorer(base.codec_params, delta.doc_planes,
+                                      query_embeddings, use_kernel)
+    local_d = jnp.clip(cand_d - n_base, 0, cap - 1)
+    scores = jnp.concatenate([scorer_b(cand_b), scorer_d(local_d)], axis=-1)
+    scores = jnp.where(live, scores, -jnp.inf)
+
+    top_s, top_ids = hi.topk_by_score(scores, cands,
+                                      codec_impl.refine_width(top_r))
+    pair_planes = {k: (base.doc_planes[k], delta.doc_planes[k])
+                   for k in base.doc_planes}
+    ctx = codecs.RefineCtx(
+        gather=functools.partial(_pair_gather, n_base=n_base, b_lo=0,
+                                 b_size=n_base, d_lo=0, d_size=cap),
+        owned=lambda ids: ids >= 0,
+        psum=lambda x: x)
+    top_s, top_ids = codec_impl.refine(base.codec_params, pair_planes,
+                                       query_embeddings, top_s, top_ids,
+                                       top_r, ctx)
+
+    valid = jnp.isfinite(top_s)
+    return hi.SearchResult(
+        doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
+        scores=jnp.where(valid, top_s, 0.0),
+        n_candidates=live.sum(axis=-1).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# host-side mutable state
+# --------------------------------------------------------------------------
+
+def _insert_posting(entries: np.ndarray, scores: np.ndarray,
+                    lengths: np.ndarray, list_id: int, doc_id: int,
+                    score: float) -> bool:
+    """Append one (doc, score) posting to a fixed-capacity delta list.
+
+    Overflow evicts the lowest-scoring posting iff the newcomer beats it
+    — the same per-document-score truncation the base build applies
+    (DESIGN.md §2), done incrementally.  Returns False when the posting
+    was dropped instead.
+    """
+    cap = entries.shape[1]
+    n = int(lengths[list_id])
+    if n < cap:
+        entries[list_id, n] = doc_id
+        scores[list_id, n] = score
+        lengths[list_id] = n + 1
+        return True
+    j = int(np.argmin(scores[list_id]))
+    if score <= scores[list_id, j]:
+        return False
+    entries[list_id, j] = doc_id
+    scores[list_id, j] = score
+    return True
+
+
+class MutableHybridIndex:
+    """Base HI² + one fixed-capacity delta segment + a tombstone set.
+
+    Construct with :meth:`create` (which also runs the base build), then
+    ``add_docs`` / ``delete_docs`` / ``search`` / ``compact``.  Mutation
+    is host-side numpy; search operands are rebuilt lazily and cached,
+    so repeated searches between mutations transfer nothing.
+
+    The raw corpus (embeddings + tokens) is retained host-side: it is
+    the source of truth ``compact()`` rebuilds from and what makes the
+    rebuild bit-identical to a from-scratch build over the survivors.
+    """
+
+    def __init__(self, base: hi.HybridIndex, *, vocab_size: int, key: Array,
+                 build_kwargs: dict, delta_capacity: int,
+                 delta_cluster_capacity: int, delta_term_capacity: int,
+                 corpus_emb: np.ndarray, corpus_tokens: np.ndarray):
+        if delta_capacity < 1:
+            raise ValueError("delta_capacity must be >= 1")
+        self.base = base
+        self.vocab_size = int(vocab_size)
+        self.key = key
+        self.build_kwargs = dict(build_kwargs)
+        self.delta_capacity = int(delta_capacity)
+        self.delta_cluster_capacity = int(delta_cluster_capacity)
+        self.delta_term_capacity = int(delta_term_capacity)
+        self._corpus_emb = np.array(corpus_emb, np.float32)
+        self._corpus_tokens = np.array(corpus_tokens, np.int32)
+        self._stats = bm25.fit(jnp.asarray(self._corpus_tokens), vocab_size)
+
+        n_clusters = base.cluster_lists.n_lists
+        hidden = self._corpus_emb.shape[1]
+        cap = self.delta_capacity
+        self._dc_entries = np.full((n_clusters, delta_cluster_capacity),
+                                   PAD_DOC, np.int32)
+        self._dc_scores = np.full((n_clusters, delta_cluster_capacity),
+                                  -np.inf, np.float32)
+        self._dc_lengths = np.zeros((n_clusters,), np.int32)
+        self._dt_entries = np.full((vocab_size, delta_term_capacity),
+                                   PAD_DOC, np.int32)
+        self._dt_scores = np.full((vocab_size, delta_term_capacity),
+                                  -np.inf, np.float32)
+        self._dt_lengths = np.zeros((vocab_size,), np.int32)
+        # preallocate codec planes by encoding a zero block — exact
+        # shapes/dtypes for any registered codec, no per-codec branches
+        codec_impl = codecs.get(base.codec)
+        zero = codec_impl.encode(base.codec_params,
+                                 jnp.zeros((cap, hidden), jnp.float32))
+        self._delta_planes = {k: np.array(v) for k, v in zero.items()}
+        self._delta_assign = np.zeros((cap,), np.int32)
+        self._delta_emb = np.zeros((cap, hidden), np.float32)
+        self._delta_tokens = np.full((cap, self._corpus_tokens.shape[1]),
+                                     bm25.PAD_ID, np.int32)
+        self._tomb = np.zeros((self.n_base + cap,), bool)
+        self._count = 0
+        self.dropped_postings = 0
+        self._cache: Optional[tuple[DeltaSegment, Array]] = None
+
+    # --- construction ----------------------------------------------------
+    @classmethod
+    def create(cls, key: Array, doc_emb, doc_tokens, vocab_size: int, *,
+               delta_capacity: int = 1024,
+               delta_cluster_capacity: Optional[int] = None,
+               delta_term_capacity: Optional[int] = None,
+               **build_kwargs) -> "MutableHybridIndex":
+        """Build the base index and wrap it with an empty delta segment.
+
+        ``build_kwargs`` are forwarded verbatim to
+        :func:`repro.core.hybrid_index.build` — and replayed by
+        ``compact()``, so they must be plain JSON-able values
+        (ints/strings/bools), not pre-trained selector overrides.
+        """
+        for k in ("cluster_sel", "doc_assign", "term_sel",
+                  "term_pos_scores"):
+            if k in build_kwargs:
+                raise ValueError(
+                    f"build_kwargs[{k!r}] is not supported: compact() "
+                    "replays the build from scratch and cannot persist "
+                    "pre-trained selector state")
+        doc_emb = np.asarray(doc_emb, np.float32)
+        doc_tokens = np.asarray(doc_tokens, np.int32)
+        base = hi.build(key, jnp.asarray(doc_emb), jnp.asarray(doc_tokens),
+                        vocab_size, **build_kwargs)
+        n_clusters = base.cluster_lists.n_lists
+        k1 = int(build_kwargs["k1_terms"])
+        if delta_cluster_capacity is None:
+            delta_cluster_capacity = min(
+                delta_capacity,
+                max(8, 4 * -(-delta_capacity // n_clusters)))
+        if delta_term_capacity is None:
+            delta_term_capacity = min(
+                delta_capacity,
+                max(8, 4 * -(-delta_capacity * k1 // vocab_size)))
+        return cls(base, vocab_size=vocab_size, key=key,
+                   build_kwargs=build_kwargs, delta_capacity=delta_capacity,
+                   delta_cluster_capacity=delta_cluster_capacity,
+                   delta_term_capacity=delta_term_capacity,
+                   corpus_emb=doc_emb, corpus_tokens=doc_tokens)
+
+    # --- views -----------------------------------------------------------
+    @property
+    def n_base(self) -> int:
+        return self.base.n_docs
+
+    @property
+    def n_docs(self) -> int:
+        """Allocated doc ids (base + filled delta slots), incl. deleted."""
+        return self.n_base + self._count
+
+    @property
+    def delta_count(self) -> int:
+        return self._count
+
+    @property
+    def delta_fill(self) -> float:
+        return self._count / self.delta_capacity
+
+    @property
+    def n_deleted(self) -> int:
+        return int(self._tomb[:self.n_docs].sum())
+
+    @property
+    def n_live(self) -> int:
+        return self.n_docs - self.n_deleted
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        return self._tomb.copy()
+
+    def is_deleted(self, ids) -> np.ndarray:
+        return self._tomb[np.asarray(ids)]
+
+    # --- mutation --------------------------------------------------------
+    def add_docs(self, doc_emb, doc_tokens) -> np.ndarray:
+        """Append documents to the delta segment; returns their global ids.
+
+        Assignment uses the *frozen* base state: cluster = argmax against
+        the base selector, salient terms = BM25 under the base corpus
+        statistics (df/avgdl/s̄ refresh only at ``compact()``).  Raises
+        :class:`DeltaFull` when the segment has no free slots.
+        """
+        emb = np.atleast_2d(np.asarray(doc_emb, np.float32))
+        tokens = np.atleast_2d(np.asarray(doc_tokens, np.int32))
+        n_new = emb.shape[0]
+        if tokens.shape[0] != n_new:
+            raise ValueError(f"emb/tokens row mismatch: {n_new} vs "
+                             f"{tokens.shape[0]}")
+        width = self._corpus_tokens.shape[1]
+        if tokens.shape[1] > width:
+            raise ValueError(f"doc_tokens wider than the corpus "
+                             f"({tokens.shape[1]} > {width})")
+        if tokens.shape[1] < width:
+            tokens = np.pad(tokens, ((0, 0), (0, width - tokens.shape[1])),
+                            constant_values=bm25.PAD_ID)
+        if self._count + n_new > self.delta_capacity:
+            raise DeltaFull(
+                f"delta segment full: {self._count}/{self.delta_capacity} "
+                f"slots used, {n_new} more requested — compact() first")
+
+        assign = np.asarray(cs_mod.select_for_doc(self.base.cluster_sel,
+                                                  jnp.asarray(emb)))
+        a_scores = np.asarray(cs_mod.scores(self.base.cluster_sel,
+                                            jnp.asarray(emb)))
+        a_scores = a_scores[np.arange(n_new), assign]
+        pos = bm25.score_positions(jnp.asarray(tokens), self._stats)
+        k1 = int(self.build_kwargs["k1_terms"])
+        t_ids, t_scores = bm25.top_terms(jnp.asarray(tokens), pos, k1)
+        t_ids, t_scores = np.asarray(t_ids), np.asarray(t_scores)
+
+        codec_impl = codecs.get(self.base.codec)
+        enc = codec_impl.encode(self.base.codec_params, jnp.asarray(emb))
+        lo = self._count
+        for k, v in enc.items():
+            self._delta_planes[k][lo:lo + n_new] = np.asarray(v)
+        self._delta_emb[lo:lo + n_new] = emb
+        self._delta_tokens[lo:lo + n_new] = tokens
+        self._delta_assign[lo:lo + n_new] = assign
+
+        ids = self.n_base + lo + np.arange(n_new)
+        for i in range(n_new):
+            gid = int(ids[i])
+            if not _insert_posting(self._dc_entries, self._dc_scores,
+                                   self._dc_lengths, int(assign[i]), gid,
+                                   float(a_scores[i])):
+                self.dropped_postings += 1
+            for j in range(k1):
+                term = int(t_ids[i, j])
+                if term < 0:
+                    continue
+                if not _insert_posting(self._dt_entries, self._dt_scores,
+                                       self._dt_lengths, term, gid,
+                                       float(t_scores[i, j])):
+                    self.dropped_postings += 1
+        self._count += n_new
+        self._cache = None
+        return ids
+
+    def delete_docs(self, doc_ids) -> None:
+        """Tombstone documents by global id (base or delta; idempotent).
+        Slots are reclaimed only by ``compact()``."""
+        ids = np.asarray(doc_ids).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_docs):
+            raise ValueError(
+                f"doc id out of range [0, {self.n_docs}): "
+                f"{ids[(ids < 0) | (ids >= self.n_docs)][:8]}")
+        self._tomb[ids] = True
+        self._cache = None
+
+    # --- search ----------------------------------------------------------
+    def delta_segment(self) -> DeltaSegment:
+        self._materialize()
+        return self._cache[0]
+
+    def _materialize(self) -> None:
+        if self._cache is None:
+            delta = DeltaSegment(
+                cluster_lists=PaddedLists(jnp.asarray(self._dc_entries),
+                                          jnp.asarray(self._dc_lengths)),
+                term_lists=PaddedLists(jnp.asarray(self._dt_entries),
+                                       jnp.asarray(self._dt_lengths)),
+                doc_planes={k: jnp.asarray(v)
+                            for k, v in self._delta_planes.items()},
+                doc_assign=jnp.asarray(self._delta_assign))
+            self._cache = (delta, jnp.asarray(self._tomb))
+
+    def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
+               top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+        self._materialize()
+        delta, tomb = self._cache
+        return search(self.base, delta, tomb,
+                      jnp.asarray(query_embeddings),
+                      jnp.asarray(query_tokens),
+                      kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel)
+
+    # --- compaction ------------------------------------------------------
+    def survivors(self) -> np.ndarray:
+        """Old global ids of the live docs, in the (arrival) order the
+        compacted index renumbers them: new id i ↔ old id survivors[i]."""
+        return np.flatnonzero(~self._tomb[:self.n_docs])
+
+    def surviving_corpus(self) -> tuple[np.ndarray, np.ndarray]:
+        emb = np.concatenate([self._corpus_emb,
+                              self._delta_emb[:self._count]])
+        tokens = np.concatenate([self._corpus_tokens,
+                                 self._delta_tokens[:self._count]])
+        live = self.survivors()
+        return emb[live], tokens[live]
+
+    def compact(self, key: Optional[Array] = None) -> "MutableHybridIndex":
+        """Fold delta + tombstones into a fresh base with an empty delta.
+
+        Deliberately *is* a from-scratch build over the surviving corpus
+        (KMeans, BM25 statistics, codec training and all), with the
+        original build key unless overridden — which is what makes the
+        equivalence contract exact rather than approximate: the
+        compacted index is bit-identical to ``hi.build`` on the
+        survivors.  Surviving docs are renumbered contiguously; use
+        :meth:`survivors` for the old→new id correspondence.
+        """
+        emb, tokens = self.surviving_corpus()
+        if emb.shape[0] == 0:
+            raise ValueError("cannot compact an index with zero live docs")
+        return type(self).create(
+            self.key if key is None else key, emb, tokens, self.vocab_size,
+            delta_capacity=self.delta_capacity,
+            delta_cluster_capacity=self.delta_cluster_capacity,
+            delta_term_capacity=self.delta_term_capacity,
+            **self.build_kwargs)
+
+    # --- cost accounting (DESIGN.md §2 latency proxy) --------------------
+    def candidate_budget(self, kc: int, k2: int) -> int:
+        return (hi.candidate_budget(self.base, kc, k2)
+                + kc * self.delta_cluster_capacity
+                + k2 * self.delta_term_capacity)
+
+    def candidate_cost(self, kc: int, k2: int, top_r: int) -> int:
+        return codecs.get(self.base.codec).candidate_cost(
+            self.candidate_budget(kc, k2), top_r)
+
+    # --- persistence (driven by repro.checkpoint) ------------------------
+    def state_tree(self) -> dict:
+        """The checkpointable pytree: base index + every piece of delta
+        and tombstone state (including the retained corpus and the list
+        score planes that drive overflow eviction, so restored indexes
+        mutate identically to never-saved ones)."""
+        return {
+            "base": self.base,
+            "delta": {
+                "cluster_entries": self._dc_entries,
+                "cluster_scores": self._dc_scores,
+                "cluster_lengths": self._dc_lengths,
+                "term_entries": self._dt_entries,
+                "term_scores": self._dt_scores,
+                "term_lengths": self._dt_lengths,
+                "planes": self._delta_planes,
+                "assign": self._delta_assign,
+                "emb": self._delta_emb,
+                "tokens": self._delta_tokens,
+            },
+            "tombstones": self._tomb,
+            "corpus": {"emb": self._corpus_emb,
+                       "tokens": self._corpus_tokens},
+            "key": jax.random.key_data(self.key),
+        }
+
+    def state_extra(self) -> dict:
+        """JSON-able metadata stored next to :meth:`state_tree`."""
+        return {"delta_count": self._count,
+                "delta_capacity": self.delta_capacity,
+                "delta_cluster_capacity": self.delta_cluster_capacity,
+                "delta_term_capacity": self.delta_term_capacity,
+                "vocab_size": self.vocab_size,
+                "build_kwargs": self.build_kwargs,
+                "dropped_postings": self.dropped_postings}
+
+    @classmethod
+    def from_state(cls, tree: dict, extra: dict) -> "MutableHybridIndex":
+        """Rebuild a mutable index from a restored :meth:`state_tree`
+        (leaves may be jnp arrays) + its :meth:`state_extra`."""
+        m = extra["mutable"] if "mutable" in extra else extra
+        out = cls(tree["base"], vocab_size=int(m["vocab_size"]),
+                  key=jax.random.wrap_key_data(jnp.asarray(tree["key"])),
+                  build_kwargs=dict(m["build_kwargs"]),
+                  delta_capacity=int(m["delta_capacity"]),
+                  delta_cluster_capacity=int(m["delta_cluster_capacity"]),
+                  delta_term_capacity=int(m["delta_term_capacity"]),
+                  corpus_emb=np.asarray(tree["corpus"]["emb"]),
+                  corpus_tokens=np.asarray(tree["corpus"]["tokens"]))
+        d = tree["delta"]
+        # np.array (not asarray): restored leaves may be jnp arrays whose
+        # numpy views are read-only, and all of this state is mutated
+        out._dc_entries = np.array(d["cluster_entries"], np.int32)
+        out._dc_scores = np.array(d["cluster_scores"], np.float32)
+        out._dc_lengths = np.array(d["cluster_lengths"], np.int32)
+        out._dt_entries = np.array(d["term_entries"], np.int32)
+        out._dt_scores = np.array(d["term_scores"], np.float32)
+        out._dt_lengths = np.array(d["term_lengths"], np.int32)
+        out._delta_planes = {k: np.array(v) for k, v in d["planes"].items()}
+        out._delta_assign = np.array(d["assign"], np.int32)
+        out._delta_emb = np.array(d["emb"], np.float32)
+        out._delta_tokens = np.array(d["tokens"], np.int32)
+        out._tomb = np.array(tree["tombstones"], bool)
+        out._count = int(m["delta_count"])
+        out.dropped_postings = int(m.get("dropped_postings", 0))
+        out._cache = None
+        return out
+
+
+# --------------------------------------------------------------------------
+# document-sharded mutable search (DESIGN.md §6 + §8)
+# --------------------------------------------------------------------------
+
+def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
+                             per: int, dper: int, kc: int, k2: int,
+                             top_r: int, use_kernel: bool = False):
+    """shard_map'd base∪delta search + merge for one static config.
+
+    Shard ``s`` owns base docs [s·per, (s+1)·per) *and* delta slots
+    [s·dper, (s+1)·dper) (global ids ``n_base + slot``).  The body is
+    the sharded §6 pipeline with a second (delta) candidate family and
+    the tombstone mask applied before the local top-R′; the refine ctx
+    routes the merged frontier through per-segment plane pairs exactly
+    like the single-device mutable path, so results stay bit-identical.
+    """
+    codec_impl = codecs.get(codec)
+    r_prime = codec_impl.refine_width(top_r)
+
+    def body(shard, rep, qe, qt):
+        shard = jax.tree.map(lambda x: x[0], shard)
+        cluster_ids, _ = cs_mod.select_for_query(
+            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]), qe, kc)
+        term_ids = ts_mod.query_terms(
+            ts_mod.TermSelector(avg_scores=rep["term_avg"]), qt, k2)
+
+        def family(prefix):
+            return jnp.concatenate(
+                [il.gather_candidates(
+                    PaddedLists(shard[f"{prefix}_cluster_entries"],
+                                shard[f"{prefix}_cluster_lengths"]),
+                    cluster_ids),
+                 il.gather_candidates(
+                     PaddedLists(shard[f"{prefix}_term_entries"],
+                                 shard[f"{prefix}_term_lengths"]),
+                     term_ids)], axis=-1)
+
+        cand_b, cand_d = family("base"), family("delta")
+        cands = jnp.concatenate([cand_b, cand_d], axis=-1)
+        keep = il.dedup_mask(cands)
+
+        s = jax.lax.axis_index(axis_name)
+        b_lo, d_lo = s * per, s * dper
+        local_b = jnp.clip(cand_b - b_lo, 0, per - 1)
+        local_d = jnp.clip(cand_d - n_base - d_lo, 0, dper - 1)
+        dead = jnp.concatenate(
+            [shard["tomb_base"][local_b], shard["tomb_delta"][local_d]],
+            axis=-1)
+        live = keep & ~dead
+
+        scorer_b = codec_impl.make_scorer(rep["codec"], shard["base_codec"],
+                                          qe, use_kernel)
+        scorer_d = codec_impl.make_scorer(rep["codec"], shard["delta_codec"],
+                                          qe, use_kernel)
+        scores = jnp.concatenate([scorer_b(local_b), scorer_d(local_d)],
+                                 axis=-1)
+        scores = jnp.where(live, scores, -jnp.inf)
+
+        top_s, top_ids = hi.topk_by_score(scores, cands, r_prime)
+        all_s, all_ids = collectives.gather_topk(top_s, top_ids, axis_name)
+        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, r_prime)
+
+        pair_planes = {k: (shard["base_codec"][k], shard["delta_codec"][k])
+                       for k in shard["base_codec"]}
+
+        def owned(ids):
+            base_owned = ((ids >= b_lo) & (ids < b_lo + per)
+                          & (ids < n_base))
+            delta_owned = ((ids >= n_base + d_lo)
+                           & (ids < n_base + d_lo + dper))
+            return base_owned | delta_owned
+
+        ctx = codecs.RefineCtx(
+            gather=functools.partial(_pair_gather, n_base=n_base, b_lo=b_lo,
+                                     b_size=per, d_lo=d_lo, d_size=dper),
+            owned=owned,
+            psum=lambda x: jax.lax.psum(x, axis_name))
+        fin_s, fin_ids = codec_impl.refine(rep["codec"], pair_planes, qe,
+                                           fin_s, fin_ids, top_r, ctx)
+        n_cand = jax.lax.psum(live.sum(axis=-1).astype(jnp.int32), axis_name)
+        valid = jnp.isfinite(fin_s)
+        return (jnp.where(valid, fin_ids, PAD_DOC).astype(jnp.int32),
+                jnp.where(valid, fin_s, 0.0),
+                n_cand)
+
+    from jax.sharding import PartitionSpec as P
+
+    def specs_like(tree, leading):
+        return jax.tree.map(
+            lambda x: P(leading, *(None,) * (x.ndim - 1)) if leading
+            else P(*(None,) * x.ndim), tree)
+
+    qspec = P(None, None)
+
+    def run(planes, rep, qe, qt):
+        mapped = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(specs_like(planes, axis_name),
+                      specs_like(rep, None), qspec, qspec),
+            out_specs=(qspec, qspec, P(None)),
+            check=False)  # outputs replicated by construction (§6 merge)
+        return mapped(planes, rep, qe, qt)
+
+    return run
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_mutable_search(mesh, axis_name, codec, n_base, per, dper,
+                             kc, k2, top_r, use_kernel):
+    return jax.jit(make_mutable_search_step(
+        mesh, axis_name, codec, n_base, per, dper, kc, k2, top_r,
+        use_kernel))
+
+
+class ShardedMutableIndex:
+    """Mutable HI² over the document-sharded layout of DESIGN.md §6.
+
+    Wraps a :class:`MutableHybridIndex` (the host-side source of truth)
+    and keeps a device-placed sharded view: the immutable base is
+    partitioned once at construction; delta planes and tombstones are
+    re-split after each mutation, which routes every added doc's
+    postings and codec rows to the shard owning its global id.  Search
+    is bit-identical to the single-device mutable search (asserted for
+    every registered codec by ``tests/test_segments.py``).
+    """
+
+    def __init__(self, mut: MutableHybridIndex, n_shards: int, mesh=None,
+                 axis_name: str = shi.SHARD_AXIS):
+        self.mut = mut
+        self.n_shards = int(n_shards)
+        self.axis_name = axis_name
+        self.mesh = mesh if mesh is not None else shi.make_shard_mesh(
+            n_shards, axis_name)
+        sbase = shi.partition(mut.base, n_shards)
+        self._sbase = shi.device_put(sbase, self.mesh, axis_name)
+        self.per = sbase.docs_per_shard
+        self.dper = -(-mut.delta_capacity // n_shards)
+        self._delta_state: Optional[dict] = None
+
+    # --- mutation: delegate to the host index, re-split the delta --------
+    def add_docs(self, doc_emb, doc_tokens) -> np.ndarray:
+        ids = self.mut.add_docs(doc_emb, doc_tokens)
+        self._delta_state = None
+        return ids
+
+    def delete_docs(self, doc_ids) -> None:
+        self.mut.delete_docs(doc_ids)
+        self._delta_state = None
+
+    def compact(self, key: Optional[Array] = None) -> "ShardedMutableIndex":
+        return type(self)(self.mut.compact(key), self.n_shards,
+                          mesh=self.mesh, axis_name=self.axis_name)
+
+    def owning_shard(self, doc_ids) -> np.ndarray:
+        """Which shard serves each global doc id (base range split by
+        ``per``, delta slots split by ``dper``)."""
+        ids = np.asarray(doc_ids)
+        n_base = self.mut.n_base
+        return np.where(ids < n_base, ids // self.per,
+                        (ids - n_base) // self.dper)
+
+    # --- device state ----------------------------------------------------
+    def _split_delta(self) -> dict:
+        mut, n_base = self.mut, self.mut.n_base
+        s, dper = self.n_shards, self.dper
+        dc_e, dc_l = shi._split_lists(mut._dc_entries, s, dper, base=n_base)
+        dt_e, dt_l = shi._split_lists(mut._dt_entries, s, dper, base=n_base)
+        tomb = mut._tomb
+        return {
+            "delta_cluster_entries": jnp.asarray(dc_e),
+            "delta_cluster_lengths": jnp.asarray(dc_l),
+            "delta_term_entries": jnp.asarray(dt_e),
+            "delta_term_lengths": jnp.asarray(dt_l),
+            "delta_codec": {
+                k: jnp.asarray(shi._split_docs(v, s, dper))
+                for k, v in mut._delta_planes.items()},
+            "tomb_base": jnp.asarray(
+                shi._split_docs(tomb[:n_base], s, self.per)),
+            "tomb_delta": jnp.asarray(
+                shi._split_docs(tomb[n_base:], s, dper)),
+        }
+
+    def _planes(self) -> dict:
+        if self._delta_state is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            def put(x):
+                return jax.device_put(x, NamedSharding(
+                    self.mesh,
+                    P(self.axis_name, *(None,) * (x.ndim - 1))))
+
+            self._delta_state = jax.tree.map(put, self._split_delta())
+        sb = self._sbase
+        return {
+            "base_cluster_entries": sb.cluster_entries,
+            "base_cluster_lengths": sb.cluster_lengths,
+            "base_term_entries": sb.term_entries,
+            "base_term_lengths": sb.term_lengths,
+            "base_codec": sb.doc_planes,
+            **self._delta_state,
+        }
+
+    def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
+               top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+        rep = {"cluster_emb": self._sbase.cluster_sel.embeddings,
+               "term_avg": self._sbase.term_sel.avg_scores,
+               "codec": self._sbase.codec_params}
+        fn = _compiled_mutable_search(
+            self.mesh, self.axis_name, self.mut.base.codec, self.mut.n_base,
+            self.per, self.dper, kc, k2, top_r, use_kernel)
+        ids, scores, n_cand = fn(self._planes(), rep,
+                                 jnp.asarray(query_embeddings),
+                                 jnp.asarray(query_tokens))
+        return hi.SearchResult(doc_ids=ids, scores=scores,
+                               n_candidates=n_cand)

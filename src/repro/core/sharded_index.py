@@ -109,13 +109,16 @@ class ShardedHybridIndex:
 # partition (host-side, build-time)
 # --------------------------------------------------------------------------
 
-def _split_lists(entries: Array, n_shards: int, per: int
+def _split_lists(entries: Array, n_shards: int, per: int, base: int = 0
                  ) -> tuple[np.ndarray, np.ndarray]:
     """Filter a global (L, C) entries plane into per-shard planes.
 
     Keeps the global capacity C per shard and left-packs each row, so
     the union over shards is exactly the global plane (order within a
-    list is preserved; it is irrelevant to scoring anyway).
+    list is preserved; it is irrelevant to scoring anyway).  Shard ``s``
+    owns ids in [base + s·per, base + (s+1)·per) — ``base`` is 0 for
+    the doc planes and ``n_base`` when splitting a delta segment's
+    global ids over its slot ranges (repro.core.segments).
     """
     e = np.asarray(entries)
     n_lists, cap = e.shape
@@ -123,7 +126,7 @@ def _split_lists(entries: Array, n_shards: int, per: int
     lengths = np.zeros((n_shards, n_lists), np.int32)
     cols = np.arange(cap)[None, :]
     for s in range(n_shards):
-        mine = (e >= s * per) & (e < (s + 1) * per)
+        mine = (e >= base + s * per) & (e < base + (s + 1) * per)
         order = np.argsort(~mine, axis=1, kind="stable")   # left-pack
         packed = np.take_along_axis(e, order, axis=1)
         count = mine.sum(axis=1)

@@ -19,11 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import registry, shapes as sh
@@ -357,21 +356,24 @@ def _rec_retrieval_cell(arch, shape: sh.RecShape, cfg) -> Cell:
     p_sh = _shardings_by_path(params_a, _rec_param_axes)
     rep = shd.named_sharding
     if arch.arch_id == "sasrec":
-        fn = lambda p, items: recsys.sasrec_retrieval(p, cfg, items)
+        def fn(p, items):
+            return recsys.sasrec_retrieval(p, cfg, items)
         args = (params_a, _sds((1, cfg.seq_len), jnp.int32))
         in_sh = (p_sh, rep(None, None))
     elif arch.arch_id == "mind":
-        fn = lambda p, hist: recsys.mind_retrieval(p, cfg, hist)
+        def fn(p, hist):
+            return recsys.mind_retrieval(p, cfg, hist)
         args = (params_a, _sds((1, cfg.seq_len), jnp.int32))
         in_sh = (p_sh, rep(None, None))
     elif arch.arch_id == "dien":
-        fn = lambda p, hist, cand: recsys.dien_retrieval(p, cfg, hist, cand)
+        def fn(p, hist, cand):
+            return recsys.dien_retrieval(p, cfg, hist, cand)
         args = (params_a, _sds((1, cfg.seq_len), jnp.int32),
                 _sds((n_cand,), jnp.int32))
         in_sh = (p_sh, rep(None, None), rep("candidates"))
     else:  # dlrm
-        fn = lambda p, dense, ctx, cand: recsys.dlrm_retrieval(
-            p, cfg, dense, ctx, cand)
+        def fn(p, dense, ctx, cand):
+            return recsys.dlrm_retrieval(p, cfg, dense, ctx, cand)
         args = (params_a, _sds((1, cfg.n_dense), jnp.float32),
                 _sds((1, cfg.n_sparse - 1), jnp.int32),
                 _sds((n_cand,), jnp.int32))

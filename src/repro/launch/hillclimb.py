@@ -10,12 +10,10 @@ hypothesis → change → measure cycles recorded in EXPERIMENTS.md §Perf.
 import argparse
 import dataclasses
 import json
-import sys
 
 
 def measure(arch_id: str, shape_name: str, overrides: dict,
             multi_pod: bool = False) -> dict:
-    import jax
     from repro.configs import registry
     from repro.launch import cells as cm, mesh as mesh_mod, roofline
 

@@ -15,7 +15,7 @@ from repro.launch import roofline
 
 def _model_flops_for(cell: dict) -> float | None:
     """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)."""
-    from repro.configs import registry, shapes as sh
+    from repro.configs import registry
     arch_id, shape_name = cell["cell"].split("/")
     arch = registry.get(arch_id)
     shape = arch.shapes[shape_name]

@@ -4,8 +4,9 @@ search step (the production query path, DESIGN.md §2).
     PYTHONPATH=src python -m repro.launch.serve                 # 1 device
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
     PYTHONPATH=src python -m repro.launch.serve --shards 4      # sharded
+    PYTHONPATH=src python -m repro.launch.serve --mutable       # streaming
 
-Two serving layouts:
+Serving layouts:
 
   · :class:`Server` — the whole index on one device; request batches
     padded to ``max_batch`` so one compiled program serves every
@@ -15,6 +16,11 @@ Two serving layouts:
     (:mod:`repro.core.sharded_index`), per-shard search under
     shard_map, top-R merged by one all-gather.  Bit-identical results,
     1/S of the doc-plane HBM per device.
+  · :class:`MutableServer` / :class:`ShardedMutableServer` — the
+    streaming layout of DESIGN.md §8 (``--mutable``): base + delta
+    segment + tombstones (:mod:`repro.core.segments`), live
+    ``add``/``delete``/``compact`` with no recompiles between
+    compactions; the sharded variant routes adds to the owning shard.
 
 Latency is governed by the static per-query candidate budget
 (:func:`repro.core.hybrid_index.candidate_budget` — the proxy all of
@@ -27,6 +33,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import sys
 import time
 from typing import Optional
 
@@ -37,6 +44,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import codecs
 from repro.core import hybrid_index as hi
+from repro.core import segments as seg
 from repro.core import sharded_index as shi
 
 
@@ -48,6 +56,8 @@ class ServeConfig:
     max_batch: int = 64
     use_kernel: bool = False     # Pallas ADC on TPU
     n_shards: int = 1            # >1 → document-sharded layout
+    mutable: bool = False        # serve a MutableHybridIndex (§8)
+    delta_capacity: int = 1024   # delta slots between compactions
 
 
 class Server:
@@ -93,6 +103,18 @@ class Server:
                                scores=res.scores[:n],
                                n_candidates=res.n_candidates[:n])
 
+    # mutation API — live only on the mutable servers below
+    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray) -> np.ndarray:
+        raise RuntimeError("this server is immutable; construct with "
+                           "ServeConfig(mutable=True) / --mutable to "
+                           "enable add/delete/compact")
+
+    def delete(self, doc_ids) -> None:
+        self.add(None, None)     # same immutability error
+
+    def compact(self) -> None:
+        self.add(None, None)
+
 
 class ShardedServer(Server):
     """Document-sharded serving (DESIGN.md §6): same request contract
@@ -106,15 +128,84 @@ class ShardedServer(Server):
         self.mesh = mesh or shi.make_shard_mesh(cfg.n_shards)
         self.index = shi.device_put(shi.partition(index, cfg.n_shards),
                                     self.mesh)
-        self._search = lambda idx, qe, qt: shi.search(
-            idx, qe, qt, kc=cfg.kc, k2=cfg.k2, top_r=cfg.top_r,
-            mesh=self.mesh, use_kernel=cfg.use_kernel)
+        self._search = self._sharded_search
         self.n_served = 0
+
+    def _sharded_search(self, idx, qe, qt) -> hi.SearchResult:
+        return shi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+                          top_r=self.cfg.top_r, mesh=self.mesh,
+                          use_kernel=self.cfg.use_kernel)
+
+
+class MutableServer(Server):
+    """Serving over a :class:`repro.core.segments.MutableHybridIndex`
+    (DESIGN.md §8): the same padded-batch request contract as
+    :class:`Server`, plus live ``add``/``delete``/``compact``.  Mutation
+    changes plane values, never shapes, so the compiled search program
+    is reused across mutations; ``compact()`` swaps in the fresh base
+    (one recompile per compaction, never per request)."""
+
+    def __init__(self, mut: seg.MutableHybridIndex,
+                 cfg: ServeConfig = ServeConfig()):
+        self.mut = mut
+        self.cfg = cfg
+        self.index = mut.base    # for the padded-query plumbing only
+        self._search = self._mut_search
+        self.n_served = 0
+
+    def _mut_search(self, idx, qe, qt) -> hi.SearchResult:
+        return self.mut.search(qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+                               top_r=self.cfg.top_r,
+                               use_kernel=self.cfg.use_kernel)
+
+    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray) -> np.ndarray:
+        """Index new documents; returns their global doc ids."""
+        return self.mut.add_docs(doc_emb, doc_tokens)
+
+    def delete(self, doc_ids) -> None:
+        """Tombstone documents; they can never appear in results again."""
+        self.mut.delete_docs(doc_ids)
+
+    def compact(self) -> None:
+        """Fold delta + tombstones into a fresh base (bit-identical to a
+        from-scratch rebuild over the surviving corpus)."""
+        self.mut = self.mut.compact()
+        self.index = self.mut.base
+
+
+class ShardedMutableServer(MutableServer):
+    """Mutable + document-sharded: adds are routed to the owning shard
+    (``repro.core.segments.ShardedMutableIndex``), results stay
+    bit-identical to the single-device :class:`MutableServer`."""
+
+    def __init__(self, mut: seg.MutableHybridIndex,
+                 cfg: ServeConfig = ServeConfig(), mesh=None):
+        smut = seg.ShardedMutableIndex(mut, cfg.n_shards, mesh)
+        self.mut = smut
+        self.cfg = cfg
+        self.index = smut.mut.base
+        self._search = self._mut_search
+        self.n_served = 0
+
+    def compact(self) -> None:
+        self.mut = self.mut.compact()
+        self.index = self.mut.mut.base
 
 
 def make_server(index: hi.HybridIndex, cfg: ServeConfig) -> Server:
+    if cfg.mutable:
+        raise ValueError("make_server serves a built immutable index; "
+                         "use make_mutable_server(mut, cfg) for "
+                         "ServeConfig(mutable=True)")
     return ShardedServer(index, cfg) if cfg.n_shards > 1 else Server(index,
                                                                      cfg)
+
+
+def make_mutable_server(mut: seg.MutableHybridIndex,
+                        cfg: ServeConfig) -> MutableServer:
+    if cfg.n_shards > 1:
+        return ShardedMutableServer(mut, cfg)
+    return MutableServer(mut, cfg)
 
 
 def main(argv: Optional[list] = None) -> None:
@@ -128,6 +219,11 @@ def main(argv: Optional[list] = None) -> None:
                     metavar="|".join(codecs.registered()),
                     help="any registered codec spec, e.g. sq8 or refine:pq:4")
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--mutable", action="store_true",
+                    help="serve a mutable index and demo live "
+                         "add/delete/compact (DESIGN.md §8)")
+    ap.add_argument("--delta-capacity", type=int, default=1024,
+                    help="delta slots between compactions (--mutable)")
     args = ap.parse_args(argv)
     codecs.get(args.codec)   # fail fast (with the registered names) on typos
 
@@ -135,13 +231,31 @@ def main(argv: Optional[list] = None) -> None:
     corpus = synthetic.generate(seed=0, n_docs=args.docs,
                                 n_queries=args.queries,
                                 hidden=64, vocab_size=4096)
-    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
-                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
-                     n_clusters=128, k1_terms=10, codec=args.codec, pq_m=8,
-                     pq_k=256, cluster_capacity=192, term_capacity=96,
-                     kmeans_iters=8)
-    cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards)
-    server = make_server(index, cfg)
+    build_kwargs = dict(n_clusters=128, k1_terms=10, codec=args.codec,
+                        pq_m=8, pq_k=256, cluster_capacity=192,
+                        term_capacity=96, kmeans_iters=8)
+    cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards,
+                      mutable=args.mutable,
+                      delta_capacity=args.delta_capacity)
+    if args.mutable:
+        if args.docs < 512:
+            sys.exit("--mutable demo needs --docs >= 512 (the base build "
+                     "must keep enough docs for KMeans after the held-out "
+                     "stream is split off)")
+        # stream the last ~1/8 of the corpus in live, then compact;
+        # never more than the delta can hold or half the corpus
+        held = max(args.batch, args.docs // 8)
+        held = min(held, args.delta_capacity, args.docs // 2)
+        mut = seg.MutableHybridIndex.create(
+            jax.random.key(0), corpus.doc_emb[:-held],
+            corpus.doc_tokens[:-held], corpus.vocab_size,
+            delta_capacity=args.delta_capacity, **build_kwargs)
+        server = make_mutable_server(mut, cfg)
+    else:
+        index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                         jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                         **build_kwargs)
+        server = make_server(index, cfg)
     server.warmup(64, corpus.query_tokens.shape[1])
     t0 = time.perf_counter()
     for i in range(0, args.queries, args.batch):
@@ -151,6 +265,18 @@ def main(argv: Optional[list] = None) -> None:
     layout = f"{args.shards} shard(s)" if args.shards > 1 else "1 device"
     print(f"served {server.n_served} queries in {dt:.3f}s "
           f"({server.n_served / dt:.0f} q/s, {layout})")
+    if args.mutable:
+        ids = server.add(corpus.doc_emb[-held:], corpus.doc_tokens[-held:])
+        server.query(corpus.query_emb[:args.batch],
+                     corpus.query_tokens[:args.batch])
+        server.delete(ids[: held // 4])
+        t0 = time.perf_counter()
+        server.compact()
+        dt_c = time.perf_counter() - t0
+        mut_idx = server.mut
+        print(f"mutable: added {held}, deleted {held // 4}, "
+              f"compacted to {getattr(mut_idx, 'mut', mut_idx).n_base} "
+              f"docs in {dt_c:.2f}s")
 
 
 if __name__ == "__main__":

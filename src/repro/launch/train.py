@@ -12,7 +12,6 @@ Two layers:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Optional
 
 import jax

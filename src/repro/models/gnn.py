@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -137,9 +136,9 @@ def forward(params: dict, cfg: GatedGCNConfig, batch: GraphBatch) -> Array:
 
     def scan_body(carry, lp):
         h_c, e_c = carry
-        fn = lambda hh, ee, p: _layer(p, hh, ee, batch.edge_src,
-                                      batch.edge_dst, batch.edge_mask,
-                                      n_nodes)
+        def fn(hh, ee, p):
+            return _layer(p, hh, ee, batch.edge_src, batch.edge_dst,
+                          batch.edge_mask, n_nodes)
         if cfg.remat:
             fn = jax.checkpoint(fn)
         h_n, e_n = fn(h_c, e_c, lp)

@@ -176,7 +176,8 @@ def hidden_states(params: dict, cfg: TransformerConfig, tokens: Array
     body = functools.partial(_layer_forward, cfg=cfg)
 
     def scan_body(carry, lp):
-        fn = (lambda c, p: body(p, x=c))
+        def fn(c, p):
+            return body(p, x=c)
         if cfg.remat:
             fn = jax.checkpoint(fn,
                                 policy=jax.checkpoint_policies.nothing_saveable)

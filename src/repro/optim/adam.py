@@ -8,7 +8,6 @@ adds zero extra collectives.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -1,0 +1,128 @@
+"""The CI bench-regression gate and the benchmark driver's coverage
+guarantee (benchmarks/check_regression.py, benchmarks/run.py).
+
+The gate's semantics: quality/structural fields compare bit-exactly,
+wall-clock fields (``*_us*``/``seconds``/``qps``/``speedup*``) only
+directionally within a ratio; a missing baseline or a missing fresh file
+is itself a failure (no silent green).  The driver must refuse to run if
+a benchmarks/*.py exists without a dispatch entry, so new benchmarks
+cannot silently drop out of `python -m benchmarks.run`.
+"""
+import json
+import os
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))
+
+from benchmarks import check_regression as cr            # noqa: E402
+from benchmarks import run as bench_run                  # noqa: E402
+
+
+def test_timing_direction_heuristic():
+    assert cr.timing_direction("us_per_batch") == "lower"
+    assert cr.timing_direction("add_seconds_total") == "lower"
+    assert cr.timing_direction("base_build_seconds") == "lower"
+    assert cr.timing_direction("search_us_per_batch") == "lower"
+    assert cr.timing_direction("qps") == "higher"
+    assert cr.timing_direction("speedup_vs_baseline") == "higher"
+    for exact in ("R@100", "candidate_cost", "delta_docs",
+                  "mean_candidates", "n_live", "fill_fraction"):
+        assert cr.timing_direction(exact) is None, exact
+
+
+def test_dispatch_covers_every_benchmark_on_disk():
+    names = bench_run.discovered()
+    assert set(names) == set(bench_run.DISPATCH), (
+        "benchmarks/*.py and benchmarks/run.py DISPATCH diverged")
+    for helper in bench_run.HELPER_MODULES - {"__init__"}:
+        assert (_ROOT / "benchmarks" / f"{helper}.py").exists(), helper
+    # the three gate files all come from dispatched benchmarks
+    assert {"table3_codec", "sharded_search", "streaming_updates"} \
+        <= set(names)
+
+
+def _write(d, name, doc):
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, name), "w") as f:
+        json.dump(doc, f)
+
+
+BASE = {"rows": [{"codec": "flat", "R@100": 0.9609375,
+                  "candidate_cost": 1920}],
+        "baseline": {"us_per_batch": 1000.0, "qps": 64.0},
+        "flags": {"equal_to_rebuild": True}}
+
+
+def test_gate_passes_on_identical_and_tolerable_timing(tmp_path):
+    b, f = str(tmp_path / "base"), str(tmp_path / "fresh")
+    fresh = json.loads(json.dumps(BASE))
+    fresh["baseline"]["us_per_batch"] = 3500.0     # 3.5x slower < 4x
+    fresh["baseline"]["qps"] = 20.0                # > 64/4
+    _write(b, "x.json", BASE)
+    _write(f, "x.json", fresh)
+    assert cr.check_files(b, f, ["x.json"], timing_ratio=4.0,
+                          float_tol=0.0) == []
+
+
+def test_gate_fails_on_recall_drift():
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        b, f = os.path.join(d, "base"), os.path.join(d, "fresh")
+        fresh = json.loads(json.dumps(BASE))
+        fresh["rows"][0]["R@100"] = 0.9609374      # one ulp of drift
+        _write(b, "x.json", BASE)
+        _write(f, "x.json", fresh)
+        fails = cr.check_files(b, f, ["x.json"], timing_ratio=4.0,
+                               float_tol=0.0)
+        assert len(fails) == 1 and "R@100" in fails[0]
+
+
+def test_gate_fails_on_slow_timing_but_not_fast(tmp_path):
+    b, f = str(tmp_path / "base"), str(tmp_path / "fresh")
+    fresh = json.loads(json.dumps(BASE))
+    fresh["baseline"]["us_per_batch"] = 5000.0     # 5x slower > 4x
+    fresh["baseline"]["qps"] = 1000.0              # faster: fine
+    _write(b, "x.json", BASE)
+    _write(f, "x.json", fresh)
+    fails = cr.check_files(b, f, ["x.json"], timing_ratio=4.0,
+                           float_tol=0.0)
+    assert len(fails) == 1 and "us_per_batch" in fails[0]
+
+
+def test_gate_fails_on_structure_change_and_flag_flip(tmp_path):
+    b, f = str(tmp_path / "base"), str(tmp_path / "fresh")
+    fresh = json.loads(json.dumps(BASE))
+    fresh["flags"]["equal_to_rebuild"] = False
+    del fresh["rows"][0]["candidate_cost"]
+    fresh["rows"][0]["new_field"] = 1
+    _write(b, "x.json", BASE)
+    _write(f, "x.json", fresh)
+    fails = cr.check_files(b, f, ["x.json"], timing_ratio=4.0,
+                           float_tol=0.0)
+    msgs = "\n".join(fails)
+    assert "equal_to_rebuild" in msgs
+    assert "candidate_cost" in msgs and "missing" in msgs
+    assert "new_field" in msgs
+
+
+def test_gate_fails_on_missing_files(tmp_path):
+    b, f = str(tmp_path / "base"), str(tmp_path / "fresh")
+    os.makedirs(b), os.makedirs(f)
+    _write(f, "present.json", BASE)
+    fails = cr.check_files(b, f, ["present.json", "absent.json"],
+                           timing_ratio=4.0, float_tol=0.0)
+    msgs = "\n".join(fails)
+    assert "no committed baseline" in msgs       # present.json: no baseline
+    assert "fresh run missing" in msgs or "no committed baseline" in msgs
+
+
+def test_committed_baselines_exist_and_selfcompare():
+    """The gate's default files are committed under results/ and compare
+    clean against themselves (sanity of the comparator on real docs)."""
+    res = _ROOT / "results"
+    for name in cr.DEFAULT_FILES:
+        assert (res / name).exists(), f"commit a baseline for {name}"
+    assert cr.check_files(str(res), str(res), list(cr.DEFAULT_FILES),
+                          timing_ratio=4.0, float_tol=0.0) == []

@@ -6,7 +6,6 @@ import numpy as np
 
 from repro.core import distill, term_selector as ts_mod
 from repro.data import synthetic
-from repro.launch import train as tr
 from repro.models import transformer as tfm
 from repro.optim import AdamConfig, adam_init, adam_update
 

@@ -5,7 +5,6 @@
   · elastic reshard: restore under a different device layout
   · straggler monitor flags outliers; loader reshards around ejections
 """
-import os
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ allclose against the pure-jnp oracles, in interpret mode on CPU."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # accelerator image: no pip installs; CI has the real one

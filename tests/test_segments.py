@@ -1,0 +1,373 @@
+"""Streaming mutations (DESIGN.md §8): delta segment, tombstones,
+compaction equivalence, checkpoint round-trip, sharded routing.
+
+The §8 contracts under test:
+
+  · compact() is bit-identical (doc ids AND scores) to a from-scratch
+    build over the surviving corpus — for EVERY registered codec, on
+    both single-device and document-sharded search;
+  · a tombstoned doc can never surface in any top-R (not even via the
+    refine stage);
+  · add → delete → save → restore → search equals the in-memory mutated
+    index, and compact-then-save equals rebuild-then-save.
+
+Multi-device cases spawn a fresh interpreter with
+xla_force_host_platform_device_count (the tests/test_sharded.py
+pattern); everything else runs in-process on 1 device.
+"""
+import functools
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import codecs, hybrid_index as hi, segments as seg
+from repro.data import synthetic
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=4",
+            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+
+KW = dict(n_clusters=16, k1_terms=4, pq_m=4, pq_k=64,
+          cluster_capacity=96, term_capacity=48, kmeans_iters=3)
+SEARCH = dict(kc=4, k2=4, top_r=15)
+HOLD = 80
+
+
+def _run(script: str) -> None:
+    r = subprocess.run([sys.executable, "-c", script], env=_ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+@functools.lru_cache(maxsize=1)
+def _corpus():
+    return synthetic.generate(seed=0, n_docs=1500, n_queries=24, hidden=32,
+                              vocab_size=512, n_topics=8)
+
+
+def _mutated(codec: str, delta_capacity: int = 128):
+    """Base over all but the last HOLD docs, then stream them in and
+    tombstone a mix of base + delta ids."""
+    c = _corpus()
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-HOLD], c.doc_tokens[:-HOLD],
+        c.vocab_size, delta_capacity=delta_capacity, codec=codec, **KW)
+    ids = mut.add_docs(c.doc_emb[-HOLD:], c.doc_tokens[-HOLD:])
+    mut.delete_docs(ids[:HOLD // 4])
+    mut.delete_docs([3, 4, 7])
+    return c, mut, ids
+
+
+def _queries():
+    c = _corpus()
+    return jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+
+
+def assert_results_equal(a: hi.SearchResult, b: hi.SearchResult, err=None):
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids), err)
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores), err)
+    np.testing.assert_array_equal(np.asarray(a.n_candidates),
+                                  np.asarray(b.n_candidates), err)
+
+
+# --------------------------------------------------------------------------
+# adds
+# --------------------------------------------------------------------------
+
+def test_added_docs_are_retrievable():
+    """A streamed doc must be findable by its own embedding+tokens, with
+    its assigned global id (n_base + slot)."""
+    c, mut, ids = _mutated("flat")
+    assert ids.tolist() == list(range(mut.n_base, mut.n_base + HOLD))
+    probe = slice(-8, None)      # live delta docs (the doomed ones are early)
+    res = mut.search(jnp.asarray(c.doc_emb[probe]),
+                     jnp.asarray(c.doc_tokens[probe]), **SEARCH)
+    got = np.asarray(res.doc_ids)
+    for row, want in zip(got, ids[probe]):
+        assert want in row, (want, row)
+
+
+def test_add_overflow_raises_delta_full():
+    c = _corpus()
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-HOLD], c.doc_tokens[:-HOLD],
+        c.vocab_size, delta_capacity=10, codec="flat", **KW)
+    mut.add_docs(c.doc_emb[-10:], c.doc_tokens[-10:])
+    with pytest.raises(seg.DeltaFull):
+        mut.add_docs(c.doc_emb[-1:], c.doc_tokens[-1:])
+    # search still fine at exactly-full
+    mut.search(*_queries(), **SEARCH)
+
+
+def test_delete_validates_ids():
+    _, mut, _ = _mutated("flat")
+    with pytest.raises(ValueError):
+        mut.delete_docs([mut.n_docs])     # beyond allocated ids
+    with pytest.raises(ValueError):
+        mut.delete_docs([-1])
+
+
+# --------------------------------------------------------------------------
+# tombstones
+# --------------------------------------------------------------------------
+
+def test_tombstoned_docs_never_surface_every_codec():
+    """Delete docs that verifiably appeared in results; they must vanish
+    from every subsequent top-R (incl. through the refine stage)."""
+    qe, qt = _queries()
+    for codec in codecs.registered():
+        c, mut, ids = _mutated(codec)
+        before = np.asarray(mut.search(qe, qt, **SEARCH).doc_ids)
+        seen = np.unique(before[before >= 0])
+        assert seen.size > 0
+        doomed = seen[:: max(1, seen.size // 10)][:10]   # spread across ids
+        mut.delete_docs(doomed)
+        after = np.asarray(mut.search(qe, qt, **SEARCH).doc_ids)
+        assert not np.isin(after, doomed).any(), (codec, doomed)
+        # deleting reduces the live candidate pool, never grows it
+        assert mut.n_live < mut.n_docs
+
+
+# --------------------------------------------------------------------------
+# compaction equivalence (the §8 contract, single-device half)
+# --------------------------------------------------------------------------
+
+def test_compact_equals_from_scratch_rebuild_every_codec():
+    """compact() output must be bit-identical — doc ids, scores AND
+    candidate counts — to hi.build over the surviving corpus."""
+    qe, qt = _queries()
+    c = _corpus()
+    for codec in codecs.registered():
+        _, mut, _ = _mutated(codec)
+        compacted = mut.compact()
+        emb, tok = mut.surviving_corpus()
+        assert emb.shape[0] == mut.n_live == compacted.n_base
+        rebuilt = hi.build(jax.random.key(0), jnp.asarray(emb),
+                           jnp.asarray(tok), c.vocab_size, codec=codec,
+                           **KW)
+        rc = compacted.search(qe, qt, **SEARCH)
+        rr = hi.search(rebuilt, qe, qt, **SEARCH)
+        assert_results_equal(rc, rr, codec)
+        # the rebuilt base is leaf-for-leaf identical, not just
+        # search-equal (compact IS the from-scratch build)
+        for a, b in zip(jax.tree.leaves(compacted.base),
+                        jax.tree.leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          codec)
+
+
+def test_compact_renumbers_survivors_contiguously():
+    _, mut, _ = _mutated("flat")
+    surv = mut.survivors()
+    assert surv.size == mut.n_live
+    assert not np.isin(surv, np.flatnonzero(mut.tombstones)).any()
+    compacted = mut.compact()
+    assert compacted.n_base == surv.size
+    assert compacted.delta_count == 0 and compacted.n_deleted == 0
+
+
+# --------------------------------------------------------------------------
+# checkpoint round-trip of a mutated index
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_mutated_index():
+    """add → delete → save → restore → search must equal the in-memory
+    mutated index, and the restored index must keep mutating
+    identically (list planes, eviction scores, counters round-trip)."""
+    qe, qt = _queries()
+    c, mut, _ = _mutated("opq")
+    ref = mut.search(qe, qt, **SEARCH)
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save_mutable(d, 7, mut)
+        like = seg.MutableHybridIndex.create(
+            jax.random.key(1), c.doc_emb[:-HOLD], c.doc_tokens[:-HOLD],
+            c.vocab_size, delta_capacity=128, codec="opq", **KW)
+        back = ckpt.restore_mutable(path, like)
+        assert_results_equal(ref, back.search(qe, qt, **SEARCH))
+        assert back.delta_count == mut.delta_count
+        assert back.n_deleted == mut.n_deleted
+        # post-restore mutations behave exactly like never-saved ones
+        extra_e, extra_t = c.doc_emb[:6] + 0.01, c.doc_tokens[:6]
+        np.testing.assert_array_equal(mut.add_docs(extra_e, extra_t),
+                                      back.add_docs(extra_e, extra_t))
+        assert_results_equal(mut.search(qe, qt, **SEARCH),
+                             back.search(qe, qt, **SEARCH))
+
+
+def test_checkpoint_rejects_codec_mismatch_and_plain_index():
+    c, mut, _ = _mutated("sq8")
+    with tempfile.TemporaryDirectory() as d:
+        path = ckpt.save_mutable(d, 0, mut)
+        like = seg.MutableHybridIndex.create(
+            jax.random.key(0), c.doc_emb[:-HOLD], c.doc_tokens[:-HOLD],
+            c.vocab_size, delta_capacity=128, codec="flat", **KW)
+        with pytest.raises(ValueError, match="codec"):
+            ckpt.restore_mutable(path, like)
+        plain = ckpt.save_index(d, 1, mut.base)
+        with pytest.raises(ValueError, match="mutable"):
+            ckpt.restore_mutable(plain, mut)
+
+
+def test_compact_then_save_equals_rebuild_then_save():
+    """Checkpointing the compacted index must produce the same arrays as
+    checkpointing a from-scratch build over the survivors."""
+    c, mut, _ = _mutated("opq")
+    compacted = mut.compact()
+    emb, tok = mut.surviving_corpus()
+    rebuilt = seg.MutableHybridIndex.create(
+        jax.random.key(0), emb, tok, c.vocab_size, delta_capacity=128,
+        codec="opq", **KW)
+    with tempfile.TemporaryDirectory() as d:
+        p_a = ckpt.save_mutable(os.path.join(d, "a"), 0, compacted)
+        p_b = ckpt.save_mutable(os.path.join(d, "b"), 0, rebuilt)
+        man_a, man_b = ckpt.load_manifest(p_a), ckpt.load_manifest(p_b)
+        assert man_a["leaves"] == man_b["leaves"]
+        assert man_a["extra"] == man_b["extra"]
+        with np.load(os.path.join(p_a, "arrays.npz")) as za, \
+                np.load(os.path.join(p_b, "arrays.npz")) as zb:
+            assert sorted(za.files) == sorted(zb.files)
+            for k in za.files:
+                np.testing.assert_array_equal(za[k], zb[k], k)
+
+
+# --------------------------------------------------------------------------
+# sharded mutable search (the §8 contract, sharded half)
+# --------------------------------------------------------------------------
+
+def test_sharded_mutable_bit_identical_every_codec():
+    """For EVERY registered codec: mutable search over 2 and 4 shards is
+    bit-identical to single-device mutable search, and the compacted
+    index served sharded equals the from-scratch rebuild — the §8
+    acceptance contract on the document-sharded path."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import codecs, hybrid_index as hi, segments as seg
+from repro.core import sharded_index as shi
+from repro.data import synthetic
+
+assert jax.device_count() == 4
+c = synthetic.generate(seed=0, n_docs=1501, n_queries=16, hidden=32,
+                       vocab_size=512, n_topics=8)
+kw = dict(n_clusters=16, k1_terms=4, pq_m=4, pq_k=64,
+          cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+hold = 80
+for codec in codecs.registered():
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-hold], c.doc_tokens[:-hold],
+        c.vocab_size, delta_capacity=100, codec=codec, **kw)
+    ids = mut.add_docs(c.doc_emb[-hold:], c.doc_tokens[-hold:])
+    mut.delete_docs(ids[:20]); mut.delete_docs([5, 6, 7])
+    ref = mut.search(qe, qt, kc=4, k2=4, top_r=15)
+    for n_shards in (2, 4):
+        smut = seg.ShardedMutableIndex(mut, n_shards)
+        out = smut.search(qe, qt, kc=4, k2=4, top_r=15)
+        err = (codec, n_shards)
+        np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                      np.asarray(out.doc_ids), err)
+        np.testing.assert_array_equal(np.asarray(ref.scores),
+                                      np.asarray(out.scores), err)
+        np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                                      np.asarray(out.n_candidates), err)
+        # deleted docs absent on the sharded path too
+        assert not np.isin(np.asarray(out.doc_ids),
+                           np.asarray(ids[:20])).any(), err
+    # compacted-then-sharded == from-scratch rebuild (single device)
+    emb, tok = mut.surviving_corpus()
+    rebuilt = hi.build(jax.random.key(0), jnp.asarray(emb),
+                       jnp.asarray(tok), c.vocab_size, codec=codec, **kw)
+    want = hi.search(rebuilt, qe, qt, kc=4, k2=4, top_r=15)
+    scomp = seg.ShardedMutableIndex(mut.compact(), 4)
+    got = scomp.search(qe, qt, kc=4, k2=4, top_r=15)
+    np.testing.assert_array_equal(np.asarray(want.doc_ids),
+                                  np.asarray(got.doc_ids), codec)
+    np.testing.assert_array_equal(np.asarray(want.scores),
+                                  np.asarray(got.scores), codec)
+""")
+
+
+def test_sharded_mutable_routes_adds_to_owning_shard():
+    """Adds through the sharded wrapper land in the owning shard's delta
+    split: each shard's list planes reference only its own slot range."""
+    _run("""
+import jax, numpy as np
+from repro.core import segments as seg
+from repro.data import synthetic
+from repro.core.inverted_lists import PAD_DOC
+
+c = synthetic.generate(seed=0, n_docs=1200, n_queries=8, hidden=32,
+                       vocab_size=512, n_topics=8)
+kw = dict(n_clusters=16, k1_terms=4, codec="flat",
+          cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+mut = seg.MutableHybridIndex.create(
+    jax.random.key(0), c.doc_emb[:-60], c.doc_tokens[:-60],
+    c.vocab_size, delta_capacity=64, **kw)
+smut = seg.ShardedMutableIndex(mut, 4)
+ids = smut.add_docs(c.doc_emb[-60:], c.doc_tokens[-60:])
+shards = smut.owning_shard(ids)
+assert set(shards.tolist()) == {0, 1, 2, 3}   # blocks of dper=16 slots
+state = smut._split_delta()
+n_base, dper = mut.n_base, smut.dper
+for s in range(4):
+    for plane in ("delta_cluster_entries", "delta_term_entries"):
+        e = np.asarray(state[plane][s])
+        mine = e[e != PAD_DOC]
+        lo = n_base + s * dper
+        assert ((mine >= lo) & (mine < lo + dper)).all(), (plane, s)
+# every added doc's postings landed somewhere
+all_entries = np.concatenate([np.asarray(state["delta_cluster_entries"]),
+                              np.asarray(state["delta_term_entries"])],
+                             axis=None)
+assert np.isin(ids, all_entries).all()
+""")
+
+
+def test_mutable_server_roundtrip():
+    """launch/serve.py --mutable path: MutableServer add/delete/compact
+    with the padded-batch request contract."""
+    _run("""
+import jax, numpy as np
+from repro.core import segments as seg
+from repro.launch import serve
+from repro.data import synthetic
+
+c = synthetic.generate(seed=0, n_docs=1200, n_queries=48, hidden=32,
+                       vocab_size=512, n_topics=8)
+kw = dict(n_clusters=16, k1_terms=4, codec="opq", pq_m=4, pq_k=64,
+          cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+mut = seg.MutableHybridIndex.create(
+    jax.random.key(0), c.doc_emb[:-60], c.doc_tokens[:-60],
+    c.vocab_size, delta_capacity=64, **kw)
+cfg = serve.ServeConfig(kc=4, k2=4, top_r=10, max_batch=32, mutable=True)
+s = serve.make_mutable_server(mut, cfg)
+r0 = s.query(c.query_emb[:32], c.query_tokens[:32])
+ids = s.add(c.doc_emb[-60:], c.doc_tokens[-60:])
+s.delete(ids[:10])
+r1 = s.query(c.query_emb[:20], c.query_tokens[:20])   # ragged batch
+assert r1.doc_ids.shape == (20, 10)
+assert not np.isin(np.asarray(r1.doc_ids), ids[:10]).any()
+s.compact()
+r2 = s.query(c.query_emb[:32], c.query_tokens[:32])
+assert s.n_served == 32 + 20 + 32
+got = set(np.asarray(r2.doc_ids).ravel().tolist())
+assert max(got) < s.mut.n_base     # compacted: contiguous renumbering
+
+# the immutable server refuses mutations with a pointer to --mutable
+idx = s.mut.base
+srv = serve.make_server(idx, serve.ServeConfig(kc=4, k2=4, top_r=10))
+try:
+    srv.add(c.doc_emb[:1], c.doc_tokens[:1])
+except RuntimeError as e:
+    assert "mutable" in str(e)
+else:
+    raise AssertionError("immutable server accepted add()")
+""")
