@@ -7,7 +7,7 @@ candidates as the latency proxy (§5.1).
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import hybrid_index as hi, ivf
+from repro.core import hybrid_index as hi
 
 
 def run() -> dict[str, list[tuple[float, float]]]:
@@ -20,7 +20,7 @@ def run() -> dict[str, list[tuple[float, float]]]:
         return (ev["candidates"], ev["R@100"])
 
     curves["IVF-OPQ"] = [
-        point(ivf.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
+        point(hi.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
         for kc in (1, 2, 4, 8, 12, 16)]
     curves["HI2_unsup"] = [
         point(hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))

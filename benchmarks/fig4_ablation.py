@@ -3,7 +3,7 @@ at matched dispatch widths (RQ2 complementarity)."""
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import hybrid_index as hi, ivf
+from repro.core import hybrid_index as hi
 
 
 def run() -> dict[str, list[tuple[float, float]]]:
@@ -16,10 +16,10 @@ def run() -> dict[str, list[tuple[float, float]]]:
 
     return {
         "w.o.Term(IVF)": [
-            point(ivf.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
+            point(hi.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
             for kc in (2, 4, 8, 12, 16)],
         "w.o.Clus(term-only)": [
-            point(ivf.search_term_only(idx, qe, qt, k2=k2,
+            point(hi.search_term_only(idx, qe, qt, k2=k2,
                                        top_r=common.TOP_R))
             for k2 in (2, 4, 8, 12, 16)],
         "HI2(full)": [

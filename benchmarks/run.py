@@ -132,6 +132,19 @@ def _sharded_search() -> None:
               f"speedup={e['speedup_vs_baseline']}", flush=True)
 
 
+def _filtered_search() -> None:
+    rep = _subprocess_json("filtered_search", ["--smoke", "--check"])
+    for pt in rep["points"]:
+        print(f"filtered/pass{pt['pass_rate']:.2f},"
+              f"{pt['search_us_per_batch']:.0f},"
+              f"R@R={pt['R@R_vs_filtered_oracle']:.4f};"
+              f"cands={pt['mean_candidates']:.0f};"
+              f"isolated={pt['tenant_isolated']}", flush=True)
+    print(f"filtered/allow_all,0,"
+          f"equals_unfiltered={rep['allow_all_equals_unfiltered']}",
+          flush=True)
+
+
 def _streaming_updates() -> None:
     rep = _subprocess_json("streaming_updates", ["--smoke", "--check"])
     for p in rep["points"]:
@@ -155,6 +168,7 @@ DISPATCH = {
     "fig4_ablation": _fig4,
     "sharded_search": _sharded_search,
     "streaming_updates": _streaming_updates,
+    "filtered_search": _filtered_search,
 }
 
 

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import cluster_selector as cs_mod, flat, hybrid_index as hi, ivf
+from repro.core import cluster_selector as cs_mod, hybrid_index as hi
+from repro.core.codecs import flat
 
 
 def run() -> list[dict]:
@@ -31,7 +32,7 @@ def run() -> list[dict]:
 
     idx = common.unsup_index()
     # IVF-OPQ — cluster-only at a LARGER budget than HI² (paper setting)
-    r = ivf.search_ivf(idx, qe, qt, kc=10, top_r=common.TOP_R)
+    r = hi.search_ivf(idx, qe, qt, kc=10, top_r=common.TOP_R)
     rows.append(dict(method="IVF-OPQ", **common.evaluate(r),
                      index_bytes=common.index_size_bytes(idx)))
 
@@ -44,12 +45,12 @@ def run() -> list[dict]:
                       embeddings=params.cluster_embeddings),
                   doc_assign=assign, use_terms=False,
                   **common.COMMON_INDEX)
-    r = ivf.search_ivf(dv, qe, qt, kc=10, top_r=common.TOP_R)
+    r = hi.search_ivf(dv, qe, qt, kc=10, top_r=common.TOP_R)
     rows.append(dict(method="Distill-VQ", **common.evaluate(r),
                      index_bytes=common.index_size_bytes(dv)))
 
     # term-only (w.o. Clus)
-    r = ivf.search_term_only(idx, qe, qt, k2=common.K2, top_r=common.TOP_R)
+    r = hi.search_term_only(idx, qe, qt, k2=common.K2, top_r=common.TOP_R)
     rows.append(dict(method="TermOnly(w.o.Clus)", **common.evaluate(r),
                      index_bytes=common.index_size_bytes(idx)))
 

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import flat, hybrid_index as hi, ivf, metrics
+from repro.core import hybrid_index as hi, metrics
+from repro.core.codecs import flat
 
 
 def _eval_model(doc_emb, query_emb, tag: str) -> list[dict]:
@@ -27,7 +28,7 @@ def _eval_model(doc_emb, query_emb, tag: str) -> list[dict]:
                    jnp.asarray(c.doc_tokens), c.vocab_size,
                    n_clusters=common.N_CLUSTERS, kmeans_iters=10,
                    **common.COMMON_INDEX)
-    r = ivf.search_ivf(idx, qe, qt, kc=10, top_r=common.TOP_R)
+    r = hi.search_ivf(idx, qe, qt, kc=10, top_r=common.TOP_R)
     rows.append(dict(model=tag, method="IVF-OPQ",
                      R100=metrics.recall_at_k(r.doc_ids, c.qrels, 100)))
     r = hi.search(idx, qe, qt, kc=common.KC, k2=common.K2,

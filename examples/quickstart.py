@@ -7,7 +7,8 @@ registered codec over the same lists (the paper's Table 3 axis).
 import jax
 import jax.numpy as jnp
 
-from repro.core import codecs, flat, hybrid_index as hi, ivf, metrics
+from repro.core import codecs, hybrid_index as hi, metrics
+from repro.core.codecs import flat
 from repro.data import synthetic
 
 
@@ -27,7 +28,7 @@ def main():
     print("searching...")
     _, fids = flat.search(qe, de, k=100)
     r_hi2 = hi.search(index, qe, qt, kc=6, k2=8, top_r=100)
-    r_ivf = ivf.search_ivf(index, qe, qt, kc=10, top_r=100)
+    r_ivf = hi.search_ivf(index, qe, qt, kc=10, top_r=100)
 
     print(f"\n{'method':<22}{'R@100':>8}{'MRR@10':>9}{'candidates':>12}")
     print(f"{'Flat (brute force)':<22}"

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import flat, hybrid_index as hi, metrics
+from repro.core import hybrid_index as hi, metrics
+from repro.core.codecs import flat
 from repro.data import recsys as rdata
 from repro.models import recsys
 

@@ -99,10 +99,15 @@ def save_index(directory: str, step: int, index: Any,
 
     The codec spec is *static* pytree metadata — it never changes the
     leaf layout of two indexes built with the same codec — so this is
-    the only extra bookkeeping persistence needs.
+    the only extra bookkeeping persistence needs.  The optional
+    namespace plane (``doc_ns``, filtered search — DESIGN.md §9) is an
+    ordinary leaf and round-trips like every other plane; restoring a
+    filtered checkpoint into an unfiltered ``like`` (or vice versa)
+    fails the leaf-count check loudly.
     """
     extra = dict(extra or {})
     extra["codec"] = index.codec
+    extra["filtered"] = getattr(index, "doc_ns", None) is not None
     return save(directory, step, index, extra=extra)
 
 

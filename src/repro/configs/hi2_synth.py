@@ -45,6 +45,17 @@ class HI2ShardedServeShape(HI2ServeShape):
 
 
 @dataclasses.dataclass(frozen=True)
+class HI2FilteredServeShape(HI2ServeShape):
+    """Filtered serving (DESIGN.md §9): the same serving step plus a
+    per-doc namespace plane ((n_docs,) i32, doc-sharded like every
+    other doc plane) and a per-query namespace bitmap
+    ((batch, ⌈N/32⌉) u32, batch-sharded like the queries) — multi-tenant
+    isolation at the paper's operating point with zero extra budget."""
+    kind: str = "hi2_serve_filtered"
+    n_namespaces: int = 64      # tenants; bitmap width = 2 u32 words
+
+
+@dataclasses.dataclass(frozen=True)
 class HI2Config:
     pass
 
@@ -61,5 +72,9 @@ ARCH = registry.register(registry.ArchDef(
             # re-rank of the merged top-R′ frontier after the shard merge
             "serve_msmarco_refine_sq8":
                 HI2ShardedServeShape("serve_msmarco_refine_sq8",
-                                     codec="refine:sq8:4")},
+                                     codec="refine:sq8:4"),
+            # filtered search (DESIGN.md §9): 64-tenant namespace bitmaps
+            # through the exec layer's filter stage
+            "serve_msmarco_filtered":
+                HI2FilteredServeShape("serve_msmarco_filtered")},
     extra=True))

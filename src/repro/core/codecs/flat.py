@@ -1,8 +1,15 @@
 """Flat codec — full-precision embeddings, exact inner product
 (DESIGN.md §7).  The quality upper bound every other codec is measured
 against (paper Table 3); doc-plane cost is 4·h bytes/doc.
+
+Also home of :func:`search`, the brute-force top-k over a whole corpus
+(formerly ``core/flat.py``): the exact-retrieval oracle benchmarks and
+tests measure every index against, blocked so the (B, n_docs) score
+plane never materializes for large corpora.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +17,39 @@ import jax.numpy as jnp
 from repro.core.codecs import base
 
 Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search(query_embeddings: Array, doc_embeddings: Array, k: int,
+           block: int = 65536) -> tuple[Array, Array]:
+    """Exact top-k by inner product. Returns (scores (B,k), ids (B,k))."""
+    b = query_embeddings.shape[0]
+    n, h = doc_embeddings.shape
+    q = query_embeddings.astype(jnp.float32)
+
+    n_blocks = -(-n // block)
+    pad = n_blocks * block - n
+    docs = jnp.pad(doc_embeddings.astype(jnp.float32), ((0, pad), (0, 0)))
+    docs = docs.reshape(n_blocks, block, h)
+
+    def body(carry, xs):
+        best_s, best_i = carry
+        blk, blk_idx = xs
+        s = q @ blk.T                                            # (B, block)
+        ids = blk_idx * block + jnp.arange(block)
+        valid = ids < n
+        s = jnp.where(valid[None], s, -jnp.inf)
+        cat_s = jnp.concatenate([best_s, s], axis=-1)
+        cat_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(ids, (b, block))], axis=-1)
+        top_s, top_pos = jax.lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, top_pos, axis=-1)
+        return (top_s, top_i), None
+
+    init = (jnp.full((b, k), -jnp.inf), jnp.full((b, k), -1, jnp.int32))
+    (scores, ids), _ = jax.lax.scan(
+        body, init, (docs, jnp.arange(n_blocks)))
+    return scores, ids.astype(jnp.int32)
 
 
 class FlatCodec(base.Codec):

@@ -1,26 +1,211 @@
-"""PQ and OPQ codecs (paper §3.2, Eq. 3–4; DESIGN.md §7).
+"""PQ and OPQ — the quantization math (paper §3.2, Eq. 3–4) and its
+codecs (DESIGN.md §7), in one place.
 
-``PQCodec`` quantizes each embedding to ``m`` sub-codeword ids and
-scores candidates by ADC (per-query LUT + gather-sum; the Pallas kernel
-``repro.kernels.pq_adc`` on TPU, the jnp oracle otherwise).  ``OPQCodec``
-*composes* PQ with a learned orthogonal rotation — its params are an
-:class:`repro.core.opq.OPQCodebook` wrapping the same
-:class:`repro.core.pq.PQCodebook`, and scoring reduces to plain PQ once
-the query is rotated.  Codes are stored uint8 when ``k ≤ 256`` (Faiss's
-layout: 4× less HBM and gather traffic than i32 — §Perf, asserted
-equivalent by ``tests/test_perf_impls.py``).
+Product Quantization splits an h-dim embedding into ``m`` fragments,
+quantizing each fragment to one of ``k`` codewords.  Storage per
+document is ``m`` uint8 codes (k ≤ 256) — 32× smaller than fp32 at the
+paper's (m=96, k=256, h=768).  Search uses ADC (asymmetric distance
+computation): for a query we build a (m, k) inner-product lookup table
+once, then score any candidate with an ``m``-gather + sum (Eq. 4).  On
+TPU the LUT build is an MXU matmul and the gather-sum is the Pallas
+kernel ``repro.kernels.pq_adc``; :func:`adc_score` is the pure-jnp
+oracle path.  OPQ (Ge et al. 2014) composes PQ with a learned
+orthogonal rotation R so that ``x @ R`` is easier to product-quantize;
+scoring reduces to plain PQ once the query is rotated
+(``<xR, c> = <x, cRᵀ>``).
+
+``PQCodec`` / ``OPQCodec`` wrap this math behind the codec protocol:
+codes are stored uint8 when ``k ≤ 256`` (Faiss's layout: 4× less HBM
+and gather traffic than i32 — §Perf, asserted equivalent by
+``tests/test_perf_impls.py``).
 """
 from __future__ import annotations
+
+import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import opq as opq_mod
-from repro.core import pq as pq_mod
+from repro.core import kmeans
 from repro.core.codecs import base
 
 Array = jax.Array
 
+
+# --------------------------------------------------------------------------
+# PQ math (formerly core/pq.py)
+# --------------------------------------------------------------------------
+
+class PQCodebook(NamedTuple):
+    """codewords: (m, k, dsub) f32 — ``m`` independent sub-codebooks."""
+    codewords: Array
+
+    @property
+    def m(self) -> int:
+        return self.codewords.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codewords.shape[1]
+
+    @property
+    def dsub(self) -> int:
+        return self.codewords.shape[2]
+
+
+def split_fragments(x: Array, m: int) -> Array:
+    """(n, h) -> (n, m, h/m)."""
+    n, h = x.shape
+    assert h % m == 0, f"dim {h} not divisible by m={m}"
+    return x.reshape(n, m, h // m)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "n_iters"))
+def train_pq(key: Array, x: Array, m: int, k: int = 256,
+             n_iters: int = 15) -> PQCodebook:
+    """One KMeans per fragment, vmapped over the m independent subspaces."""
+    frags = split_fragments(x, m).transpose(1, 0, 2)  # (m, n, dsub)
+    keys = jax.random.split(key, m)
+
+    def fit_one(kk, xf):
+        c, _ = kmeans.kmeans_fit(kk, xf, n_clusters=k, n_iters=n_iters)
+        return c
+
+    codewords = jax.vmap(fit_one)(keys, frags)  # (m, k, dsub)
+    return PQCodebook(codewords=codewords)
+
+
+@jax.jit
+def pq_encode(codebook: PQCodebook, x: Array) -> Array:
+    """Quantize embeddings to codes. (n, h) -> (n, m) int32 (values < k)."""
+    frags = split_fragments(x, codebook.m)  # (n, m, dsub)
+    # distance argmin per subspace: argmax(<x, c> - ||c||²/2)
+    c = codebook.codewords.astype(jnp.float32)  # (m, k, dsub)
+    c_norm = 0.5 * jnp.sum(c * c, axis=-1)  # (m, k)
+    scores = jnp.einsum("nmd,mkd->nmk", frags.astype(jnp.float32), c) - c_norm
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def pq_decode(codebook: PQCodebook, codes: Array) -> Array:
+    """Reconstruct embeddings from codes. (n, m) -> (n, h)."""
+    gathered = jnp.take_along_axis(
+        codebook.codewords[None],            # (1, m, k, dsub)
+        codes[:, :, None, None],             # (n, m, 1, 1)
+        axis=2,
+    )[:, :, 0]                               # (n, m, dsub)
+    return gathered.reshape(codes.shape[0], -1)
+
+
+@jax.jit
+def adc_lut(codebook: PQCodebook, queries: Array) -> Array:
+    """Inner-product lookup tables for a batch of queries.
+
+    (B, h) -> (B, m, k): lut[b, j, i] = <e_Q^j, v_{j,i}>  (Eq. 4 terms).
+    """
+    qf = split_fragments(queries, codebook.m)  # (B, m, dsub)
+    return jnp.einsum("bmd,mkd->bmk", qf.astype(jnp.float32),
+                      codebook.codewords.astype(jnp.float32))
+
+
+@jax.jit
+def adc_score(lut: Array, codes: Array) -> Array:
+    """Score candidates against per-query LUTs (pure-jnp oracle path).
+
+    lut: (B, m, k); codes: (B, C, m) int -> scores (B, C) f32.
+
+    Implemented as ONE flat 1-D gather: the take_along_axis formulation
+    materializes five (B, C, m, 3) s32 index planes (~18 GB/device at
+    the MS MARCO serving point — EXPERIMENTS.md §Perf); flat indexing
+    needs a single (B, C, m) i32 plane. (The Pallas kernel sidesteps
+    both on TPU; this is the XLA fallback path.)
+    """
+    b, m, k = lut.shape
+    c = codes.shape[1]
+    # flatten only (m, k): the batch axis stays leading so its sharding
+    # survives (a full flatten forces GSPMD to reshard the LUT)
+    lut2 = lut.reshape(b, m * k)
+    idx = (jnp.arange(m, dtype=jnp.int32)[None, None, :] * k
+           + codes.astype(jnp.int32)).reshape(b, c * m)
+    gathered = jnp.take_along_axis(lut2, idx, axis=1)
+    return gathered.reshape(b, c, m).sum(axis=-1)
+
+
+@jax.jit
+def pq_full_scores(codebook: PQCodebook, queries: Array, codes: Array) -> Array:
+    """Exhaustive PQ scoring of a whole corpus: (B, h) × (n, m) -> (B, n)."""
+    lut = adc_lut(codebook, queries)                       # (B, m, k)
+    onehot_free = jnp.take_along_axis(
+        lut[:, None], codes[None, :, :, None], axis=-1)[..., 0]  # (B, n, m)
+    return jnp.sum(onehot_free, axis=-1)
+
+
+def reconstruction_mse(codebook: PQCodebook, x: Array) -> Array:
+    codes = pq_encode(codebook, x)
+    return jnp.mean(jnp.sum((pq_decode(codebook, codes) - x) ** 2, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# OPQ math (formerly core/opq.py)
+# --------------------------------------------------------------------------
+
+class OPQCodebook(NamedTuple):
+    rotation: Array        # (h, h) orthogonal
+    codebook: PQCodebook
+
+    @property
+    def m(self) -> int:
+        return self.codebook.m
+
+
+def train_opq(key: Array, x: Array, m: int, k: int = 256,
+              n_outer: int = 4, n_kmeans_iters: int = 10) -> OPQCodebook:
+    """Standard alternating scheme: PQ-train on rotated data (fix R, fit
+    codebooks), then Procrustes-solve for R (fix codebooks: R = U Vᵀ
+    from SVD of XᵀX̂, X̂ = decode(encode(XR))).  ``jnp.linalg.svd`` keeps
+    everything in JAX; the rotation is h×h (≤ 1024²) so this is cheap
+    relative to the KMeans passes."""
+    h = x.shape[-1]
+    r = jnp.eye(h, dtype=jnp.float32)
+    x = x.astype(jnp.float32)
+    cb = None
+    for it in range(n_outer):
+        key, sub = jax.random.split(key)
+        xr = x @ r
+        cb = train_pq(sub, xr, m=m, k=k, n_iters=n_kmeans_iters)
+        # Procrustes: min_R ||X R - X̂||_F  s.t. RᵀR = I
+        xhat = pq_decode(cb, pq_encode(cb, xr))
+        u, _, vt = jnp.linalg.svd(x.T @ xhat, full_matrices=False)
+        r = u @ vt
+    # final codebook on the final rotation
+    key, sub = jax.random.split(key)
+    cb = train_pq(sub, x @ r, m=m, k=k, n_iters=n_kmeans_iters)
+    return OPQCodebook(rotation=r, codebook=cb)
+
+
+@jax.jit
+def opq_encode(opq: OPQCodebook, x: Array) -> Array:
+    return pq_encode(opq.codebook, x.astype(jnp.float32) @ opq.rotation)
+
+
+@jax.jit
+def opq_adc_lut(opq: OPQCodebook, queries: Array) -> Array:
+    """Rotate the query into codebook space, then the LUT is plain PQ.
+
+    <x R, c> = <x, c Rᵀ> — rotating the query preserves Eq. 4 exactly.
+    """
+    return adc_lut(opq.codebook, queries.astype(jnp.float32) @ opq.rotation)
+
+
+def opq_reconstruction_mse(opq: OPQCodebook, x: Array) -> Array:
+    xr = x.astype(jnp.float32) @ opq.rotation
+    return reconstruction_mse(opq.codebook, xr)
+
+
+# --------------------------------------------------------------------------
+# codecs
+# --------------------------------------------------------------------------
 
 def _pack_codes(codes: Array, k: int) -> Array:
     return codes.astype(jnp.uint8) if k <= 256 else codes
@@ -36,7 +221,7 @@ def _adc_scorer(lut: Array, codes_plane: Array, use_kernel: bool):
         if use_kernel:
             from repro.kernels.pq_adc import ops as adc_ops
             return adc_ops.pq_adc(lut, codes)
-        return pq_mod.adc_score(lut, codes)
+        return adc_score(lut, codes)
 
     return score
 
@@ -45,27 +230,27 @@ class PQCodec(base.Codec):
     name = "pq"
 
     def train(self, key: Array, embeddings: Array, *, pq_m: int = 8,
-              pq_k: int = 256) -> pq_mod.PQCodebook:
-        return pq_mod.train_pq(key, embeddings.astype(jnp.float32),
-                               m=pq_m, k=pq_k)
+              pq_k: int = 256) -> PQCodebook:
+        return train_pq(key, embeddings.astype(jnp.float32),
+                        m=pq_m, k=pq_k)
 
-    def encode(self, params: pq_mod.PQCodebook, embeddings: Array) -> dict:
-        return {"codes": _pack_codes(pq_mod.encode(params, embeddings),
+    def encode(self, params: PQCodebook, embeddings: Array) -> dict:
+        return {"codes": _pack_codes(pq_encode(params, embeddings),
                                      params.k)}
 
-    def decode(self, params: pq_mod.PQCodebook, doc_planes: dict) -> Array:
-        return pq_mod.decode(params, doc_planes["codes"].astype(jnp.int32))
+    def decode(self, params: PQCodebook, doc_planes: dict) -> Array:
+        return pq_decode(params, doc_planes["codes"].astype(jnp.int32))
 
     def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
                  pq_k: int = 256):
         sds = jax.ShapeDtypeStruct
-        params = pq_mod.PQCodebook(
+        params = PQCodebook(
             codewords=sds((pq_m, pq_k, hidden // pq_m), jnp.float32))
         return params, {"codes": sds((n_docs, pq_m), _code_dtype(pq_k))}
 
-    def make_scorer(self, params: pq_mod.PQCodebook, doc_planes: dict,
+    def make_scorer(self, params: PQCodebook, doc_planes: dict,
                     queries: Array, use_kernel: bool = False):
-        lut = pq_mod.adc_lut(params, queries)            # (B, m, k)
+        lut = adc_lut(params, queries)                   # (B, m, k)
         return _adc_scorer(lut, doc_planes["codes"], use_kernel)
 
 
@@ -73,17 +258,17 @@ class OPQCodec(PQCodec):
     name = "opq"
 
     def train(self, key: Array, embeddings: Array, *, pq_m: int = 8,
-              pq_k: int = 256) -> opq_mod.OPQCodebook:
-        return opq_mod.train_opq(key, embeddings, m=pq_m, k=pq_k)
+              pq_k: int = 256) -> OPQCodebook:
+        return train_opq(key, embeddings, m=pq_m, k=pq_k)
 
-    def encode(self, params: opq_mod.OPQCodebook, embeddings: Array) -> dict:
-        return {"codes": _pack_codes(opq_mod.encode(params, embeddings),
+    def encode(self, params: OPQCodebook, embeddings: Array) -> dict:
+        return {"codes": _pack_codes(opq_encode(params, embeddings),
                                      params.codebook.k)}
 
-    def decode(self, params: opq_mod.OPQCodebook, doc_planes: dict) -> Array:
+    def decode(self, params: OPQCodebook, doc_planes: dict) -> Array:
         # decode in rotated space, rotate back (R orthogonal: R⁻¹ = Rᵀ)
-        xr = pq_mod.decode(params.codebook,
-                           doc_planes["codes"].astype(jnp.int32))
+        xr = pq_decode(params.codebook,
+                       doc_planes["codes"].astype(jnp.int32))
         return xr @ params.rotation.T
 
     def abstract(self, n_docs: int, hidden: int, *, pq_m: int = 8,
@@ -91,12 +276,12 @@ class OPQCodec(PQCodec):
         sds = jax.ShapeDtypeStruct
         cb, planes = PQCodec.abstract(self, n_docs, hidden,
                                       pq_m=pq_m, pq_k=pq_k)
-        params = opq_mod.OPQCodebook(
+        params = OPQCodebook(
             rotation=sds((hidden, hidden), jnp.float32), codebook=cb)
         return params, planes
 
-    def make_scorer(self, params: opq_mod.OPQCodebook, doc_planes: dict,
+    def make_scorer(self, params: OPQCodebook, doc_planes: dict,
                     queries: Array, use_kernel: bool = False):
         # <xR, c> = <x, cRᵀ>: rotating the query reduces OPQ to PQ (Eq. 4)
-        lut = opq_mod.adc_lut(params, queries)
+        lut = opq_adc_lut(params, queries)
         return _adc_scorer(lut, doc_planes["codes"], use_kernel)

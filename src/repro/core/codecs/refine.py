@@ -79,14 +79,14 @@ class RefineCodec(base.Codec):
 
     def refine(self, params, doc_planes, queries, scores, ids, top_r,
                ctx: base.RefineCtx):
-        from repro.core import hybrid_index as hi
+        from repro.core.exec import stages
         emb = ctx.gather(doc_planes["refine_emb"], ids)   # (B, R', h)
         exact = jnp.einsum("bh,brh->br", queries.astype(jnp.float32),
                            emb.astype(jnp.float32))
         exact = ctx.psum(jnp.where(ctx.owned(ids), exact, 0.0))
         # slots beyond the valid frontier stay -inf and sort last
         exact = jnp.where(jnp.isfinite(scores), exact, -jnp.inf)
-        return hi.topk_by_score(exact, ids, top_r)
+        return stages.topk_by_score(exact, ids, top_r)
 
     # --- accounting ------------------------------------------------------
     def candidate_cost(self, budget: int, top_r: int) -> int:

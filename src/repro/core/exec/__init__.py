@@ -1,0 +1,21 @@
+"""repro.core.exec — the composable query-execution layer (DESIGN.md §9).
+
+One staged pipeline (dispatch → gather → dedup → filter → score → topk
+→ refine) behind every search variant; see :mod:`repro.core.exec.stages`
+for the engine, :mod:`repro.core.exec.filters` for per-query namespace
+bitmaps, and :mod:`repro.core.exec.cost` for the shared latency proxy.
+"""
+from repro.core.exec import filters
+from repro.core.exec.cost import candidate_budget, candidate_cost
+from repro.core.exec.stages import (Frontier, SearchResult, ShardEnv,
+                                    Source, dedup, dispatch, execute,
+                                    filter_stage, gather, make_refine_ctx,
+                                    refine_planes, score, topk,
+                                    topk_by_score)
+
+__all__ = [
+    "Frontier", "SearchResult", "ShardEnv", "Source",
+    "candidate_budget", "candidate_cost", "dedup", "dispatch", "execute",
+    "filter_stage", "filters", "gather", "make_refine_ctx",
+    "refine_planes", "score", "topk", "topk_by_score",
+]

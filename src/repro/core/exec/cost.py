@@ -1,0 +1,35 @@
+"""The one cost model for the DESIGN.md §2 latency proxy.
+
+Search cost on the fixed-shape contract is dominated by gather + codec
+scoring over the static per-query candidate slots, so the compiled
+program's wall time is monotone in :func:`candidate_budget`; a refining
+codec adds R′ exact-scored docs on top (:func:`candidate_cost`).  Every
+index variant delegates here — one family per gather source (base,
+delta) — so the proxy reported by ``benchmarks/`` cannot drift between
+variants (it used to be re-implemented in ``hybrid_index``,
+``sharded_index`` AND ``segments``).
+
+``candidate_budget`` upper-bounds the paper's measured QL (queried
+length = unique candidates, reported per query as
+``SearchResult.n_candidates``); dedup and filtering only mask slots,
+they never shrink the compute.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+Family = Tuple[int, int]     # (cluster list capacity, term list capacity)
+
+
+def candidate_budget(kc: int, k2: int, families: Iterable[Family]) -> int:
+    """Static per-query candidate slots over every gather source."""
+    return sum(kc * c_cap + k2 * t_cap for c_cap, t_cap in families)
+
+
+def candidate_cost(codec_spec: str, kc: int, k2: int, top_r: int,
+                   families: Iterable[Family]) -> int:
+    """:func:`candidate_budget` plus the codec's refine work — the full
+    per-query latency proxy (DESIGN.md §7)."""
+    from repro.core import codecs
+    return codecs.get(codec_spec).candidate_cost(
+        candidate_budget(kc, k2, families), top_r)

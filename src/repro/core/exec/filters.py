@@ -1,0 +1,104 @@
+"""Per-query namespace filters (DESIGN.md §9) — fixed-shape predicates
+over candidate ids, without ever materializing a (B, n_docs) plane.
+
+Each document carries one namespace id (tenant, collection, language,
+shard-of-business — any partition of the corpus) in a per-doc ``doc_ns``
+plane that lives next to the codec planes: (n_docs,) i32, split over
+shards and delta segments exactly like every other doc plane.  A query's
+predicate is a bitmap over namespace ids:
+
+    ns_filter : (B, W) uint32,  W = ceil(n_namespaces / 32)
+    doc d passes query b  ⇔  bit (doc_ns[d]) of ns_filter[b] is set
+
+so the filter stage is one row gather + one word gather + a shift-mask —
+O(B·C) with C the candidate budget, independent of corpus size.  The
+tombstone mask of the mutation layer (DESIGN.md §8) is the degenerate
+per-doc, all-queries case of the same mechanism.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: bits per bitmap word
+WORD = 32
+
+
+def n_words(n_namespaces: int) -> int:
+    """Bitmap words per query for ``n_namespaces`` namespaces."""
+    if n_namespaces < 1:
+        raise ValueError(f"n_namespaces must be >= 1, got {n_namespaces}")
+    return -(-n_namespaces // WORD)
+
+
+def make_filter(allowed: Sequence, n_namespaces: int) -> Array:
+    """Build the (B, W) uint32 per-query bitmap.
+
+    ``allowed`` is one entry per query: an iterable of namespace ids the
+    query may see (an int is shorthand for a single namespace).  Ids
+    outside ``[0, n_namespaces)`` raise — a silently-ignored tenant id
+    is a correctness bug, not a convenience.
+    """
+    w = n_words(n_namespaces)
+    out = np.zeros((len(allowed), w), np.uint32)
+    for b, spec in enumerate(allowed):
+        ids = [spec] if np.isscalar(spec) else list(spec)
+        for ns in ids:
+            ns = int(ns)
+            if not 0 <= ns < n_namespaces:
+                raise ValueError(
+                    f"namespace id {ns} out of range [0, {n_namespaces}) "
+                    f"in filter row {b}")
+            out[b, ns // WORD] |= np.uint32(1) << np.uint32(ns % WORD)
+    return jnp.asarray(out)
+
+
+def allow_all(batch: int, n_namespaces: int) -> Array:
+    """The pass-everything bitmap — search with it is bit-identical to
+    searching with no filter (asserted by tests/test_exec.py)."""
+    return make_filter([range(n_namespaces)] * batch, n_namespaces)
+
+
+def allowed_mask(ns_filter: Array, ns_ids: Array) -> Array:
+    """(B, W) bitmap × (B, C) namespace ids → (B, C) bool.
+
+    ``ns_ids`` are the gathered per-candidate namespaces; garbage rows
+    from PAD candidates are fine — the caller ANDs with the dedup mask.
+    Ids outside the bitmap's range ``[0, W·32)`` match NOTHING: the
+    word gather must clip to stay fixed-shape, and letting a clipped id
+    alias onto a valid bit would leak one tenant's doc into another's
+    results — out-of-range docs fail closed instead.
+    """
+    w = ns_filter.shape[-1]
+    ids = ns_ids.astype(jnp.int32)
+    word = jnp.clip(ids // WORD, 0, w - 1)
+    bit = (ns_ids.astype(jnp.uint32)) % WORD
+    words = jnp.take_along_axis(ns_filter, word, axis=-1)
+    hit = ((words >> bit) & jnp.uint32(1)).astype(bool)
+    return hit & (ids >= 0) & (ids < w * WORD)
+
+
+def pad_filter(ns_filter: Optional[Array], batch: int) -> Optional[Array]:
+    """Zero-pad a bitmap to the serving ``max_batch`` (padded query rows
+    match nothing, mirroring the PAD query tokens)."""
+    if ns_filter is None:
+        return None
+    ns_filter = jnp.asarray(ns_filter, jnp.uint32)
+    pad = batch - ns_filter.shape[0]
+    if pad < 0:
+        raise ValueError(
+            f"filter batch {ns_filter.shape[0]} exceeds max_batch {batch}")
+    if pad:
+        ns_filter = jnp.pad(ns_filter, ((0, pad), (0, 0)))
+    return ns_filter
+
+
+def namespace_histogram(doc_ns: Array, n_namespaces: int) -> np.ndarray:
+    """Docs per namespace — selectivity accounting for benchmarks."""
+    return np.bincount(np.asarray(doc_ns).reshape(-1),
+                       minlength=n_namespaces)

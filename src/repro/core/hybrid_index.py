@@ -3,7 +3,8 @@
 Each document is referenced from the inverted lists of exactly **1
 embedding cluster** and **K₁ᵀ salient terms**.  A query is dispatched to
 **K^C clusters** and **≤ K₂ᵀ terms**; candidates from both list families
-are merged, deduplicated, scored by the codec and the top-R returned.
+are merged, deduplicated, optionally filtered, scored by the codec and
+the top-R returned.
 
 The codec — how documents are stored and scored — is pluggable
 (:mod:`repro.core.codecs`, DESIGN.md §7): ``HybridIndex.codec`` is a
@@ -12,39 +13,31 @@ stable) resolved through the codec registry; the codec's replicated
 parameters and per-document planes live in ``codec_params`` /
 ``doc_planes`` and are treated opaquely here.
 
-All search-time compute is fixed-shape jitted JAX (the search contract,
-DESIGN.md §2):
+Search-time compute is the staged query-execution engine of
+:mod:`repro.core.exec` (DESIGN.md §9):
 
-    dispatch  : two matmul+top-k (cluster) / table-lookup+top-k (term)
-    gather    : rows of the padded list planes → (B, budget) candidates
-    dedup     : sort-based first-occurrence mask
-    scoring   : codec scorer over the candidate rows (e.g. PQ ADC —
-                LUT matmul + code gather-sum; Pallas kernel
-                ``repro.kernels.pq_adc`` on TPU, jnp oracle otherwise)
-    top-R′    : total-order sort by (score desc, doc id asc) — see
-                :func:`topk_by_score` and DESIGN.md §6 (the deterministic
-                tie-break is what makes the document-sharded merge in
-                :mod:`repro.core.sharded_index` bit-identical to this
-                single-device path)
-    refine    : the codec's optional second stage (exact re-rank of the
-                R′ frontier down to R; identity for plain codecs)
+    dispatch → gather → dedup → filter → score → topk → refine
 
-The index build runs once on host+device; searching never reshapes.
-The static per-query candidate count (:func:`candidate_budget`) is the
-latency proxy used throughout ``benchmarks/`` — it upper-bounds the
-paper's QL (queried length) and is what the fixed shapes pin down;
-:func:`candidate_cost` adds the codec's refine work on top.
+configured with ONE :class:`~repro.core.exec.Source` (this index's two
+list families over its codec planes).  The mutable variant
+(:mod:`repro.core.segments`) adds a delta Source; the document-sharded
+variants (:mod:`repro.core.sharded_index`) run the same engine inside
+``shard_map`` — all four produce bit-identical results because selection
+always goes through the total order of :func:`topk_by_score`.
 
-Scaling beyond one device's HBM is document sharding (DESIGN.md §6):
-:func:`repro.core.sharded_index.partition` splits the doc planes and
-list entries over a mesh and reuses this module's dispatch/score ops
-per shard under ``shard_map``.
+``search(..., filter=)`` takes a per-query namespace bitmap
+(:mod:`repro.core.exec.filters`) over the optional ``doc_ns`` plane —
+first-class filtered search (tenants, collections) with the same fixed
+shapes.  The index build runs once on host+device; searching never
+reshapes.  The static per-query candidate count
+(:func:`candidate_budget`, one cost model in ``repro.core.exec.cost``)
+is the latency proxy used throughout ``benchmarks/``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,17 +45,24 @@ import numpy as np
 
 from repro.core import cluster_selector as cs_mod
 from repro.core import codecs
+from repro.core import exec as qexec
 from repro.core import inverted_lists as il
 from repro.core import term_selector as ts_mod
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
 
 Array = jax.Array
 
+# the search-result contract and total-order selection primitive live in
+# the exec layer now; re-exported here because every consumer of an
+# index naturally imports them from the index module
+SearchResult = qexec.SearchResult
+topk_by_score = qexec.topk_by_score
+
 
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_lists", "term_lists",
-                 "codec_params", "doc_planes", "doc_assign"],
+                 "codec_params", "doc_planes", "doc_assign", "doc_ns"],
     meta_fields=["codec"])
 @dataclasses.dataclass(frozen=True)
 class HybridIndex:
@@ -73,6 +73,8 @@ class HybridIndex:
     codec_params: Any               # replicated codec state (may be None)
     doc_planes: dict                # per-doc planes, every leaf (n_docs, ...)
     doc_assign: Array               # φ(D), (n_docs,) i32
+    doc_ns: Optional[Array] = None  # (n_docs,) i32 namespace ids (filtered
+    #                                 search; None ⇒ index is unfiltered)
     codec: str = codecs.DEFAULT     # registry spec (static)
 
     @property
@@ -112,6 +114,7 @@ def build(key: Array,
           kmeans_iters: int = 15,
           use_clusters: bool = True,
           use_terms: bool = True,
+          doc_namespaces: Optional[Array] = None,
           ) -> HybridIndex:
     """Build HI² over a corpus.
 
@@ -122,10 +125,19 @@ def build(key: Array,
     ``use_clusters`` / ``use_terms`` expose the paper's ablations
     (w.o. Clus / w.o. Term, §5.3).  ``codec`` is any
     :func:`repro.core.codecs.get` spec (unknown names raise with the
-    registered list).
+    registered list).  ``doc_namespaces`` ((n_docs,) int ids) enables
+    per-query filtered search (DESIGN.md §9).
     """
     codec_impl = codecs.get(codec)    # fail fast on unknown specs
     n_docs, _ = doc_embeddings.shape
+    if doc_namespaces is not None:    # fail fast BEFORE kmeans/codec train
+        doc_namespaces = jnp.asarray(doc_namespaces, jnp.int32)
+        if doc_namespaces.shape != (n_docs,):
+            raise ValueError(
+                f"doc_namespaces must be ({n_docs},), got "
+                f"{doc_namespaces.shape}")
+        if int(doc_namespaces.min()) < 0:
+            raise ValueError("doc_namespaces must be non-negative ids")
     k_cl, k_codec, k_ts = jax.random.split(key, 3)
 
     # --- cluster side -----------------------------------------------------
@@ -172,99 +184,105 @@ def build(key: Array,
                        cluster_lists=cluster_lists, term_lists=term_lists,
                        codec_params=codec_params, doc_planes=doc_planes,
                        doc_assign=jnp.asarray(doc_assign, jnp.int32),
+                       doc_ns=doc_namespaces,
                        codec=codec)
 
 
 # --------------------------------------------------------------------------
-# search
+# search — one exec.Source over this index
 # --------------------------------------------------------------------------
 
-class SearchResult(NamedTuple):
-    doc_ids: Array        # (B, R) i32, PAD_DOC when fewer candidates
-    scores: Array         # (B, R) f32
-    n_candidates: Array   # (B,) i32 — unique docs evaluated (∝ paper's QL)
-
-
-def topk_by_score(scores: Array, ids: Array, r: int) -> tuple[Array, Array]:
-    """Top-r rows under the total order (score desc, doc id asc).
-
-    ``jax.lax.top_k`` breaks score ties by *position* in the candidate
-    array, which differs between candidate orderings (single-device
-    concat vs per-shard merge).  Sorting on the composite key makes the
-    selection a pure function of the (score, id) *set*, so any
-    partitioning of the candidates merges back bit-identically
-    (DESIGN.md §6).  Invalid slots must carry ``-inf`` scores; they sort
-    last and keep their raw ids — callers mask them (``isfinite``).
-    Returns ``(scores, ids)`` of shape (B, r), ``-inf``/``PAD_DOC``
-    filled when fewer than r slots exist.
-    """
-    k_eff = min(r, scores.shape[-1])
-    neg_s, sorted_ids = jax.lax.sort(
-        (-scores, ids), dimension=-1, num_keys=2)
-    top_s, top_ids = -neg_s[..., :k_eff], sorted_ids[..., :k_eff]
-    if k_eff < r:
-        pad = ((0, 0), (0, r - k_eff))
-        top_s = jnp.pad(top_s, pad, constant_values=-jnp.inf)
-        top_ids = jnp.pad(top_ids, pad, constant_values=PAD_DOC)
-    return top_s, top_ids
+def base_source(index: HybridIndex) -> qexec.Source:
+    """The index as a single query-execution gather source."""
+    return qexec.Source(cluster_lists=index.cluster_lists,
+                        term_lists=index.term_lists,
+                        doc_planes=index.doc_planes,
+                        size=index.n_docs,
+                        doc_ns=index.doc_ns)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("kc", "k2", "top_r", "use_kernel"))
 def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
-           *, kc: int, k2: int, top_r: int,
-           use_kernel: bool = False) -> SearchResult:
-    """Eq. 5: A(Q) = A^C(Q) ∪ A^T(Q), then codec scoring + top-R."""
-    codec_impl = codecs.get(index.codec)
+           *, kc: int, k2: int, top_r: int, use_kernel: bool = False,
+           filter: Optional[Array] = None) -> SearchResult:
+    """Eq. 5: A(Q) = A^C(Q) ∪ A^T(Q), then codec scoring + top-R —
+    executed as the §9 stage chain over one Source.
 
-    # dispatch
-    cluster_ids, _ = cs_mod.select_for_query(index.cluster_sel,
-                                             query_embeddings, kc)
-    term_ids = ts_mod.query_terms(index.term_sel, query_tokens, k2)
-
-    # gather + merge
-    cand_c = il.gather_candidates(index.cluster_lists, cluster_ids)
-    cand_t = il.gather_candidates(index.term_lists, term_ids)
-    cands = jnp.concatenate([cand_c, cand_t], axis=-1)       # (B, budget)
-
-    keep = il.dedup_mask(cands)
-    scorer = codec_impl.make_scorer(index.codec_params, index.doc_planes,
-                                    query_embeddings, use_kernel)
-    scores = jnp.where(keep, scorer(cands), -jnp.inf)
-
-    # total-order top-R′ (handles budgets smaller than R′ by PAD-fill),
-    # then the codec's refine stage (identity unless it re-ranks)
-    top_s, top_ids = topk_by_score(scores, cands,
-                                   codec_impl.refine_width(top_r))
-    top_s, top_ids = codec_impl.refine(
-        index.codec_params, index.doc_planes, query_embeddings,
-        top_s, top_ids, top_r, codecs.single_device_ctx())
-
-    valid = jnp.isfinite(top_s)
-    return SearchResult(
-        doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
-        scores=jnp.where(valid, top_s, 0.0),
-        n_candidates=keep.sum(axis=-1).astype(jnp.int32),
-    )
+    ``filter`` is an optional (B, W) uint32 per-query namespace bitmap
+    (:func:`repro.core.exec.filters.make_filter`); it needs an index
+    built with ``doc_namespaces=``.
+    """
+    return qexec.execute(
+        codecs.get(index.codec), index.codec_params,
+        index.cluster_sel, index.term_sel, [base_source(index)],
+        query_embeddings, query_tokens,
+        kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
+        ns_filter=filter)
 
 
 def candidate_budget(index: HybridIndex, kc: int, k2: int) -> int:
     """Static per-query candidate slots — the latency proxy used by
-    ``benchmarks/`` (DESIGN.md §2).
-
-    Search cost is dominated by gather + codec scoring over this many
-    slots, and because the search step is fixed-shape the compiled
-    program's wall time is monotone in it.  It upper-bounds the paper's
-    measured QL (queried length = unique candidates, reported per query
-    as ``SearchResult.n_candidates``); dedup only masks slots, it never
-    shrinks the compute.
-    """
-    return kc * index.cluster_lists.capacity + k2 * index.term_lists.capacity
+    ``benchmarks/`` (DESIGN.md §2; one cost model for every variant in
+    :mod:`repro.core.exec.cost`)."""
+    return qexec.candidate_budget(
+        kc, k2, [(index.cluster_lists.capacity, index.term_lists.capacity)])
 
 
 def candidate_cost(index: HybridIndex, kc: int, k2: int, top_r: int) -> int:
     """:func:`candidate_budget` plus the codec's refine work — the full
-    per-query latency proxy (a refining codec exact-scores another R′
-    docs after selection; DESIGN.md §7)."""
-    return codecs.get(index.codec).candidate_cost(
-        candidate_budget(index, kc, k2), top_r)
+    per-query latency proxy (DESIGN.md §7)."""
+    return qexec.candidate_cost(
+        index.codec, kc, k2, top_r,
+        [(index.cluster_lists.capacity, index.term_lists.capacity)])
+
+
+# --------------------------------------------------------------------------
+# paper baselines — degenerate configurations of the same machinery
+# (formerly core/ivf.py; §5.1 baselines and §5.3 ablations)
+# --------------------------------------------------------------------------
+
+def build_ivf(key: Array, doc_embeddings: Array, doc_tokens: Array,
+              vocab_size: int, *, n_clusters: int, codec: str = "opq",
+              pq_m: int = 8, pq_k: int = 256,
+              cluster_capacity: Optional[int] = None,
+              cluster_sel=None, doc_assign=None,
+              kmeans_iters: int = 15) -> HybridIndex:
+    """Cluster-only index (IVF-Flat / IVF-PQ / IVF-OPQ / Distill-VQ
+    body).  Same code path as HI² with the term lists disabled, which
+    keeps the comparison honest: identical gather/dedup/top-k machinery,
+    only the dispatched lists differ (§5.1)."""
+    return build(key, doc_embeddings, doc_tokens, vocab_size,
+                 n_clusters=n_clusters, k1_terms=1, codec=codec,
+                 pq_m=pq_m, pq_k=pq_k, cluster_capacity=cluster_capacity,
+                 cluster_sel=cluster_sel, doc_assign=doc_assign,
+                 kmeans_iters=kmeans_iters,
+                 use_clusters=True, use_terms=False)
+
+
+def build_term_only(key: Array, doc_embeddings: Array, doc_tokens: Array,
+                    vocab_size: int, *, k1_terms: int, codec: str = "opq",
+                    pq_m: int = 8, pq_k: int = 256,
+                    term_capacity: Optional[int] = None,
+                    term_pos_scores=None, term_sel=None) -> HybridIndex:
+    """Term-only index (the paper's w.o. Clus ablation)."""
+    return build(key, doc_embeddings, doc_tokens, vocab_size,
+                 n_clusters=1, k1_terms=k1_terms, codec=codec,
+                 pq_m=pq_m, pq_k=pq_k, term_capacity=term_capacity,
+                 term_pos_scores=term_pos_scores, term_sel=term_sel,
+                 use_clusters=False, use_terms=True)
+
+
+def search_ivf(index: HybridIndex, query_embeddings: Array,
+               query_tokens: Array, *, kc: int, top_r: int,
+               use_kernel: bool = False) -> SearchResult:
+    """Search with the term side off (k2=1 dispatches only PAD lists)."""
+    return search(index, query_embeddings, query_tokens,
+                  kc=kc, k2=1, top_r=top_r, use_kernel=use_kernel)
+
+
+def search_term_only(index: HybridIndex, query_embeddings: Array,
+                     query_tokens: Array, *, k2: int, top_r: int,
+                     use_kernel: bool = False) -> SearchResult:
+    return search(index, query_embeddings, query_tokens,
+                  kc=1, k2=k2, top_r=top_r, use_kernel=use_kernel)

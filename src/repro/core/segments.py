@@ -14,9 +14,10 @@ contract of DESIGN.md §2:
                    encode through the base codec params, append into
                    fixed-capacity delta planes.  New docs get global ids
                    ``n_base + slot``.
-    delete_docs()  set a tombstone bit; the mask is applied before the
-                   total-order top-R selection, so a deleted doc can
-                   never surface — not even as a refine-stage candidate.
+    delete_docs()  set a tombstone bit; the exec layer's filter stage
+                   applies the mask before the total-order top-R
+                   selection, so a deleted doc can never surface — not
+                   even as a refine-stage candidate.
     compact()      fold the delta into a fresh base.  Implemented as a
                    from-scratch :func:`repro.core.hybrid_index.build`
                    over the surviving corpus with the original key, so
@@ -25,14 +26,15 @@ contract of DESIGN.md §2:
                    contract's streaming analogue), enforced for every
                    registered codec by ``tests/test_segments.py``.
 
-Search stays one fixed-shape jitted program: the delta segment has
-static capacity, base and delta candidates are gathered and scored by
-the *same* dispatch/gather/codec ops as the base-only path, and the two
-frontiers merge through :func:`~repro.core.hybrid_index.topk_by_score`
-before the codec's refine stage — so every registered codec
-(flat/pq/opq/sq8/refine) works unmodified.  Mutations are host-side
-numpy (like the base build); they change plane *values*, never shapes,
-so serving never recompiles between compactions.
+Search is the staged query-execution engine of :mod:`repro.core.exec`
+(DESIGN.md §9) over TWO gather sources — the base planes and the
+fixed-capacity delta planes — merged through the same total-order
+selection as every other variant, so every registered codec
+(flat/pq/opq/sq8/refine) works unmodified and per-query namespace
+filters (``search(..., filter=)``) apply to streamed docs exactly like
+indexed ones.  Mutations are host-side numpy (like the base build);
+they change plane *values*, never shapes, so serving never recompiles
+between compactions.
 
 :class:`ShardedMutableIndex` runs the same semantics over the
 document-sharded layout of DESIGN.md §6: each shard owns a contiguous
@@ -54,12 +56,12 @@ import numpy as np
 from repro.core import bm25
 from repro.core import cluster_selector as cs_mod
 from repro.core import codecs
+from repro.core import exec as qexec
 from repro.core import hybrid_index as hi
-from repro.core import inverted_lists as il
 from repro.core import sharded_index as shi
 from repro.core import term_selector as ts_mod
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
-from repro.distributed import collectives, compat
+from repro.distributed import compat
 
 Array = jax.Array
 
@@ -71,7 +73,8 @@ class DeltaFull(RuntimeError):
 
 @functools.partial(
     jax.tree_util.register_dataclass,
-    data_fields=["cluster_lists", "term_lists", "doc_planes", "doc_assign"],
+    data_fields=["cluster_lists", "term_lists", "doc_planes", "doc_assign",
+                 "doc_ns"],
     meta_fields=[])
 @dataclasses.dataclass(frozen=True)
 class DeltaSegment:
@@ -82,95 +85,65 @@ class DeltaSegment:
     term_lists: PaddedLists           # (V, Ct') i32
     doc_planes: dict                  # codec planes, leaves (capacity, ...)
     doc_assign: Array                 # (capacity,) i32
+    doc_ns: Optional[Array] = None    # (capacity,) i32 namespace ids
 
     @property
     def capacity(self) -> int:
         return int(self.doc_assign.shape[0])
 
 
-def _pair_gather(plane_pair, ids: Array, *, n_base: int, b_lo: int,
-                 b_size: int, d_lo: int, d_size: int) -> Array:
-    """RefineCtx gather over a (base_plane, delta_plane) pair.
-
-    Routes each global id to the segment that stores it: ids below
-    ``n_base`` hit the base plane at row ``id - b_lo``, ids at or above
-    hit the delta plane at row ``id - n_base - d_lo`` (``b_lo``/``d_lo``
-    are 0 on the single-device path and the shard offsets under
-    shard_map).  Out-of-segment rows are clipped garbage — callers mask
-    them via ``ctx.owned`` / finite-score checks.
-    """
-    plane_b, plane_d = plane_pair
-    rows_b = plane_b[jnp.clip(ids - b_lo, 0, b_size - 1)]
-    rows_d = plane_d[jnp.clip(ids - n_base - d_lo, 0, d_size - 1)]
-    is_delta = ids >= n_base
-    is_delta = is_delta.reshape(is_delta.shape
-                                + (1,) * (rows_b.ndim - is_delta.ndim))
-    return jnp.where(is_delta, rows_d, rows_b)
+def _pair_sources(base: hi.HybridIndex, delta: DeltaSegment,
+                  tombstones: Array) -> list:
+    """The (base, delta) source pair for the single-device mutable path:
+    same global-capacity base source as the immutable index, plus the
+    delta planes owning global ids [n_base, n_base + capacity)."""
+    n_base = base.doc_assign.shape[0]
+    cap = delta.capacity
+    return [
+        qexec.Source(cluster_lists=base.cluster_lists,
+                     term_lists=base.term_lists,
+                     doc_planes=base.doc_planes,
+                     size=n_base,
+                     tombstones=tombstones[:n_base],
+                     doc_ns=base.doc_ns),
+        qexec.Source(cluster_lists=delta.cluster_lists,
+                     term_lists=delta.term_lists,
+                     doc_planes=delta.doc_planes,
+                     size=cap,
+                     offset=n_base,
+                     family_lo=n_base,
+                     family_hi=n_base + cap,
+                     tombstones=tombstones[n_base:],
+                     doc_ns=delta.doc_ns),
+    ]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("kc", "k2", "top_r", "use_kernel"))
 def search(base: hi.HybridIndex, delta: DeltaSegment, tombstones: Array,
            query_embeddings: Array, query_tokens: Array, *, kc: int,
-           k2: int, top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+           k2: int, top_r: int, use_kernel: bool = False,
+           filter: Optional[Array] = None) -> hi.SearchResult:
     """Eq. 5 over base ∪ delta minus tombstones — one fixed-shape jitted
-    program (DESIGN.md §8).
+    program (DESIGN.md §8): the §9 stage chain over the (base, delta)
+    source pair.
 
     Dispatch runs once on the shared selectors; base and delta
-    candidates are gathered from their own list planes, deduped and
-    tombstone-masked together, scored by the codec against their own doc
-    planes, and the merged frontier goes through the total-order
-    ``topk_by_score`` *before* the codec's refine stage — so refine can
-    never resurrect a tombstoned doc (masked slots carry ``-inf`` and
-    stay ``-inf`` through re-ranking).  ``n_candidates`` counts unique
-    *live* docs evaluated.
+    candidates are gathered from their own list planes, deduped,
+    tombstone- and namespace-masked together, scored by the codec
+    against their own doc planes, and the merged frontier goes through
+    the total-order selection *before* the codec's refine stage — so
+    refine can never resurrect a tombstoned or filtered doc (masked
+    slots carry ``-inf`` and stay ``-inf`` through re-ranking).
+    ``n_candidates`` counts unique *live* docs evaluated.
     """
-    codec_impl = codecs.get(base.codec)
-    n_base = base.doc_assign.shape[0]
-    cap = delta.capacity
-
-    cluster_ids, _ = cs_mod.select_for_query(base.cluster_sel,
-                                             query_embeddings, kc)
-    term_ids = ts_mod.query_terms(base.term_sel, query_tokens, k2)
-
-    cand_b = jnp.concatenate(
-        [il.gather_candidates(base.cluster_lists, cluster_ids),
-         il.gather_candidates(base.term_lists, term_ids)], axis=-1)
-    cand_d = jnp.concatenate(
-        [il.gather_candidates(delta.cluster_lists, cluster_ids),
-         il.gather_candidates(delta.term_lists, term_ids)], axis=-1)
-    cands = jnp.concatenate([cand_b, cand_d], axis=-1)
-
-    keep = il.dedup_mask(cands)
-    dead = tombstones[jnp.clip(cands, 0, n_base + cap - 1)]
-    live = keep & ~dead
-
-    scorer_b = codec_impl.make_scorer(base.codec_params, base.doc_planes,
-                                      query_embeddings, use_kernel)
-    scorer_d = codec_impl.make_scorer(base.codec_params, delta.doc_planes,
-                                      query_embeddings, use_kernel)
-    local_d = jnp.clip(cand_d - n_base, 0, cap - 1)
-    scores = jnp.concatenate([scorer_b(cand_b), scorer_d(local_d)], axis=-1)
-    scores = jnp.where(live, scores, -jnp.inf)
-
-    top_s, top_ids = hi.topk_by_score(scores, cands,
-                                      codec_impl.refine_width(top_r))
-    pair_planes = {k: (base.doc_planes[k], delta.doc_planes[k])
-                   for k in base.doc_planes}
-    ctx = codecs.RefineCtx(
-        gather=functools.partial(_pair_gather, n_base=n_base, b_lo=0,
-                                 b_size=n_base, d_lo=0, d_size=cap),
-        owned=lambda ids: ids >= 0,
-        psum=lambda x: x)
-    top_s, top_ids = codec_impl.refine(base.codec_params, pair_planes,
-                                       query_embeddings, top_s, top_ids,
-                                       top_r, ctx)
-
-    valid = jnp.isfinite(top_s)
-    return hi.SearchResult(
-        doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),
-        scores=jnp.where(valid, top_s, 0.0),
-        n_candidates=live.sum(axis=-1).astype(jnp.int32))
+    return qexec.execute(
+        codecs.get(base.codec), base.codec_params,
+        base.cluster_sel, base.term_sel,
+        _pair_sources(base, delta, tombstones),
+        query_embeddings, query_tokens,
+        kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
+        ns_filter=filter)
 
 
 # --------------------------------------------------------------------------
@@ -210,15 +183,17 @@ class MutableHybridIndex:
     is host-side numpy; search operands are rebuilt lazily and cached,
     so repeated searches between mutations transfer nothing.
 
-    The raw corpus (embeddings + tokens) is retained host-side: it is
-    the source of truth ``compact()`` rebuilds from and what makes the
-    rebuild bit-identical to a from-scratch build over the survivors.
+    The raw corpus (embeddings + tokens + namespaces when filtered) is
+    retained host-side: it is the source of truth ``compact()`` rebuilds
+    from and what makes the rebuild bit-identical to a from-scratch
+    build over the survivors.
     """
 
     def __init__(self, base: hi.HybridIndex, *, vocab_size: int, key: Array,
                  build_kwargs: dict, delta_capacity: int,
                  delta_cluster_capacity: int, delta_term_capacity: int,
-                 corpus_emb: np.ndarray, corpus_tokens: np.ndarray):
+                 corpus_emb: np.ndarray, corpus_tokens: np.ndarray,
+                 corpus_ns: Optional[np.ndarray] = None):
         if delta_capacity < 1:
             raise ValueError("delta_capacity must be >= 1")
         self.base = base
@@ -230,6 +205,10 @@ class MutableHybridIndex:
         self.delta_term_capacity = int(delta_term_capacity)
         self._corpus_emb = np.array(corpus_emb, np.float32)
         self._corpus_tokens = np.array(corpus_tokens, np.int32)
+        if (corpus_ns is None) != (base.doc_ns is None):
+            raise ValueError("corpus_ns must accompany a namespaced base")
+        self._corpus_ns = (None if corpus_ns is None
+                           else np.array(corpus_ns, np.int32))
         self._stats = bm25.fit(jnp.asarray(self._corpus_tokens), vocab_size)
 
         n_clusters = base.cluster_lists.n_lists
@@ -252,6 +231,8 @@ class MutableHybridIndex:
                                  jnp.zeros((cap, hidden), jnp.float32))
         self._delta_planes = {k: np.array(v) for k, v in zero.items()}
         self._delta_assign = np.zeros((cap,), np.int32)
+        self._delta_ns = (None if self._corpus_ns is None
+                          else np.zeros((cap,), np.int32))
         self._delta_emb = np.zeros((cap, hidden), np.float32)
         self._delta_tokens = np.full((cap, self._corpus_tokens.shape[1]),
                                      bm25.PAD_ID, np.int32)
@@ -266,6 +247,7 @@ class MutableHybridIndex:
                delta_capacity: int = 1024,
                delta_cluster_capacity: Optional[int] = None,
                delta_term_capacity: Optional[int] = None,
+               doc_namespaces=None,
                **build_kwargs) -> "MutableHybridIndex":
         """Build the base index and wrap it with an empty delta segment.
 
@@ -273,6 +255,8 @@ class MutableHybridIndex:
         :func:`repro.core.hybrid_index.build` — and replayed by
         ``compact()``, so they must be plain JSON-able values
         (ints/strings/bools), not pre-trained selector overrides.
+        ``doc_namespaces`` enables filtered search; streamed docs carry
+        the ``namespaces=`` argument of :meth:`add_docs`.
         """
         for k in ("cluster_sel", "doc_assign", "term_sel",
                   "term_pos_scores"):
@@ -283,8 +267,11 @@ class MutableHybridIndex:
                     "pre-trained selector state")
         doc_emb = np.asarray(doc_emb, np.float32)
         doc_tokens = np.asarray(doc_tokens, np.int32)
+        if doc_namespaces is not None:
+            doc_namespaces = np.asarray(doc_namespaces, np.int32)
         base = hi.build(key, jnp.asarray(doc_emb), jnp.asarray(doc_tokens),
-                        vocab_size, **build_kwargs)
+                        vocab_size, doc_namespaces=doc_namespaces,
+                        **build_kwargs)
         n_clusters = base.cluster_lists.n_lists
         k1 = int(build_kwargs["k1_terms"])
         if delta_cluster_capacity is None:
@@ -299,7 +286,8 @@ class MutableHybridIndex:
                    build_kwargs=build_kwargs, delta_capacity=delta_capacity,
                    delta_cluster_capacity=delta_cluster_capacity,
                    delta_term_capacity=delta_term_capacity,
-                   corpus_emb=doc_emb, corpus_tokens=doc_tokens)
+                   corpus_emb=doc_emb, corpus_tokens=doc_tokens,
+                   corpus_ns=doc_namespaces)
 
     # --- views -----------------------------------------------------------
     @property
@@ -331,16 +319,31 @@ class MutableHybridIndex:
     def tombstones(self) -> np.ndarray:
         return self._tomb.copy()
 
+    @property
+    def filtered(self) -> bool:
+        """True when the index carries namespace planes (DESIGN.md §9)."""
+        return self._corpus_ns is not None
+
     def is_deleted(self, ids) -> np.ndarray:
         return self._tomb[np.asarray(ids)]
 
+    def namespaces_of(self, ids) -> np.ndarray:
+        """Namespace id of each global doc id (filtered indexes only)."""
+        if not self.filtered:
+            raise ValueError("index has no namespace planes")
+        ids = np.asarray(ids)
+        all_ns = np.concatenate([self._corpus_ns, self._delta_ns])
+        return all_ns[ids]
+
     # --- mutation --------------------------------------------------------
-    def add_docs(self, doc_emb, doc_tokens) -> np.ndarray:
+    def add_docs(self, doc_emb, doc_tokens, namespaces=None) -> np.ndarray:
         """Append documents to the delta segment; returns their global ids.
 
         Assignment uses the *frozen* base state: cluster = argmax against
         the base selector, salient terms = BM25 under the base corpus
-        statistics (df/avgdl/s̄ refresh only at ``compact()``).  Raises
+        statistics (df/avgdl/s̄ refresh only at ``compact()``).
+        ``namespaces`` ((n_new,) int ids or a scalar) is required on a
+        filtered index and rejected on an unfiltered one.  Raises
         :class:`DeltaFull` when the segment has no free slots.
         """
         emb = np.atleast_2d(np.asarray(doc_emb, np.float32))
@@ -349,6 +352,19 @@ class MutableHybridIndex:
         if tokens.shape[0] != n_new:
             raise ValueError(f"emb/tokens row mismatch: {n_new} vs "
                              f"{tokens.shape[0]}")
+        if namespaces is not None and not self.filtered:
+            raise ValueError(
+                "namespaces= on an unfiltered index; build with "
+                "doc_namespaces= to enable filtered search")
+        if self.filtered:
+            if namespaces is None:
+                raise ValueError(
+                    "filtered index: add_docs needs namespaces= for the "
+                    "new docs")
+            ns = np.broadcast_to(np.asarray(namespaces, np.int32),
+                                 (n_new,)).copy()
+            if ns.min() < 0:
+                raise ValueError("namespaces must be non-negative ids")
         width = self._corpus_tokens.shape[1]
         if tokens.shape[1] > width:
             raise ValueError(f"doc_tokens wider than the corpus "
@@ -379,6 +395,8 @@ class MutableHybridIndex:
         self._delta_emb[lo:lo + n_new] = emb
         self._delta_tokens[lo:lo + n_new] = tokens
         self._delta_assign[lo:lo + n_new] = assign
+        if self.filtered:
+            self._delta_ns[lo:lo + n_new] = ns
 
         ids = self.n_base + lo + np.arange(n_new)
         for i in range(n_new):
@@ -424,17 +442,21 @@ class MutableHybridIndex:
                                        jnp.asarray(self._dt_lengths)),
                 doc_planes={k: jnp.asarray(v)
                             for k, v in self._delta_planes.items()},
-                doc_assign=jnp.asarray(self._delta_assign))
+                doc_assign=jnp.asarray(self._delta_assign),
+                doc_ns=(None if self._delta_ns is None
+                        else jnp.asarray(self._delta_ns)))
             self._cache = (delta, jnp.asarray(self._tomb))
 
     def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
-               top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+               top_r: int, use_kernel: bool = False,
+               filter=None) -> hi.SearchResult:
         self._materialize()
         delta, tomb = self._cache
         return search(self.base, delta, tomb,
                       jnp.asarray(query_embeddings),
                       jnp.asarray(query_tokens),
-                      kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel)
+                      kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
+                      filter=filter)
 
     # --- compaction ------------------------------------------------------
     def survivors(self) -> np.ndarray:
@@ -450,6 +472,15 @@ class MutableHybridIndex:
         live = self.survivors()
         return emb[live], tokens[live]
 
+    def surviving_namespaces(self) -> Optional[np.ndarray]:
+        """Namespace ids of the survivors (None on unfiltered indexes)
+        — what ``compact()`` re-indexes them under."""
+        if not self.filtered:
+            return None
+        ns = np.concatenate([self._corpus_ns,
+                             self._delta_ns[:self._count]])
+        return ns[self.survivors()]
+
     def compact(self, key: Optional[Array] = None) -> "MutableHybridIndex":
         """Fold delta + tombstones into a fresh base with an empty delta.
 
@@ -458,8 +489,9 @@ class MutableHybridIndex:
         original build key unless overridden — which is what makes the
         equivalence contract exact rather than approximate: the
         compacted index is bit-identical to ``hi.build`` on the
-        survivors.  Surviving docs are renumbered contiguously; use
-        :meth:`survivors` for the old→new id correspondence.
+        survivors.  Surviving docs are renumbered contiguously (their
+        namespaces travel with them); use :meth:`survivors` for the
+        old→new id correspondence.
         """
         emb, tokens = self.surviving_corpus()
         if emb.shape[0] == 0:
@@ -469,41 +501,52 @@ class MutableHybridIndex:
             delta_capacity=self.delta_capacity,
             delta_cluster_capacity=self.delta_cluster_capacity,
             delta_term_capacity=self.delta_term_capacity,
+            doc_namespaces=self.surviving_namespaces(),
             **self.build_kwargs)
 
     # --- cost accounting (DESIGN.md §2 latency proxy) --------------------
+    def families(self) -> list:
+        """(cluster, term) list capacities per gather source — the input
+        to the shared cost model (repro.core.exec.cost)."""
+        return [(self.base.cluster_lists.capacity,
+                 self.base.term_lists.capacity),
+                (self.delta_cluster_capacity, self.delta_term_capacity)]
+
     def candidate_budget(self, kc: int, k2: int) -> int:
-        return (hi.candidate_budget(self.base, kc, k2)
-                + kc * self.delta_cluster_capacity
-                + k2 * self.delta_term_capacity)
+        return qexec.candidate_budget(kc, k2, self.families())
 
     def candidate_cost(self, kc: int, k2: int, top_r: int) -> int:
-        return codecs.get(self.base.codec).candidate_cost(
-            self.candidate_budget(kc, k2), top_r)
+        return qexec.candidate_cost(self.base.codec, kc, k2, top_r,
+                                    self.families())
 
     # --- persistence (driven by repro.checkpoint) ------------------------
     def state_tree(self) -> dict:
         """The checkpointable pytree: base index + every piece of delta
-        and tombstone state (including the retained corpus and the list
-        score planes that drive overflow eviction, so restored indexes
-        mutate identically to never-saved ones)."""
+        and tombstone state (including the retained corpus, the
+        namespace planes when filtered, and the list score planes that
+        drive overflow eviction, so restored indexes mutate identically
+        to never-saved ones)."""
+        delta = {
+            "cluster_entries": self._dc_entries,
+            "cluster_scores": self._dc_scores,
+            "cluster_lengths": self._dc_lengths,
+            "term_entries": self._dt_entries,
+            "term_scores": self._dt_scores,
+            "term_lengths": self._dt_lengths,
+            "planes": self._delta_planes,
+            "assign": self._delta_assign,
+            "emb": self._delta_emb,
+            "tokens": self._delta_tokens,
+        }
+        corpus = {"emb": self._corpus_emb, "tokens": self._corpus_tokens}
+        if self.filtered:
+            delta["ns"] = self._delta_ns
+            corpus["ns"] = self._corpus_ns
         return {
             "base": self.base,
-            "delta": {
-                "cluster_entries": self._dc_entries,
-                "cluster_scores": self._dc_scores,
-                "cluster_lengths": self._dc_lengths,
-                "term_entries": self._dt_entries,
-                "term_scores": self._dt_scores,
-                "term_lengths": self._dt_lengths,
-                "planes": self._delta_planes,
-                "assign": self._delta_assign,
-                "emb": self._delta_emb,
-                "tokens": self._delta_tokens,
-            },
+            "delta": delta,
             "tombstones": self._tomb,
-            "corpus": {"emb": self._corpus_emb,
-                       "tokens": self._corpus_tokens},
+            "corpus": corpus,
             "key": jax.random.key_data(self.key),
         }
 
@@ -515,6 +558,7 @@ class MutableHybridIndex:
                 "delta_term_capacity": self.delta_term_capacity,
                 "vocab_size": self.vocab_size,
                 "build_kwargs": self.build_kwargs,
+                "filtered": self.filtered,
                 "dropped_postings": self.dropped_postings}
 
     @classmethod
@@ -522,6 +566,7 @@ class MutableHybridIndex:
         """Rebuild a mutable index from a restored :meth:`state_tree`
         (leaves may be jnp arrays) + its :meth:`state_extra`."""
         m = extra["mutable"] if "mutable" in extra else extra
+        corpus_ns = tree["corpus"].get("ns")
         out = cls(tree["base"], vocab_size=int(m["vocab_size"]),
                   key=jax.random.wrap_key_data(jnp.asarray(tree["key"])),
                   build_kwargs=dict(m["build_kwargs"]),
@@ -529,7 +574,9 @@ class MutableHybridIndex:
                   delta_cluster_capacity=int(m["delta_cluster_capacity"]),
                   delta_term_capacity=int(m["delta_term_capacity"]),
                   corpus_emb=np.asarray(tree["corpus"]["emb"]),
-                  corpus_tokens=np.asarray(tree["corpus"]["tokens"]))
+                  corpus_tokens=np.asarray(tree["corpus"]["tokens"]),
+                  corpus_ns=(None if corpus_ns is None
+                             else np.asarray(corpus_ns)))
         d = tree["delta"]
         # np.array (not asarray): restored leaves may be jnp arrays whose
         # numpy views are read-only, and all of this state is mutated
@@ -541,6 +588,8 @@ class MutableHybridIndex:
         out._dt_lengths = np.array(d["term_lengths"], np.int32)
         out._delta_planes = {k: np.array(v) for k, v in d["planes"].items()}
         out._delta_assign = np.array(d["assign"], np.int32)
+        if "ns" in d:
+            out._delta_ns = np.array(d["ns"], np.int32)
         out._delta_emb = np.array(d["emb"], np.float32)
         out._delta_tokens = np.array(d["tokens"], np.int32)
         out._tomb = np.array(tree["tombstones"], bool)
@@ -551,91 +600,66 @@ class MutableHybridIndex:
 
 
 # --------------------------------------------------------------------------
-# document-sharded mutable search (DESIGN.md §6 + §8)
+# document-sharded mutable search (DESIGN.md §6 + §8 + §9)
 # --------------------------------------------------------------------------
 
 def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
                              per: int, dper: int, kc: int, k2: int,
-                             top_r: int, use_kernel: bool = False):
+                             top_r: int, use_kernel: bool = False,
+                             filtered: bool = False):
     """shard_map'd base∪delta search + merge for one static config.
 
     Shard ``s`` owns base docs [s·per, (s+1)·per) *and* delta slots
     [s·dper, (s+1)·dper) (global ids ``n_base + slot``).  The body is
-    the sharded §6 pipeline with a second (delta) candidate family and
-    the tombstone mask applied before the local top-R′; the refine ctx
-    routes the merged frontier through per-segment plane pairs exactly
-    like the single-device mutable path, so results stay bit-identical.
+    the §9 stage chain over the per-shard (base, delta) source pair
+    under a :class:`~repro.core.exec.ShardEnv` — the same engine as
+    every other variant, so results stay bit-identical.  With
+    ``filtered=True`` the step takes a fifth argument, the replicated
+    (B, W) namespace bitmap, and ``planes`` must carry ``base_ns`` /
+    ``delta_ns``.
     """
+    from jax.sharding import PartitionSpec as P
+
     codec_impl = codecs.get(codec)
-    r_prime = codec_impl.refine_width(top_r)
+    n_shards = mesh.shape[axis_name]
 
-    def body(shard, rep, qe, qt):
+    def body(shard, rep, qe, qt, ns_filter=None):
         shard = jax.tree.map(lambda x: x[0], shard)
-        cluster_ids, _ = cs_mod.select_for_query(
-            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]), qe, kc)
-        term_ids = ts_mod.query_terms(
-            ts_mod.TermSelector(avg_scores=rep["term_avg"]), qt, k2)
-
-        def family(prefix):
-            return jnp.concatenate(
-                [il.gather_candidates(
-                    PaddedLists(shard[f"{prefix}_cluster_entries"],
-                                shard[f"{prefix}_cluster_lengths"]),
-                    cluster_ids),
-                 il.gather_candidates(
-                     PaddedLists(shard[f"{prefix}_term_entries"],
-                                 shard[f"{prefix}_term_lengths"]),
-                     term_ids)], axis=-1)
-
-        cand_b, cand_d = family("base"), family("delta")
-        cands = jnp.concatenate([cand_b, cand_d], axis=-1)
-        keep = il.dedup_mask(cands)
-
         s = jax.lax.axis_index(axis_name)
         b_lo, d_lo = s * per, s * dper
-        local_b = jnp.clip(cand_b - b_lo, 0, per - 1)
-        local_d = jnp.clip(cand_d - n_base - d_lo, 0, dper - 1)
-        dead = jnp.concatenate(
-            [shard["tomb_base"][local_b], shard["tomb_delta"][local_d]],
-            axis=-1)
-        live = keep & ~dead
-
-        scorer_b = codec_impl.make_scorer(rep["codec"], shard["base_codec"],
-                                          qe, use_kernel)
-        scorer_d = codec_impl.make_scorer(rep["codec"], shard["delta_codec"],
-                                          qe, use_kernel)
-        scores = jnp.concatenate([scorer_b(local_b), scorer_d(local_d)],
-                                 axis=-1)
-        scores = jnp.where(live, scores, -jnp.inf)
-
-        top_s, top_ids = hi.topk_by_score(scores, cands, r_prime)
-        all_s, all_ids = collectives.gather_topk(top_s, top_ids, axis_name)
-        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, r_prime)
-
-        pair_planes = {k: (shard["base_codec"][k], shard["delta_codec"][k])
-                       for k in shard["base_codec"]}
-
-        def owned(ids):
-            base_owned = ((ids >= b_lo) & (ids < b_lo + per)
-                          & (ids < n_base))
-            delta_owned = ((ids >= n_base + d_lo)
-                           & (ids < n_base + d_lo + dper))
-            return base_owned | delta_owned
-
-        ctx = codecs.RefineCtx(
-            gather=functools.partial(_pair_gather, n_base=n_base, b_lo=b_lo,
-                                     b_size=per, d_lo=d_lo, d_size=dper),
-            owned=owned,
-            psum=lambda x: jax.lax.psum(x, axis_name))
-        fin_s, fin_ids = codec_impl.refine(rep["codec"], pair_planes, qe,
-                                           fin_s, fin_ids, top_r, ctx)
-        n_cand = jax.lax.psum(live.sum(axis=-1).astype(jnp.int32), axis_name)
-        valid = jnp.isfinite(fin_s)
-        return (jnp.where(valid, fin_ids, PAD_DOC).astype(jnp.int32),
-                jnp.where(valid, fin_s, 0.0),
-                n_cand)
-
-    from jax.sharding import PartitionSpec as P
+        sources = [
+            qexec.Source(
+                cluster_lists=PaddedLists(shard["base_cluster_entries"],
+                                          shard["base_cluster_lengths"]),
+                term_lists=PaddedLists(shard["base_term_entries"],
+                                       shard["base_term_lengths"]),
+                doc_planes=shard["base_codec"],
+                size=per,
+                offset=b_lo,
+                family_hi=n_base,
+                tombstones=shard["tomb_base"],
+                doc_ns=shard.get("base_ns")),
+            qexec.Source(
+                cluster_lists=PaddedLists(shard["delta_cluster_entries"],
+                                          shard["delta_cluster_lengths"]),
+                term_lists=PaddedLists(shard["delta_term_entries"],
+                                       shard["delta_term_lengths"]),
+                doc_planes=shard["delta_codec"],
+                size=dper,
+                offset=n_base + d_lo,
+                family_lo=n_base,
+                family_hi=n_base + n_shards * dper,
+                tombstones=shard["tomb_delta"],
+                doc_ns=shard.get("delta_ns")),
+        ]
+        res = qexec.execute(
+            codec_impl, rep["codec"],
+            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]),
+            ts_mod.TermSelector(avg_scores=rep["term_avg"]),
+            sources, qe, qt,
+            kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
+            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name))
+        return res.doc_ids, res.scores, res.n_candidates
 
     def specs_like(tree, leading):
         return jax.tree.map(
@@ -644,24 +668,29 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
 
     qspec = P(None, None)
 
-    def run(planes, rep, qe, qt):
+    def run(planes, rep, qe, qt, ns_filter=None):
+        in_specs = [specs_like(planes, axis_name), specs_like(rep, None),
+                    qspec, qspec]
+        args = [planes, rep, qe, qt]
+        if filtered:
+            in_specs.append(qspec)
+            args.append(ns_filter)
         mapped = compat.shard_map(
             body, mesh=mesh,
-            in_specs=(specs_like(planes, axis_name),
-                      specs_like(rep, None), qspec, qspec),
+            in_specs=tuple(in_specs),
             out_specs=(qspec, qspec, P(None)),
             check=False)  # outputs replicated by construction (§6 merge)
-        return mapped(planes, rep, qe, qt)
+        return mapped(*args)
 
     return run
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_mutable_search(mesh, axis_name, codec, n_base, per, dper,
-                             kc, k2, top_r, use_kernel):
+                             kc, k2, top_r, use_kernel, filtered):
     return jax.jit(make_mutable_search_step(
         mesh, axis_name, codec, n_base, per, dper, kc, k2, top_r,
-        use_kernel))
+        use_kernel, filtered=filtered))
 
 
 class ShardedMutableIndex:
@@ -669,11 +698,12 @@ class ShardedMutableIndex:
 
     Wraps a :class:`MutableHybridIndex` (the host-side source of truth)
     and keeps a device-placed sharded view: the immutable base is
-    partitioned once at construction; delta planes and tombstones are
-    re-split after each mutation, which routes every added doc's
-    postings and codec rows to the shard owning its global id.  Search
-    is bit-identical to the single-device mutable search (asserted for
-    every registered codec by ``tests/test_segments.py``).
+    partitioned once at construction; delta planes, namespace planes and
+    tombstones are re-split after each mutation, which routes every
+    added doc's postings and codec rows to the shard owning its global
+    id.  Search is bit-identical to the single-device mutable search
+    (asserted for every registered codec by ``tests/test_segments.py``
+    and, with filters, ``tests/test_exec.py``).
     """
 
     def __init__(self, mut: MutableHybridIndex, n_shards: int, mesh=None,
@@ -690,8 +720,8 @@ class ShardedMutableIndex:
         self._delta_state: Optional[dict] = None
 
     # --- mutation: delegate to the host index, re-split the delta --------
-    def add_docs(self, doc_emb, doc_tokens) -> np.ndarray:
-        ids = self.mut.add_docs(doc_emb, doc_tokens)
+    def add_docs(self, doc_emb, doc_tokens, namespaces=None) -> np.ndarray:
+        ids = self.mut.add_docs(doc_emb, doc_tokens, namespaces=namespaces)
         self._delta_state = None
         return ids
 
@@ -718,7 +748,7 @@ class ShardedMutableIndex:
         dc_e, dc_l = shi._split_lists(mut._dc_entries, s, dper, base=n_base)
         dt_e, dt_l = shi._split_lists(mut._dt_entries, s, dper, base=n_base)
         tomb = mut._tomb
-        return {
+        state = {
             "delta_cluster_entries": jnp.asarray(dc_e),
             "delta_cluster_lengths": jnp.asarray(dc_l),
             "delta_term_entries": jnp.asarray(dt_e),
@@ -731,6 +761,10 @@ class ShardedMutableIndex:
             "tomb_delta": jnp.asarray(
                 shi._split_docs(tomb[n_base:], s, dper)),
         }
+        if mut.filtered:
+            state["delta_ns"] = jnp.asarray(
+                shi._split_docs(mut._delta_ns, s, dper))
+        return state
 
     def _planes(self) -> dict:
         if self._delta_state is None:
@@ -743,7 +777,7 @@ class ShardedMutableIndex:
 
             self._delta_state = jax.tree.map(put, self._split_delta())
         sb = self._sbase
-        return {
+        planes = {
             "base_cluster_entries": sb.cluster_entries,
             "base_cluster_lengths": sb.cluster_lengths,
             "base_term_entries": sb.term_entries,
@@ -751,17 +785,28 @@ class ShardedMutableIndex:
             "base_codec": sb.doc_planes,
             **self._delta_state,
         }
+        if sb.doc_ns is not None:
+            planes["base_ns"] = sb.doc_ns
+        return planes
 
     def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
-               top_r: int, use_kernel: bool = False) -> hi.SearchResult:
+               top_r: int, use_kernel: bool = False,
+               filter=None) -> hi.SearchResult:
+        if filter is not None and not self.mut.filtered:
+            raise ValueError(
+                "search(filter=...) needs an index built with "
+                "doc_namespaces=")
         rep = {"cluster_emb": self._sbase.cluster_sel.embeddings,
                "term_avg": self._sbase.term_sel.avg_scores,
                "codec": self._sbase.codec_params}
         fn = _compiled_mutable_search(
             self.mesh, self.axis_name, self.mut.base.codec, self.mut.n_base,
-            self.per, self.dper, kc, k2, top_r, use_kernel)
-        ids, scores, n_cand = fn(self._planes(), rep,
-                                 jnp.asarray(query_embeddings),
-                                 jnp.asarray(query_tokens))
+            self.per, self.dper, kc, k2, top_r, use_kernel,
+            filter is not None)
+        args = [self._planes(), rep, jnp.asarray(query_embeddings),
+                jnp.asarray(query_tokens)]
+        if filter is not None:
+            args.append(jnp.asarray(filter, jnp.uint32))
+        ids, scores, n_cand = fn(*args)
         return hi.SearchResult(doc_ids=ids, scores=scores,
                                n_candidates=n_cand)

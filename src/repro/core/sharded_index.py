@@ -2,28 +2,28 @@
 
 A single-device :class:`~repro.core.hybrid_index.HybridIndex` caps the
 corpus at one device's HBM.  This module splits the *documents* (and
-with them the codec doc planes and the inverted-list entries) over a
-device mesh and runs the whole fixed-shape search of
-:mod:`repro.core.hybrid_index` per shard under ``shard_map``:
+with them the codec doc planes, the namespace plane and the
+inverted-list entries) over a device mesh and runs the SAME staged
+query-execution engine as every other variant
+(:mod:`repro.core.exec`, DESIGN.md §9) per shard under ``shard_map``:
 
     shard s owns the contiguous doc range [s·P, (s+1)·P)
 
     replicated per device : cluster/term selectors, codec params, queries
-    sharded (leading axis) : every codec doc plane, and the list entry
-                             planes filtered to the shard's docs
+    sharded (leading axis) : every codec doc plane, ``doc_ns``, and the
+                             list entry planes filtered to the shard's docs
 
-    per shard : dispatch → gather → dedup → codec score → local top-R′
+    per shard : dispatch → gather → dedup → filter → score → local top-R′
     merge     : all-gather of the (B, R′) planes along the shard axis +
-                one more total-order top-R′ (collectives.gather_topk)
+                one more total-order top-R′ (inside ``exec.topk``)
     refine    : the codec's second stage on the merged frontier — each
                 shard exact-scores the frontier docs it owns, a psum
                 assembles them (identity for non-refining codecs)
 
 The codec is resolved through :mod:`repro.core.codecs` (DESIGN.md §7):
 this module never inspects codec names — the codec's ``partition`` hook
-splits its doc planes, its scorer runs on the shard-local rows, and its
-``refine`` hook sees the shard environment through a
-:class:`~repro.core.codecs.RefineCtx`.
+splits its doc planes and the exec layer routes scoring/refine through
+the per-shard :class:`~repro.core.exec.Source`.
 
 The partition happens AFTER global list construction (including
 capacity truncation), so the union of the per-shard lists is exactly
@@ -31,10 +31,11 @@ the single-device lists — no doc is scored on the sharded path that the
 single-device path would have truncated away, and vice versa.  Because
 each doc lives in exactly one shard, per-shard dedup is global dedup,
 and because top-R selection uses the total order of
-:func:`~repro.core.hybrid_index.topk_by_score` (score desc, id asc) —
-and any refine stage re-ranks the already-merged frontier — the merged
-result is **bit-identical** to single-device ``search()`` for every
-registered codec (asserted by ``tests/test_sharded.py``).
+:func:`~repro.core.exec.topk_by_score` (score desc, id asc) — and any
+refine stage re-ranks the already-merged frontier — the merged result
+is **bit-identical** to single-device ``search()`` for every registered
+codec, with and without a namespace filter (asserted by
+``tests/test_exec.py``).
 
 Per-shard planes keep the *global* list capacity, so the per-shard
 candidate budget equals the single-device budget; the win is HBM (each
@@ -54,11 +55,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cluster_selector as cs_mod
 from repro.core import codecs
+from repro.core import exec as qexec
 from repro.core import hybrid_index as hi
-from repro.core import inverted_lists as il
 from repro.core import term_selector as ts_mod
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
-from repro.distributed import collectives, compat
+from repro.distributed import compat
 
 Array = jax.Array
 
@@ -69,7 +70,7 @@ SHARD_AXIS = "shards"
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_entries",
                  "cluster_lengths", "term_entries", "term_lengths",
-                 "codec_params", "doc_planes", "doc_assign"],
+                 "codec_params", "doc_planes", "doc_assign", "doc_ns"],
     meta_fields=["codec", "n_docs"])
 @dataclasses.dataclass(frozen=True)
 class ShardedHybridIndex:
@@ -84,6 +85,7 @@ class ShardedHybridIndex:
     codec_params: Any                       # replicated codec state
     doc_planes: dict                        # codec planes, leaves (S, P, ...)
     doc_assign: Array                       # (S, P) i32, φ(D) per shard
+    doc_ns: Optional[Array] = None          # (S, P) i32 namespace ids
     codec: str = codecs.DEFAULT
     n_docs: int = 0                         # true corpus size (pre-padding)
 
@@ -167,6 +169,8 @@ def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
             index.doc_planes,
             lambda x: jnp.asarray(_split_docs(x, n_shards, per))),
         doc_assign=jnp.asarray(_split_docs(index.doc_assign, n_shards, per)),
+        doc_ns=(None if index.doc_ns is None else
+                jnp.asarray(_split_docs(index.doc_ns, n_shards, per))),
         codec=index.codec,
         n_docs=n_docs)
 
@@ -213,7 +217,8 @@ def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
         term_entries=put_sharded(sindex.term_entries),
         term_lengths=put_sharded(sindex.term_lengths),
         doc_planes=jax.tree.map(put_sharded, sindex.doc_planes),
-        doc_assign=put_sharded(sindex.doc_assign))
+        doc_assign=put_sharded(sindex.doc_assign),
+        doc_ns=put_sharded(sindex.doc_ns))
 
 
 # --------------------------------------------------------------------------
@@ -221,77 +226,65 @@ def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
 # --------------------------------------------------------------------------
 
 def _shard_planes(sindex: ShardedHybridIndex) -> dict:
-    return {"cluster_entries": sindex.cluster_entries,
-            "cluster_lengths": sindex.cluster_lengths,
-            "term_entries": sindex.term_entries,
-            "term_lengths": sindex.term_lengths,
-            "codec": sindex.doc_planes}
+    planes = {"cluster_entries": sindex.cluster_entries,
+              "cluster_lengths": sindex.cluster_lengths,
+              "term_entries": sindex.term_entries,
+              "term_lengths": sindex.term_lengths,
+              "codec": sindex.doc_planes}
+    if sindex.doc_ns is not None:
+        planes["doc_ns"] = sindex.doc_ns
+    return planes
 
 
 def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
                      kc: int, k2: int, top_r: int,
                      use_kernel: bool = False,
-                     batch_axis: Optional[str] = None):
+                     batch_axis: Optional[str] = None,
+                     filtered: bool = False):
     """shard_map'd per-shard search + merge for one static config.
 
     Returns ``step(planes, rep, qe, qt) -> (doc_ids, scores, n_cands)``
-    (un-jitted, so ``launch/cells.py`` can lower it with explicit
-    in_shardings).  ``planes`` carries the shard-leading arrays with the
-    codec doc planes nested under ``"codec"``; ``rep`` the replicated
-    selector state with the codec params under ``"codec"``.
+    — or, with ``filtered=True``, ``step(planes, rep, qe, qt,
+    ns_filter)`` where ``ns_filter`` is the replicated (B, W) uint32
+    per-query namespace bitmap and ``planes`` must carry ``doc_ns``.
+    The step is un-jitted, so ``launch/cells.py`` can lower it with
+    explicit in_shardings.  ``planes`` carries the shard-leading arrays
+    with the codec doc planes nested under ``"codec"``; ``rep`` the
+    replicated selector state with the codec params under ``"codec"``.
     ``batch_axis`` optionally data-shards the query batch over a second
     mesh axis (the production (data, model) layout: queries over data,
     index shards over model); None replicates queries, which is the 1-D
     serving-mesh case.
+
+    The body is nothing but the §9 stage chain over one per-shard
+    :class:`~repro.core.exec.Source` with a
+    :class:`~repro.core.exec.ShardEnv` — the same engine as the
+    single-device path, so results are bit-identical by construction.
     """
     codec_impl = codecs.get(codec)
-    r_prime = codec_impl.refine_width(top_r)
 
-    def body(shard, rep, qe, qt):
+    def body(shard, rep, qe, qt, ns_filter=None):
         # shard_map hands this device's block with a leading length-1
         # shard axis; drop it to get the local planes
         shard = jax.tree.map(lambda x: x[0], shard)
-        # dispatch runs replicated (identical on every device)
-        cluster_ids, _ = cs_mod.select_for_query(
-            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]), qe, kc)
-        term_ids = ts_mod.query_terms(
-            ts_mod.TermSelector(avg_scores=rep["term_avg"]), qt, k2)
-        # gather + dedup over the LOCAL lists (docs are disjoint across
-        # shards, so per-shard dedup == global dedup)
-        cand_c = il.gather_candidates(
-            PaddedLists(shard["cluster_entries"], shard["cluster_lengths"]),
-            cluster_ids)
-        cand_t = il.gather_candidates(
-            PaddedLists(shard["term_entries"], shard["term_lengths"]),
-            term_ids)
-        cands = jnp.concatenate([cand_c, cand_t], axis=-1)
-        keep = il.dedup_mask(cands)
-        # global doc id -> local row in this shard's doc planes
         offset = jax.lax.axis_index(axis_name) * per
-        local = jnp.clip(cands - offset, 0, per - 1)
-        scorer = codec_impl.make_scorer(rep["codec"], shard["codec"], qe,
-                                        use_kernel)
-        scores = jnp.where(keep, scorer(local), -jnp.inf)
-        # local top-R′, the cross-shard merge collective, then the
-        # codec's refine stage on the (replicated) merged frontier —
-        # each shard scores only the frontier docs it owns and a psum
-        # assembles them, keeping the result bit-identical to the
-        # single-device path (DESIGN.md §7)
-        top_s, top_ids = hi.topk_by_score(scores, cands, r_prime)
-        all_s, all_ids = collectives.gather_topk(top_s, top_ids, axis_name)
-        fin_s, fin_ids = hi.topk_by_score(all_s, all_ids, r_prime)
-        ctx = codecs.RefineCtx(
-            gather=lambda plane, ids: plane[
-                jnp.clip(ids - offset, 0, per - 1)],
-            owned=lambda ids: (ids >= offset) & (ids < offset + per),
-            psum=lambda x: jax.lax.psum(x, axis_name))
-        fin_s, fin_ids = codec_impl.refine(rep["codec"], shard["codec"], qe,
-                                           fin_s, fin_ids, top_r, ctx)
-        n_cand = jax.lax.psum(keep.sum(axis=-1).astype(jnp.int32), axis_name)
-        valid = jnp.isfinite(fin_s)
-        return (jnp.where(valid, fin_ids, PAD_DOC).astype(jnp.int32),
-                jnp.where(valid, fin_s, 0.0),
-                n_cand)
+        source = qexec.Source(
+            cluster_lists=PaddedLists(shard["cluster_entries"],
+                                      shard["cluster_lengths"]),
+            term_lists=PaddedLists(shard["term_entries"],
+                                   shard["term_lengths"]),
+            doc_planes=shard["codec"],
+            size=per,
+            offset=offset,
+            doc_ns=shard.get("doc_ns"))
+        res = qexec.execute(
+            codec_impl, rep["codec"],
+            cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]),
+            ts_mod.TermSelector(avg_scores=rep["term_avg"]),
+            [source], qe, qt,
+            kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
+            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name))
+        return res.doc_ids, res.scores, res.n_candidates
 
     def specs_like(tree, leading):
         return jax.tree.map(
@@ -300,34 +293,42 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
 
     qspec = P(batch_axis, None)
 
-    def run(planes, rep, qe, qt):
+    def run(planes, rep, qe, qt, ns_filter=None):
+        in_specs = [specs_like(planes, axis_name), specs_like(rep, None),
+                    qspec, qspec]
+        args = [planes, rep, qe, qt]
+        if filtered:
+            in_specs.append(qspec)       # bitmap rides with the queries
+            args.append(ns_filter)
         mapped = compat.shard_map(
             body, mesh=mesh,
-            in_specs=(specs_like(planes, axis_name),
-                      specs_like(rep, None),
-                      qspec, qspec),
+            in_specs=tuple(in_specs),
             out_specs=(qspec, qspec, P(batch_axis)),
             check=False)  # outputs are replicated over the shard axis by
         #                   construction (merge ends in identical
         #                   all-gathered data on every shard)
-        return mapped(planes, rep, qe, qt)
+        return mapped(*args)
 
     return run
 
 
 @functools.lru_cache(maxsize=32)
 def _compiled_search(mesh: Mesh, axis_name: str, codec: str, per: int,
-                     kc: int, k2: int, top_r: int, use_kernel: bool):
+                     kc: int, k2: int, top_r: int, use_kernel: bool,
+                     filtered: bool):
     return jax.jit(make_search_step(mesh, axis_name, codec, per,
-                                    kc, k2, top_r, use_kernel))
+                                    kc, k2, top_r, use_kernel,
+                                    filtered=filtered))
 
 
 def search(sindex: ShardedHybridIndex, query_embeddings: Array,
            query_tokens: Array, *, kc: int, k2: int, top_r: int,
            mesh: Optional[Mesh] = None, axis_name: str = SHARD_AXIS,
-           use_kernel: bool = False) -> hi.SearchResult:
+           use_kernel: bool = False,
+           filter: Optional[Array] = None) -> hi.SearchResult:
     """Sharded Eq. 5 — same contract and bit-identical results as
-    :func:`repro.core.hybrid_index.search` (DESIGN.md §6).
+    :func:`repro.core.hybrid_index.search` (DESIGN.md §6), including
+    under a per-query namespace ``filter`` (DESIGN.md §9).
 
     ``mesh`` defaults to a fresh 1-D mesh over the first ``n_shards``
     devices; pass the mesh from :func:`make_shard_mesh` (after
@@ -341,18 +342,26 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
         raise ValueError(
             f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} "
             f"but the index has {sindex.n_shards} shards")
+    if filter is not None and sindex.doc_ns is None:
+        raise ValueError(
+            "search(filter=...) needs an index partitioned from one "
+            "built with doc_namespaces=")
     rep = {"cluster_emb": sindex.cluster_sel.embeddings,
            "term_avg": sindex.term_sel.avg_scores,
            "codec": sindex.codec_params}
     fn = _compiled_search(mesh, axis_name, sindex.codec,
-                          sindex.docs_per_shard, kc, k2, top_r, use_kernel)
-    ids, scores, n_cand = fn(_shard_planes(sindex), rep,
-                             query_embeddings, query_tokens)
+                          sindex.docs_per_shard, kc, k2, top_r, use_kernel,
+                          filter is not None)
+    args = (_shard_planes(sindex), rep, query_embeddings, query_tokens)
+    if filter is not None:
+        args += (jnp.asarray(filter, jnp.uint32),)
+    ids, scores, n_cand = fn(*args)
     return hi.SearchResult(doc_ids=ids, scores=scores, n_candidates=n_cand)
 
 
 def candidate_budget(sindex: ShardedHybridIndex, kc: int, k2: int) -> int:
     """Per-shard candidate slots per query (the latency proxy; equals
     the single-device budget because shards keep the global capacity)."""
-    return (kc * sindex.cluster_entries.shape[2]
-            + k2 * sindex.term_entries.shape[2])
+    return qexec.candidate_budget(
+        kc, k2, [(sindex.cluster_entries.shape[2],
+                  sindex.term_entries.shape[2])])

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the PQ ADC kernel (same math as core/pq.adc_score)."""
+"""Pure-jnp oracle for the PQ ADC kernel (same math as core/codecs/pq.adc_score)."""
 from __future__ import annotations
 
 import jax

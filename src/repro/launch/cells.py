@@ -386,7 +386,7 @@ def _rec_retrieval_cell(arch, shape: sh.RecShape, cfg) -> Cell:
 # hi2-synth: the paper's own serving step at MS MARCO scale (extra cell)
 # --------------------------------------------------------------------------
 
-def _hi2_abstract_index(shape):
+def _hi2_abstract_index(shape, filtered: bool = False):
     from repro.core import cluster_selector as cs_mod
     from repro.core import codecs
     from repro.core import hybrid_index as hixm
@@ -409,6 +409,7 @@ def _hi2_abstract_index(shape):
         codec_params=params_a,
         doc_planes=planes_a,
         doc_assign=_sds((shape.n_docs,), jnp.int32),
+        doc_ns=_sds((shape.n_docs,), jnp.int32) if filtered else None,
         codec=shape.codec)
 
 
@@ -448,6 +449,33 @@ def _hi2_serve_cell(arch, shape) -> Cell:
                 (index_a, qe_a, qt_a),
                 (index_sh, rep("batch", None), rep("batch", None)),
                 donate_argnums=(), rules=rules)
+
+
+def _hi2_filtered_serve_cell(arch, shape) -> Cell:
+    """Filtered HI² serving (DESIGN.md §9): the §2 serving step with a
+    per-query namespace bitmap flowing through the exec layer's filter
+    stage.  The ``doc_ns`` plane rides the docs axis like every codec
+    plane; the (batch, ⌈N/32⌉) u32 bitmap rides the batch axis like the
+    queries — zero replicated state beyond what unfiltered serving has."""
+    from repro.core import hybrid_index as hixm
+    from repro.core.exec import filters as ns_filters
+
+    def serve(index, q_emb, q_tokens, ns_filter):
+        return hixm.search(index, q_emb, q_tokens, kc=shape.kc, k2=shape.k2,
+                           top_r=shape.top_r, filter=ns_filter)
+
+    base = _hi2_serve_cell(arch, shape)     # reuse the §2 cell's shardings
+    index_a = _hi2_abstract_index(shape, filtered=True)
+    index_sh = dataclasses.replace(base.in_shardings[0],
+                                   doc_ns=shd.named_sharding("docs"))
+    w = ns_filters.n_words(shape.n_namespaces)
+    filt_a = _sds((shape.query_batch, w), jnp.uint32)
+    rep = shd.named_sharding
+    return Cell(arch.arch_id, shape.name, "hi2/serve_filtered", serve,
+                (index_a, base.args[1], base.args[2], filt_a),
+                (index_sh, base.in_shardings[1], base.in_shardings[2],
+                 rep("batch", None)),
+                donate_argnums=(), rules=base.rules)
 
 
 def _hi2_sharded_serve_cell(arch, shape, mesh: Mesh) -> Cell:
@@ -515,6 +543,8 @@ def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
             return _hi2_sharded_serve_cell(arch, shape, mesh)
         with shd.use_mesh(mesh, {"clusters": "model", "docs": "model",
                                  "vocab": "model"}):
+            if shape.kind == "hi2_serve_filtered":
+                return _hi2_filtered_serve_cell(arch, shape)
             return _hi2_serve_cell(arch, shape)
     if arch.family == "lm":
         cfg = arch.make_config(shape)

@@ -22,6 +22,12 @@ Serving layouts:
     ``add``/``delete``/``compact`` with no recompiles between
     compactions; the sharded variant routes adds to the owning shard.
 
+Every layout accepts per-query namespace filters (DESIGN.md §9):
+build the index with ``--namespaces N`` and pass
+``query(..., namespaces=...)`` — one namespace id (or an iterable of
+ids) per query — and no document outside those namespaces can appear
+in that query's results, on any layout, bit-identically.
+
 Latency is governed by the static per-query candidate budget
 (:func:`repro.core.hybrid_index.candidate_budget` — the proxy all of
 ``benchmarks/`` reports); ``launch/cells.py::_hi2_serve_cell`` and
@@ -44,6 +50,7 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import codecs
 from repro.core import hybrid_index as hi
+from repro.core.exec import filters as ns_filters
 from repro.core import segments as seg
 from repro.core import sharded_index as shi
 
@@ -58,6 +65,7 @@ class ServeConfig:
     n_shards: int = 1            # >1 → document-sharded layout
     mutable: bool = False        # serve a MutableHybridIndex (§8)
     delta_capacity: int = 1024   # delta slots between compactions
+    n_namespaces: int = 0        # >0 → filtered search over N namespaces
 
 
 class Server:
@@ -94,17 +102,35 @@ class Server:
                                 constant_values=-1))
         return n, qe, qt
 
-    def query(self, query_emb: np.ndarray, query_tokens: np.ndarray
-              ) -> hi.SearchResult:
+    def _filter(self, namespaces, n: int):
+        """Per-query ``namespaces`` (one id or iterable of ids per
+        query, length n) → the padded (max_batch, W) bitmap; padded
+        query rows match nothing (like the PAD query tokens)."""
+        if namespaces is None:
+            return None
+        if not self.cfg.n_namespaces:
+            raise ValueError(
+                "this server was built without namespaces; construct "
+                "with ServeConfig(n_namespaces=N) / --namespaces N")
+        if len(namespaces) != n:
+            raise ValueError(f"{len(namespaces)} filter rows for {n} "
+                             "queries")
+        bitmap = ns_filters.make_filter(namespaces, self.cfg.n_namespaces)
+        return ns_filters.pad_filter(bitmap, self.cfg.max_batch)
+
+    def query(self, query_emb: np.ndarray, query_tokens: np.ndarray,
+              namespaces=None) -> hi.SearchResult:
         n, qe, qt = self._pad(query_emb, query_tokens)
-        res = self._search(self.index, qe, qt)
+        res = self._search(self.index, qe, qt,
+                           filter=self._filter(namespaces, n))
         self.n_served += n
         return hi.SearchResult(doc_ids=res.doc_ids[:n],
                                scores=res.scores[:n],
                                n_candidates=res.n_candidates[:n])
 
     # mutation API — live only on the mutable servers below
-    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray) -> np.ndarray:
+    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray,
+            namespaces=None) -> np.ndarray:
         raise RuntimeError("this server is immutable; construct with "
                            "ServeConfig(mutable=True) / --mutable to "
                            "enable add/delete/compact")
@@ -131,10 +157,10 @@ class ShardedServer(Server):
         self._search = self._sharded_search
         self.n_served = 0
 
-    def _sharded_search(self, idx, qe, qt) -> hi.SearchResult:
+    def _sharded_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
         return shi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
                           top_r=self.cfg.top_r, mesh=self.mesh,
-                          use_kernel=self.cfg.use_kernel)
+                          use_kernel=self.cfg.use_kernel, filter=filter)
 
 
 class MutableServer(Server):
@@ -153,14 +179,19 @@ class MutableServer(Server):
         self._search = self._mut_search
         self.n_served = 0
 
-    def _mut_search(self, idx, qe, qt) -> hi.SearchResult:
+    def _mut_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
         return self.mut.search(qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
                                top_r=self.cfg.top_r,
-                               use_kernel=self.cfg.use_kernel)
+                               use_kernel=self.cfg.use_kernel,
+                               filter=filter)
 
-    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray) -> np.ndarray:
-        """Index new documents; returns their global doc ids."""
-        return self.mut.add_docs(doc_emb, doc_tokens)
+    def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray,
+            namespaces=None) -> np.ndarray:
+        """Index new documents; returns their global doc ids.  On a
+        namespaced server ``namespaces`` (scalar or (n,) ids) is
+        required."""
+        return self.mut.add_docs(doc_emb, doc_tokens,
+                                 namespaces=namespaces)
 
     def delete(self, doc_ids) -> None:
         """Tombstone documents; they can never appear in results again."""
@@ -224,6 +255,9 @@ def main(argv: Optional[list] = None) -> None:
                          "add/delete/compact (DESIGN.md §8)")
     ap.add_argument("--delta-capacity", type=int, default=1024,
                     help="delta slots between compactions (--mutable)")
+    ap.add_argument("--namespaces", type=int, default=0,
+                    help="partition the corpus into N namespaces and demo "
+                         "per-query filtered search (DESIGN.md §9)")
     args = ap.parse_args(argv)
     codecs.get(args.codec)   # fail fast (with the registered names) on typos
 
@@ -236,7 +270,11 @@ def main(argv: Optional[list] = None) -> None:
                         term_capacity=96, kmeans_iters=8)
     cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards,
                       mutable=args.mutable,
-                      delta_capacity=args.delta_capacity)
+                      delta_capacity=args.delta_capacity,
+                      n_namespaces=args.namespaces)
+    # round-robin tenant assignment for the demo corpus
+    doc_ns = (np.arange(args.docs) % args.namespaces
+              if args.namespaces else None)
     if args.mutable:
         if args.docs < 512:
             sys.exit("--mutable demo needs --docs >= 512 (the base build "
@@ -249,12 +287,14 @@ def main(argv: Optional[list] = None) -> None:
         mut = seg.MutableHybridIndex.create(
             jax.random.key(0), corpus.doc_emb[:-held],
             corpus.doc_tokens[:-held], corpus.vocab_size,
-            delta_capacity=args.delta_capacity, **build_kwargs)
+            delta_capacity=args.delta_capacity,
+            doc_namespaces=None if doc_ns is None else doc_ns[:-held],
+            **build_kwargs)
         server = make_mutable_server(mut, cfg)
     else:
         index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
                          jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
-                         **build_kwargs)
+                         doc_namespaces=doc_ns, **build_kwargs)
         server = make_server(index, cfg)
     server.warmup(64, corpus.query_tokens.shape[1])
     t0 = time.perf_counter()
@@ -265,8 +305,25 @@ def main(argv: Optional[list] = None) -> None:
     layout = f"{args.shards} shard(s)" if args.shards > 1 else "1 device"
     print(f"served {server.n_served} queries in {dt:.3f}s "
           f"({server.n_served / dt:.0f} q/s, {layout})")
+    if args.namespaces:
+        # each query restricted to one tenant; results must honor it
+        b = min(args.batch, args.queries)
+        want = [i % args.namespaces for i in range(b)]
+        res = server.query(corpus.query_emb[:b], corpus.query_tokens[:b],
+                           namespaces=want)
+        ids = np.asarray(res.doc_ids)
+        ok = all((ids[i][ids[i] >= 0] % args.namespaces == want[i]).all()
+                 for i in range(b))
+        print(f"filtered: {b} queries x 1/{args.namespaces} namespaces, "
+              f"mean candidates "
+              f"{float(np.asarray(res.n_candidates).mean()):.0f}, "
+              f"tenant isolation {'OK' if ok else 'VIOLATED'}")
+        if not ok:
+            sys.exit("namespace filter violated tenant isolation")
     if args.mutable:
-        ids = server.add(corpus.doc_emb[-held:], corpus.doc_tokens[-held:])
+        ids = server.add(corpus.doc_emb[-held:], corpus.doc_tokens[-held:],
+                         namespaces=(None if not args.namespaces else
+                                     doc_ns[-held:]))
         server.query(corpus.query_emb[:args.batch],
                      corpus.query_tokens[:args.batch])
         server.delete(ids[: held // 4])

@@ -9,7 +9,7 @@ Scale-out: the embedding tables are the memory giants (26 × 10⁶⁺ rows for
 DLRM) — row-sharded over the mesh model axis ("table" logical axis);
 dense MLPs replicated; batch over data.  ``retrieval_cand`` scores one
 query against 10⁶ candidates with a single sharded matmul + top-k
-(never a loop), reusing ``repro.core.flat``; HI² indexes the same item
+(never a loop), reusing ``repro.core.codecs.flat``; HI² indexes the same item
 tower in ``examples/recsys_retrieval.py``.
 """
 from __future__ import annotations

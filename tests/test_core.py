@@ -8,7 +8,8 @@ except ImportError:  # accelerator image: no pip installs; CI has the real one
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (bm25, cluster_selector as cs, inverted_lists as il,
-                        kmeans, opq, pq, pruning, term_selector as ts)
+                        kmeans, pruning, term_selector as ts)
+from repro.core.codecs import pq
 
 settings.register_profile("core", max_examples=10, deadline=None)
 settings.load_profile("core")
@@ -56,11 +57,11 @@ def test_pq_adc_equals_decoded_inner_product():
     x = jax.random.normal(key, (400, 32))
     q = jax.random.normal(jax.random.fold_in(key, 1), (8, 32))
     cb = pq.train_pq(jax.random.fold_in(key, 2), x, m=4, k=16, n_iters=5)
-    codes = pq.encode(cb, x)
+    codes = pq.pq_encode(cb, x)
     lut = pq.adc_lut(cb, q)
     cand = jnp.broadcast_to(jnp.arange(50)[None], (8, 50))
     scores = pq.adc_score(lut, codes[cand])
-    expect = q @ pq.decode(cb, codes[:50]).T
+    expect = q @ pq.pq_decode(cb, codes[:50]).T
     np.testing.assert_allclose(np.asarray(scores), np.asarray(expect),
                                rtol=1e-4, atol=1e-4)
 
@@ -70,12 +71,12 @@ def test_opq_rotation_is_orthogonal_and_helps():
     # anisotropic data — the regime OPQ exists for
     scales = jnp.concatenate([jnp.ones(4) * 4.0, jnp.ones(28) * 0.3])
     x = jax.random.normal(key, (1500, 32)) * scales
-    o = opq.train_opq(jax.random.fold_in(key, 1), x, m=4, k=16,
+    o = pq.train_opq(jax.random.fold_in(key, 1), x, m=4, k=16,
                       n_outer=3, n_kmeans_iters=5)
     r = np.asarray(o.rotation)
     np.testing.assert_allclose(r @ r.T, np.eye(32), atol=1e-4)
     cb = pq.train_pq(jax.random.fold_in(key, 2), x, m=4, k=16, n_iters=5)
-    assert float(opq.reconstruction_mse(o, x)) <= \
+    assert float(pq.opq_reconstruction_mse(o, x)) <= \
         float(pq.reconstruction_mse(cb, x)) * 1.05
 
 

@@ -1,0 +1,371 @@
+"""The query-execution layer (DESIGN.md §9): cross-variant equivalence,
+namespace filters, and the one-pipeline acceptance criterion.
+
+The headline suite replaces the per-variant bit-identity copies that
+used to live in tests/test_sharded.py: ONE parametrized run asserts
+that all four search variants — single-device, mutable (base + empty
+delta), document-sharded (2 and 4 shards), and sharded-mutable — return
+bit-identical ids/scores/candidate-counts on the same corpus for every
+registered codec, WITH and WITHOUT a per-query namespace filter.
+
+Multi-device cases spawn a fresh interpreter with
+xla_force_host_platform_device_count (the tests/test_sharded.py
+pattern); filter semantics and the exec-layer contract run in-process.
+"""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exec as qexec, hybrid_index as hi
+from repro.core import segments as seg
+from repro.core.exec import filters as ns_filters
+from repro.data import synthetic
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=4",
+            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+
+
+def _run(script: str) -> None:
+    r = subprocess.run([sys.executable, "-c", script], env=_ENV,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+# --------------------------------------------------------------------------
+# the cross-variant equivalence suite (tentpole acceptance)
+# --------------------------------------------------------------------------
+
+def test_all_four_variants_bit_identical_every_codec_with_and_without_filter():
+    """single == mutable(empty delta) == sharded(2,4) == sharded-mutable
+    for every registered codec, unfiltered AND under a per-query
+    namespace bitmap — the §9 'one engine' contract."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import codecs, hybrid_index as hi, segments as seg
+from repro.core import sharded_index as shi
+from repro.core.exec import filters as ns_filters
+from repro.data import synthetic
+
+assert jax.device_count() == 4
+N_NS = 8
+c = synthetic.generate(seed=0, n_docs=3001, n_queries=24, hidden=32,
+                       vocab_size=1024, n_topics=16)
+doc_ns = (np.arange(3001) * 7 % N_NS).astype(np.int32)
+kw = dict(n_clusters=32, k1_terms=6, pq_m=4, pq_k=64,
+          cluster_capacity=96, term_capacity=48, kmeans_iters=5)
+qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+bitmap = ns_filters.make_filter(
+    [[b % N_NS, (b + 3) % N_NS] for b in range(24)], N_NS)
+
+def check(ref, out, err):
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids), err)
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores), err)
+    np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                                  np.asarray(out.n_candidates), err)
+
+for codec in codecs.registered():
+    idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                   jnp.asarray(c.doc_tokens), c.vocab_size, codec=codec,
+                   doc_namespaces=doc_ns, **kw)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb, c.doc_tokens, c.vocab_size,
+        delta_capacity=64, codec=codec, doc_namespaces=doc_ns, **kw)
+    for filt in (None, bitmap):
+        ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=20, filter=filt)
+        err0 = (codec, filt is not None)
+        # variant 2: mutable, empty delta — the delta sources must be
+        # bit-transparent
+        check(ref, mut.search(qe, qt, kc=4, k2=4, top_r=20, filter=filt),
+              ("mutable",) + err0)
+        for n_shards in (2, 4):
+            # variant 3: document-sharded
+            mesh = shi.make_shard_mesh(n_shards)
+            sidx = shi.device_put(shi.partition(idx, n_shards), mesh)
+            check(ref, shi.search(sidx, qe, qt, kc=4, k2=4, top_r=20,
+                                  mesh=mesh, filter=filt),
+                  ("sharded", n_shards) + err0)
+            # variant 4: sharded-mutable
+            smut = seg.ShardedMutableIndex(mut, n_shards)
+            check(ref, smut.search(qe, qt, kc=4, k2=4, top_r=20,
+                                   filter=filt),
+                  ("sharded-mutable", n_shards) + err0)
+        if filt is not None:
+            ids = np.asarray(ref.doc_ids)
+            for b in range(ids.shape[0]):
+                row = ids[b][ids[b] >= 0]
+                ok = np.isin(doc_ns[row], [b % N_NS, (b + 3) % N_NS])
+                assert ok.all(), (codec, b, row[~ok])
+""")
+
+
+def test_filtered_mutable_stream_bit_identical_sharded():
+    """Filters over a *mutated* index (streamed adds with namespaces +
+    tombstones): single-device mutable == 4-shard sharded-mutable, and
+    isolation holds across base and delta docs."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import segments as seg
+from repro.core.exec import filters as ns_filters
+from repro.data import synthetic
+
+N_NS = 4
+c = synthetic.generate(seed=0, n_docs=1501, n_queries=16, hidden=32,
+                       vocab_size=512, n_topics=8)
+doc_ns = (np.arange(1501) % N_NS).astype(np.int32)
+kw = dict(n_clusters=16, k1_terms=4, codec="refine:pq:2", pq_m=4,
+          pq_k=64, cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+hold = 80
+mut = seg.MutableHybridIndex.create(
+    jax.random.key(0), c.doc_emb[:-hold], c.doc_tokens[:-hold],
+    c.vocab_size, delta_capacity=100, doc_namespaces=doc_ns[:-hold], **kw)
+ids = mut.add_docs(c.doc_emb[-hold:], c.doc_tokens[-hold:],
+                   namespaces=doc_ns[-hold:])
+mut.delete_docs(ids[:20]); mut.delete_docs([5, 6, 7])
+qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+bitmap = ns_filters.make_filter([b % N_NS for b in range(16)], N_NS)
+ref = mut.search(qe, qt, kc=4, k2=4, top_r=15, filter=bitmap)
+smut = seg.ShardedMutableIndex(mut, 4)
+out = smut.search(qe, qt, kc=4, k2=4, top_r=15, filter=bitmap)
+np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                              np.asarray(out.doc_ids))
+np.testing.assert_array_equal(np.asarray(ref.scores),
+                              np.asarray(out.scores))
+np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                              np.asarray(out.n_candidates))
+rids = np.asarray(ref.doc_ids)
+for b in range(16):
+    row = rids[b][rids[b] >= 0]
+    assert (mut.namespaces_of(row) == b % N_NS).all(), (b, row)
+    assert not np.isin(row, ids[:20]).any()     # tombstones still honored
+""")
+
+
+# --------------------------------------------------------------------------
+# filter semantics (in-process, single device)
+# --------------------------------------------------------------------------
+
+def _small(codec="flat", n_ns=None):
+    c = synthetic.generate(seed=0, n_docs=1200, n_queries=16, hidden=32,
+                           vocab_size=512, n_topics=8)
+    ns = None if n_ns is None else (np.arange(1200) % n_ns).astype(np.int32)
+    idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                   jnp.asarray(c.doc_tokens), c.vocab_size,
+                   n_clusters=16, k1_terms=4, codec=codec,
+                   cluster_capacity=64, term_capacity=32, kmeans_iters=3,
+                   doc_namespaces=ns)
+    return c, idx, ns
+
+
+def test_allow_all_filter_is_a_bitwise_noop():
+    c, idx, _ = _small(n_ns=5)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=12)
+    out = hi.search(idx, qe, qt, kc=4, k2=4, top_r=12,
+                    filter=ns_filters.allow_all(16, 5))
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores))
+    np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                                  np.asarray(out.n_candidates))
+
+
+def test_filtered_results_keep_unfiltered_scores_and_isolation():
+    """Filtering masks candidates; it must not perturb the scores of
+    the docs that survive, and every result obeys its query's bitmap."""
+    c, idx, ns = _small(n_ns=3)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=64)
+    out = hi.search(idx, qe, qt, kc=4, k2=4, top_r=64,
+                    filter=ns_filters.make_filter([1] * 16, 3))
+    rid, rsc = np.asarray(ref.doc_ids), np.asarray(ref.scores)
+    oid, osc = np.asarray(out.doc_ids), np.asarray(out.scores)
+    for b in range(16):
+        keep = oid[b] >= 0
+        assert (ns[oid[b][keep]] == 1).all()
+        # surviving docs keep their exact unfiltered scores
+        both = np.intersect1d(oid[b][keep], rid[b][rid[b] >= 0])
+        r_lookup = dict(zip(rid[b], rsc[b]))
+        o_lookup = dict(zip(oid[b], osc[b]))
+        assert all(r_lookup[d] == o_lookup[d] for d in both)
+        # and n_candidates shrank (a 1/3 filter must mask something)
+    assert (np.asarray(out.n_candidates)
+            < np.asarray(ref.n_candidates)).all()
+
+
+def test_filter_without_namespace_planes_raises():
+    c, idx, _ = _small(n_ns=None)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    with pytest.raises(ValueError, match="doc_namespaces"):
+        hi.search(idx, qe, qt, kc=4, k2=4, top_r=8,
+                  filter=ns_filters.make_filter([0] * 16, 4))
+
+
+def test_mutable_namespace_plumbing_validation():
+    c = synthetic.generate(seed=0, n_docs=900, n_queries=4, hidden=32,
+                           vocab_size=512, n_topics=8)
+    kw = dict(n_clusters=16, k1_terms=4, codec="flat",
+              cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+    plain = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-20], c.doc_tokens[:-20],
+        c.vocab_size, delta_capacity=32, **kw)
+    with pytest.raises(ValueError, match="unfiltered"):
+        plain.add_docs(c.doc_emb[-2:], c.doc_tokens[-2:], namespaces=0)
+    ns = np.zeros(880, np.int32)
+    filt = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-20], c.doc_tokens[:-20],
+        c.vocab_size, delta_capacity=32, doc_namespaces=ns, **kw)
+    with pytest.raises(ValueError, match="namespaces"):
+        filt.add_docs(c.doc_emb[-2:], c.doc_tokens[-2:])
+    ids = filt.add_docs(c.doc_emb[-2:], c.doc_tokens[-2:], namespaces=3)
+    assert (filt.namespaces_of(ids) == 3).all()
+    # namespaces survive compaction with the survivors
+    filt.delete_docs(ids[:1])
+    comp = filt.compact()
+    assert comp.namespaces_of([comp.n_base - 1]) == [3]
+
+
+def test_filtered_checkpoint_roundtrip(tmp_path):
+    """Namespace planes round-trip through the mutable checkpoint path
+    (DESIGN.md §5/§9) and keep filtering identically after restore."""
+    from repro.checkpoint import checkpoint as ckpt
+    c = synthetic.generate(seed=0, n_docs=900, n_queries=8, hidden=32,
+                           vocab_size=512, n_topics=8)
+    kw = dict(n_clusters=16, k1_terms=4, codec="sq8",
+              cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+    ns = (np.arange(880) % 4).astype(np.int32)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-20], c.doc_tokens[:-20],
+        c.vocab_size, delta_capacity=32, doc_namespaces=ns, **kw)
+    mut.add_docs(c.doc_emb[-20:], c.doc_tokens[-20:],
+                 namespaces=np.arange(20) % 4)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    bitmap = ns_filters.make_filter([b % 4 for b in range(8)], 4)
+    ref = mut.search(qe, qt, kc=4, k2=4, top_r=10, filter=bitmap)
+    path = ckpt.save_mutable(str(tmp_path), 3, mut)
+    like = seg.MutableHybridIndex.create(
+        jax.random.key(1), c.doc_emb[:-20], c.doc_tokens[:-20],
+        c.vocab_size, delta_capacity=32, doc_namespaces=ns, **kw)
+    back = ckpt.restore_mutable(path, like)
+    out = back.search(qe, qt, kc=4, k2=4, top_r=10, filter=bitmap)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores))
+
+
+def test_plain_index_checkpoint_roundtrips_doc_ns(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+    c, idx, ns = _small(codec="sq8", n_ns=6)
+    path = ckpt.save_index(str(tmp_path), 0, idx)
+    like = hi.build(jax.random.key(1), jnp.asarray(c.doc_emb),
+                    jnp.asarray(c.doc_tokens), c.vocab_size,
+                    n_clusters=16, k1_terms=4, codec="sq8",
+                    cluster_capacity=64, term_capacity=32, kmeans_iters=3,
+                    doc_namespaces=np.zeros(1200, np.int32))
+    back = ckpt.restore_index(path, like)
+    np.testing.assert_array_equal(np.asarray(back.doc_ns), ns)
+
+
+# --------------------------------------------------------------------------
+# filter bitmap unit semantics
+# --------------------------------------------------------------------------
+
+def test_make_filter_bitmap_layout_and_bounds():
+    assert ns_filters.n_words(1) == 1
+    assert ns_filters.n_words(32) == 1
+    assert ns_filters.n_words(33) == 2
+    bm = np.asarray(ns_filters.make_filter([[0, 33], 5, []], 40))
+    assert bm.shape == (3, 2) and bm.dtype == np.uint32
+    assert bm[0, 0] == 1 and bm[0, 1] == 2          # bits 0 and 33
+    assert bm[1, 0] == 1 << 5 and bm[1, 1] == 0
+    assert bm[2].sum() == 0                          # match-nothing row
+    with pytest.raises(ValueError, match="out of range"):
+        ns_filters.make_filter([[40]], 40)
+    with pytest.raises(ValueError, match="out of range"):
+        ns_filters.make_filter([[-1]], 40)
+
+
+def test_allowed_mask_matches_python_semantics():
+    bm = ns_filters.make_filter([[0, 2, 37], [1]], 64)
+    ids = jnp.asarray([[0, 1, 2, 37, 63], [0, 1, 2, 37, 63]])
+    got = np.asarray(ns_filters.allowed_mask(bm, ids))
+    np.testing.assert_array_equal(
+        got, [[True, False, True, True, False],
+              [False, True, False, False, False]])
+
+
+def test_allowed_mask_fails_closed_on_out_of_range_ids():
+    """A doc namespace id beyond the bitmap's W·32 range must match
+    NOTHING: the fixed-shape word gather clips, and letting id 64 alias
+    onto bit 32's word/bit slot would leak one tenant's doc into
+    another's results.  Negative garbage ids likewise."""
+    bm = ns_filters.make_filter([[32], list(range(64))], 64)   # W = 2
+    ids = jnp.asarray([[32, 64, 96, -1], [32, 64, 96, -1]])
+    got = np.asarray(ns_filters.allowed_mask(bm, ids))
+    np.testing.assert_array_equal(
+        got, [[True, False, False, False],
+              [True, False, False, False]])
+    # and the doc-side plumbing refuses negative ids outright
+    with pytest.raises(ValueError, match="non-negative"):
+        hi.build(jax.random.key(0), jnp.zeros((64, 8)),
+                 jnp.zeros((64, 4), jnp.int32), 32, n_clusters=4,
+                 k1_terms=2, codec="flat", kmeans_iters=1,
+                 doc_namespaces=np.full(64, -1))
+
+
+# --------------------------------------------------------------------------
+# the shared cost model (satellite: no more per-variant drift)
+# --------------------------------------------------------------------------
+
+def test_one_cost_model_across_variants():
+    from repro.core import sharded_index as shi
+    c, idx, _ = _small()
+    assert hi.candidate_budget(idx, 4, 6) == qexec.candidate_budget(
+        4, 6, [(idx.cluster_lists.capacity, idx.term_lists.capacity)])
+    sidx = shi.partition(idx, 1)
+    assert shi.candidate_budget(sidx, 4, 6) == hi.candidate_budget(idx, 4, 6)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb, c.doc_tokens, c.vocab_size,
+        delta_capacity=32, n_clusters=16, k1_terms=4, codec="flat",
+        cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+    want = (hi.candidate_budget(mut.base, 4, 6)
+            + 4 * mut.delta_cluster_capacity + 6 * mut.delta_term_capacity)
+    assert mut.candidate_budget(4, 6) == want
+    # refine codecs add R' to the cost through the same one model
+    assert qexec.candidate_cost("refine:pq:4", 4, 6, 10,
+                                [(64, 32)]) == 4 * 64 + 6 * 32 + 40
+
+
+# --------------------------------------------------------------------------
+# acceptance criterion: one pipeline, no duplicated stage bodies
+# --------------------------------------------------------------------------
+
+def test_dedup_and_stage_chain_live_only_in_the_exec_layer():
+    """`dedup_mask(` may be *defined* in inverted_lists and *called*
+    only from the exec layer — the grep the ISSUE pins the refactor to.
+    Same for the merge primitive gather_topk (exec owns the shard
+    merge)."""
+    root = pathlib.Path(hi.__file__).resolve().parents[1]   # src/repro
+    offenders = []
+    for p in root.rglob("*.py"):
+        rel = p.relative_to(root).as_posix()
+        text = p.read_text()
+        if re.search(r"dedup_mask\(", text):
+            if rel not in ("core/inverted_lists.py", "core/exec/stages.py"):
+                offenders.append((rel, "dedup_mask"))
+        if re.search(r"gather_topk\(", text):
+            if rel not in ("distributed/collectives.py",
+                           "core/exec/stages.py"):
+                offenders.append((rel, "gather_topk"))
+    assert not offenders, offenders

@@ -11,6 +11,11 @@ The §8 contracts under test:
   · add → delete → save → restore → search equals the in-memory mutated
     index, and compact-then-save equals rebuild-then-save.
 
+Cross-variant bit-identity on an *unmutated* corpus (all four search
+variants, with and without namespace filters) lives in
+tests/test_exec.py — the §9 suite; this file keeps the checks that
+need mutated state (streamed adds, tombstones, compaction).
+
 Multi-device cases spawn a fresh interpreter with
 xla_force_host_platform_device_count (the tests/test_sharded.py
 pattern); everything else runs in-process on 1 device.

@@ -124,38 +124,10 @@ np.testing.assert_array_equal(np.asarray(ref.n_candidates),
 """)
 
 
-def test_sharded_search_bit_identical_for_every_codec():
-    """The §6 merge contract must survive the codec seam (DESIGN.md §7):
-    for EVERY registered codec — including the two-stage refine codec,
-    whose exact re-rank runs after the cross-shard merge — 4-shard
-    search returns bit-identical ids/scores/counts vs single-device."""
-    _run("""
-import jax, jax.numpy as jnp, numpy as np
-from repro.core import codecs, hybrid_index as hi, sharded_index as shi
-from repro.data import synthetic
-
-assert jax.device_count() == 4
-corpus = synthetic.generate(seed=0, n_docs=3001, n_queries=32,
-                            hidden=32, vocab_size=1024, n_topics=16)
-de, dt = jnp.asarray(corpus.doc_emb), jnp.asarray(corpus.doc_tokens)
-qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
-for codec in codecs.registered():
-    idx = hi.build(jax.random.key(0), de, dt, corpus.vocab_size,
-                   n_clusters=32, k1_terms=6, codec=codec, pq_m=4, pq_k=64,
-                   cluster_capacity=96, term_capacity=48, kmeans_iters=5)
-    ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=20)
-    for n_shards in (2, 4):
-        mesh = shi.make_shard_mesh(n_shards)
-        sidx = shi.device_put(shi.partition(idx, n_shards), mesh)
-        out = shi.search(sidx, qe, qt, kc=4, k2=4, top_r=20, mesh=mesh)
-        err = (codec, n_shards)
-        np.testing.assert_array_equal(np.asarray(ref.doc_ids),
-                                      np.asarray(out.doc_ids), err)
-        np.testing.assert_array_equal(np.asarray(ref.scores),
-                                      np.asarray(out.scores), err)
-        np.testing.assert_array_equal(np.asarray(ref.n_candidates),
-                                      np.asarray(out.n_candidates), err)
-""")
+# NOTE: the per-codec sharded-vs-single bit-identity loop moved into
+# tests/test_exec.py, which asserts it for ALL FOUR variants (single,
+# mutable, sharded, sharded-mutable) with and without a namespace
+# filter in one parametrized run (DESIGN.md §9).
 
 
 def test_sharded_search_flat_codec_and_odd_sizes():

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import flat, hybrid_index as hi, ivf, metrics
+from repro.core import hybrid_index as hi, metrics
+from repro.core.codecs import flat
 from repro.data import synthetic
 
 
@@ -48,7 +49,7 @@ def test_hybrid_beats_ivf_at_budget(corpus, index):
     qe = jnp.asarray(corpus.query_emb)
     qt = jnp.asarray(corpus.query_tokens)
     r_hyb = hi.search(index, qe, qt, kc=6, k2=8, top_r=100)
-    r_ivf = ivf.search_ivf(index, qe, qt, kc=10, top_r=100)
+    r_ivf = hi.search_ivf(index, qe, qt, kc=10, top_r=100)
     # IVF gets a LARGER budget and must still lose (paper RQ1)
     assert float(r_ivf.n_candidates.mean()) > float(r_hyb.n_candidates.mean())
     assert _r100(r_hyb, corpus) > _r100(r_ivf, corpus)
@@ -59,9 +60,9 @@ def test_complementarity(corpus, index):
     qe = jnp.asarray(corpus.query_emb)
     qt = jnp.asarray(corpus.query_tokens)
     r_hyb = _r100(hi.search(index, qe, qt, kc=6, k2=8, top_r=100), corpus)
-    r_term = _r100(ivf.search_term_only(index, qe, qt, k2=8, top_r=100),
+    r_term = _r100(hi.search_term_only(index, qe, qt, k2=8, top_r=100),
                    corpus)
-    r_clus = _r100(ivf.search_ivf(index, qe, qt, kc=6, top_r=100), corpus)
+    r_clus = _r100(hi.search_ivf(index, qe, qt, kc=6, top_r=100), corpus)
     assert r_hyb >= r_term - 1e-6
     assert r_hyb >= r_clus - 1e-6
     assert r_hyb > max(r_term, r_clus) - 0.02  # genuinely combines
