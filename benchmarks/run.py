@@ -158,6 +158,17 @@ def _streaming_updates() -> None:
           flush=True)
 
 
+def _serving_load() -> None:
+    rep = _subprocess_json("serving_load", ["--smoke", "--check"])
+    for name in ("plain", "sharded", "mutable", "sharded_mutable"):
+        r = rep["layouts"][name]
+        print(f"serving/{name},{1e6 / r['qps_runtime']:.0f},"
+              f"speedup={r['qps_runtime'] / r['qps_serial']:.1f};"
+              f"identical={r['bit_identical']};"
+              f"p99_ms={r['poisson']['p99_ms']};"
+              f"cache_hits={r['cache']['hits']}", flush=True)
+
+
 #: every benchmark entry point; the driver refuses to run if a
 #: benchmarks/*.py exists without a row here
 DISPATCH = {
@@ -169,6 +180,7 @@ DISPATCH = {
     "sharded_search": _sharded_search,
     "streaming_updates": _streaming_updates,
     "filtered_search": _filtered_search,
+    "serving_load": _serving_load,
 }
 
 

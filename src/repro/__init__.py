@@ -2,7 +2,8 @@
 "Hybrid Inverted Index Is a Robust Accelerator for Dense Retrieval" (HI²).
 
 Layout:
-    repro.core         — the paper's contribution (selectors, hybrid index, codecs, distillation)
+    repro.core         — the paper's contribution (selectors, hybrid
+                         index, codecs, distillation)
     repro.kernels      — Pallas TPU kernels for the compute hot spots (+ jnp oracles)
     repro.models       — model zoo: dense/MoE transformer LMs, GatedGCN, recsys archs
     repro.data         — synthetic corpus/graph/recsys data pipelines
@@ -10,7 +11,8 @@ Layout:
     repro.checkpoint   — fault-tolerant checkpointing
     repro.distributed  — sharding rules, collectives, fault handling
     repro.configs      — assigned architecture configs + shape sets
-    repro.launch       — mesh construction, multi-pod dry-run, roofline, train/serve drivers
+    repro.launch       — mesh construction, multi-pod dry-run, roofline,
+                         train/serve drivers, serving runtime
 """
 
 __version__ = "1.0.0"

@@ -56,6 +56,18 @@ class HI2FilteredServeShape(HI2ServeShape):
 
 
 @dataclasses.dataclass(frozen=True)
+class HI2BucketServeShape(HI2ServeShape):
+    """One serving-runtime micro-batch bucket (DESIGN.md §10): the same
+    §2 serving step at a small power-of-two query batch.  The runtime
+    pre-compiles one program per bucket; this cell lowers the smallest
+    interesting rung at MS MARCO scale to keep the bucket ladder's
+    compile story visible in the dry-run grid (the ``serve_msmarco``
+    cell is the ``max_batch`` rung)."""
+    kind: str = "hi2_serve_bucket"
+    query_batch: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
 class HI2Config:
     pass
 
@@ -76,5 +88,8 @@ ARCH = registry.register(registry.ArchDef(
             # filtered search (DESIGN.md §9): 64-tenant namespace bitmaps
             # through the exec layer's filter stage
             "serve_msmarco_filtered":
-                HI2FilteredServeShape("serve_msmarco_filtered")},
+                HI2FilteredServeShape("serve_msmarco_filtered"),
+            # the serving runtime's smallest micro-batch bucket (§10)
+            "serve_msmarco_bucket8":
+                HI2BucketServeShape("serve_msmarco_bucket8")},
     extra=True))

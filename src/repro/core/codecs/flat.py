@@ -3,7 +3,8 @@
 against (paper Table 3); doc-plane cost is 4·h bytes/doc.
 
 Also home of :func:`search`, the brute-force top-k over a whole corpus
-(formerly ``core/flat.py``): the exact-retrieval oracle benchmarks and
+(folded in from the retired standalone flat-search module in PR 4):
+the exact-retrieval oracle benchmarks and
 tests measure every index against, blocked so the (B, n_docs) score
 plane never materializes for large corpora.
 """

@@ -34,7 +34,7 @@ Array = jax.Array
 
 
 # --------------------------------------------------------------------------
-# PQ math (formerly core/pq.py)
+# PQ math (folded in from the retired standalone PQ module, PR 4)
 # --------------------------------------------------------------------------
 
 class PQCodebook(NamedTuple):
@@ -147,7 +147,7 @@ def reconstruction_mse(codebook: PQCodebook, x: Array) -> Array:
 
 
 # --------------------------------------------------------------------------
-# OPQ math (formerly core/opq.py)
+# OPQ math (folded in from the retired standalone OPQ module, PR 4)
 # --------------------------------------------------------------------------
 
 class OPQCodebook(NamedTuple):

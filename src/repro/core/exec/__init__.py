@@ -11,11 +11,11 @@ from repro.core.exec.stages import (Frontier, SearchResult, ShardEnv,
                                     Source, dedup, dispatch, execute,
                                     filter_stage, gather, make_refine_ctx,
                                     refine_planes, score, topk,
-                                    topk_by_score)
+                                    topk_by_score, trace_count)
 
 __all__ = [
     "Frontier", "SearchResult", "ShardEnv", "Source",
     "candidate_budget", "candidate_cost", "dedup", "dispatch", "execute",
     "filter_stage", "filters", "gather", "make_refine_ctx",
-    "refine_planes", "score", "topk", "topk_by_score",
+    "refine_planes", "score", "topk", "topk_by_score", "trace_count",
 ]

@@ -292,6 +292,26 @@ def make_refine_ctx(sources: Sequence[Source],
 
 
 # --------------------------------------------------------------------------
+# compile accounting
+# --------------------------------------------------------------------------
+
+# :func:`execute` runs only while jax traces a search program (every
+# variant's jitted/shard_map'd body funnels through it, and one compile
+# traces it exactly once — asserted by tests/test_runtime.py), so the
+# number of calls IS the number of search programs compiled in this
+# process: +1 per new (variant, batch shape, static config) signature,
+# +0 on jit-cache hits.  The serving runtime (repro.launch.runtime)
+# reads deltas of this counter to enforce its one-compile-per-bucket
+# warmup contract (DESIGN.md §10).
+_TRACES = 0
+
+
+def trace_count() -> int:
+    """Search programs traced (≈ compiled) so far in this process."""
+    return _TRACES
+
+
+# --------------------------------------------------------------------------
 # the engine
 # --------------------------------------------------------------------------
 
@@ -311,6 +331,8 @@ def execute(codec_impl: codecs_base.Codec, codec_params: Any,
     and ``shard`` set.  ``ns_filter`` is the per-query namespace bitmap
     of :func:`repro.core.exec.filters.make_filter` (None ⇒ unfiltered).
     """
+    global _TRACES
+    _TRACES += 1
     cluster_ids, term_ids = dispatch(cluster_sel, term_sel,
                                      query_embeddings, query_tokens, kc, k2)
     frontier = gather(sources, cluster_ids, term_ids)

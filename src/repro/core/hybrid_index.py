@@ -239,7 +239,8 @@ def candidate_cost(index: HybridIndex, kc: int, k2: int, top_r: int) -> int:
 
 # --------------------------------------------------------------------------
 # paper baselines — degenerate configurations of the same machinery
-# (formerly core/ivf.py; §5.1 baselines and §5.3 ablations)
+# (folded in from the retired standalone IVF wrappers in PR 4; §5.1
+# baselines and §5.3 ablations)
 # --------------------------------------------------------------------------
 
 def build_ivf(key: Array, doc_embeddings: Array, doc_tokens: Array,

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-def _pad_to_multiple(x: Array, block: int, axis: int = 0, value=0.0) -> tuple[Array, int]:
+def _pad_to_multiple(x: Array, block: int, axis: int = 0,
+                     value=0.0) -> tuple[Array, int]:
     n = x.shape[axis]
     rem = (-n) % block
     if rem == 0:

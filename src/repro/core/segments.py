@@ -240,6 +240,7 @@ class MutableHybridIndex:
         self._count = 0
         self.dropped_postings = 0
         self._cache: Optional[tuple[DeltaSegment, Array]] = None
+        self._epoch = 0
 
     # --- construction ----------------------------------------------------
     @classmethod
@@ -323,6 +324,15 @@ class MutableHybridIndex:
     def filtered(self) -> bool:
         """True when the index carries namespace planes (DESIGN.md §9)."""
         return self._corpus_ns is not None
+
+    @property
+    def epoch(self) -> int:
+        """Monotonic mutation counter: +1 per ``add_docs`` /
+        ``delete_docs`` call and across ``compact()`` (which renumbers
+        doc ids, so it must invalidate too).  Serving caches key results
+        on it — two searches at the same epoch see the same corpus
+        (DESIGN.md §10)."""
+        return self._epoch
 
     def is_deleted(self, ids) -> np.ndarray:
         return self._tomb[np.asarray(ids)]
@@ -415,6 +425,7 @@ class MutableHybridIndex:
                     self.dropped_postings += 1
         self._count += n_new
         self._cache = None
+        self._epoch += 1
         return ids
 
     def delete_docs(self, doc_ids) -> None:
@@ -427,6 +438,7 @@ class MutableHybridIndex:
                 f"{ids[(ids < 0) | (ids >= self.n_docs)][:8]}")
         self._tomb[ids] = True
         self._cache = None
+        self._epoch += 1
 
     # --- search ----------------------------------------------------------
     def delta_segment(self) -> DeltaSegment:
@@ -496,13 +508,17 @@ class MutableHybridIndex:
         emb, tokens = self.surviving_corpus()
         if emb.shape[0] == 0:
             raise ValueError("cannot compact an index with zero live docs")
-        return type(self).create(
+        out = type(self).create(
             self.key if key is None else key, emb, tokens, self.vocab_size,
             delta_capacity=self.delta_capacity,
             delta_cluster_capacity=self.delta_cluster_capacity,
             delta_term_capacity=self.delta_term_capacity,
             doc_namespaces=self.surviving_namespaces(),
             **self.build_kwargs)
+        # compaction renumbers survivors, so epoch-keyed caches must not
+        # serve pre-compaction entries against the new index
+        out._epoch = self._epoch + 1
+        return out
 
     # --- cost accounting (DESIGN.md §2 latency proxy) --------------------
     def families(self) -> list:
@@ -552,7 +568,8 @@ class MutableHybridIndex:
 
     def state_extra(self) -> dict:
         """JSON-able metadata stored next to :meth:`state_tree`."""
-        return {"delta_count": self._count,
+        return {"epoch": self._epoch,
+                "delta_count": self._count,
                 "delta_capacity": self.delta_capacity,
                 "delta_cluster_capacity": self.delta_cluster_capacity,
                 "delta_term_capacity": self.delta_term_capacity,
@@ -595,6 +612,9 @@ class MutableHybridIndex:
         out._tomb = np.array(tree["tombstones"], bool)
         out._count = int(m["delta_count"])
         out.dropped_postings = int(m.get("dropped_postings", 0))
+        # epoch travels with the state: a restored index must keep
+        # invalidating epoch-keyed caches where the saved one left off
+        out._epoch = int(m.get("epoch", 0))
         out._cache = None
         return out
 
@@ -732,6 +752,11 @@ class ShardedMutableIndex:
     def compact(self, key: Optional[Array] = None) -> "ShardedMutableIndex":
         return type(self)(self.mut.compact(key), self.n_shards,
                           mesh=self.mesh, axis_name=self.axis_name)
+
+    @property
+    def epoch(self) -> int:
+        """The wrapped host index's mutation counter (DESIGN.md §10)."""
+        return self.mut.epoch
 
     def owning_shard(self, doc_ids) -> np.ndarray:
         """Which shard serves each global doc id (base range split by

@@ -541,11 +541,18 @@ def build_cell(arch_id: str, shape_name: str, mesh: Mesh) -> Cell:
         if shape.kind == "hi2_serve_sharded":
             # all shardings are explicit NamedShardings; no rule context
             return _hi2_sharded_serve_cell(arch, shape, mesh)
-        with shd.use_mesh(mesh, {"clusters": "model", "docs": "model",
-                                 "vocab": "model"}):
+        rules = {"clusters": "model", "docs": "model", "vocab": "model"}
+        if shape.kind == "hi2_serve_bucket":
+            # runtime micro-batch buckets (DESIGN.md §10) are smaller
+            # than the data axis — the query batch replicates
+            rules["batch"] = None
+        with shd.use_mesh(mesh, rules):
             if shape.kind == "hi2_serve_filtered":
-                return _hi2_filtered_serve_cell(arch, shape)
-            return _hi2_serve_cell(arch, shape)
+                cell = _hi2_filtered_serve_cell(arch, shape)
+            else:
+                cell = _hi2_serve_cell(arch, shape)
+        cell.rules = rules      # lower_cell re-enters use_mesh with these
+        return cell
     if arch.family == "lm":
         cfg = arch.make_config(shape)
         rules = _lm_rules(cfg, mesh, shape.kind)

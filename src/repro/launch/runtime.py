@@ -1,0 +1,564 @@
+"""Serving runtime (DESIGN.md §10): bucketed micro-batching, an
+epoch-keyed LRU result cache, and admission control in front of every
+:mod:`repro.launch.serve` server variant.
+
+``Server.query`` is a synchronous, caller-batched API: whoever holds the
+request decides the batch, and everything pads to one ``max_batch``
+shape.  Real traffic is many independent clients submitting one query
+each; this module is the layer between them and the compiled search
+programs:
+
+  · :class:`ServingRuntime.submit` enqueues one query and returns a
+    future.  A scheduler thread drains the queue into *shape buckets* —
+    powers of two from :data:`MIN_BUCKET` up to ``max_batch`` — so a
+    request batch of n pads to the next bucket, not to ``max_batch``.
+    Each bucket is one compiled program, pre-warmed by
+    :meth:`ServingRuntime.warmup` (exactly one compile per bucket,
+    enforced through :func:`repro.core.exec.trace_count`), and a lone
+    request is never held hostage: the oldest request waits at most
+    ``linger_ms`` for co-riders before its bucket executes.
+  · An LRU cache keyed on (index epoch, namespace filter, query bytes)
+    returns bit-identical :class:`~repro.core.hybrid_index.SearchResult`
+    rows for repeated queries.  Mutations (``add``/``delete``/
+    ``compact``) bump the index epoch, so no post-mutation query can
+    see a pre-mutation result.
+  · Admission control bounds the queue: past ``queue_depth`` pending
+    requests, :meth:`submit` fails fast with
+    :class:`RuntimeOverloaded` (carrying a retry-after hint) instead of
+    letting latency grow without bound; :meth:`close` drains gracefully
+    — every accepted request completes.
+
+Bit-identity contract: a query's result rows are identical whether it
+rides a bucket of 2 or the full ``max_batch`` pad of ``Server.query``
+(all per-row stages of the §9 pipeline are batch-size invariant), so
+the runtime is a pure scheduling layer — asserted per layout by
+``benchmarks/serving_load.py --check`` and ``tests/test_runtime.py``.
+
+Threading model: client threads only enqueue numpy rows and wait on
+futures; ALL jax dispatch happens on the one scheduler thread (plus
+whichever thread calls ``warmup``/mutations, serialized by the serve
+lock), so device work is never issued concurrently.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, InvalidStateError
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exec as qexec
+from repro.core import hybrid_index as hi
+from repro.core.exec import filters as ns_filters
+
+#: Smallest micro-batch bucket.  B=1 would lower the query·centroid
+#: matmul through XLA's vector path, whose reduction order differs from
+#: the batched kernel by ~1 ulp — padding a lone request to 2 rows keeps
+#: every bucket on the same kernel family, which is what makes runtime
+#: results bit-identical to ``Server.query`` (DESIGN.md §10).
+MIN_BUCKET = 2
+
+
+class RuntimeOverloaded(RuntimeError):
+    """Admission control rejected the request: the queue is at
+    ``queue_depth``.  ``retry_after_ms`` is the backoff hint."""
+
+    def __init__(self, depth: int, retry_after_ms: float):
+        super().__init__(
+            f"request queue full ({depth} pending); retry in "
+            f"{retry_after_ms:g} ms")
+        self.retry_after_ms = retry_after_ms
+
+
+class RuntimeClosed(RuntimeError):
+    """The runtime is shutting down (or was never started)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    linger_ms: float = 2.0     # max wait of the OLDEST request for co-riders
+    queue_depth: int = 256     # pending-request bound (admission control)
+    cache_size: int = 0        # LRU result-cache entries; 0 disables
+    retry_after_ms: float = 5.0  # backoff hint carried by RuntimeOverloaded
+    min_bucket: int = MIN_BUCKET
+
+
+def bucket_sizes(max_batch: int, min_bucket: int = MIN_BUCKET) -> tuple:
+    """The bucket ladder: powers of two from ``min_bucket`` up, capped
+    by a final ``max_batch`` rung (itself, even when not a power of 2)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes, b = [], max(1, min_bucket)
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+class QueryCache:
+    """Thread-safe LRU over exact query keys.
+
+    A key is (index epoch, canonical namespace spec, query embedding
+    bytes, query token bytes): byte-exact equality, no fuzzy matching —
+    a hit returns the stored result rows verbatim, which is what makes
+    cached and uncached responses bit-identical.  The epoch component
+    is how mutations invalidate: ``add``/``delete``/``compact`` bump the
+    server's epoch, so stale entries simply never match again (they age
+    out of the LRU instead of being swept eagerly).
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._lru: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        """Lookup; counts hits only.  ``misses`` is incremented by the
+        owner when a request is actually *computed* — a lookup can run
+        twice per request (submit pre-check + scheduler re-check), so
+        counting lookups would double-book and rejected requests would
+        skew the hit rate."""
+        with self._lock:
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                self.hits += 1
+                return self._lru[key]
+            return None
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._lru[key] = value
+            self._lru.move_to_end(key)
+            while len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+
+class _Request:
+    __slots__ = ("qe", "qt", "ns", "future", "t_submit")
+
+    def __init__(self, qe: np.ndarray, qt: np.ndarray, ns, future: Future):
+        self.qe = qe
+        self.qt = qt
+        self.ns = ns
+        self.future = future
+        self.t_submit = time.monotonic()
+
+
+def _fail(future: Future, exc: BaseException) -> None:
+    """``set_exception`` tolerating a client-side ``cancel()`` race —
+    a future cancelled while pending needs no resolution."""
+    try:
+        future.set_exception(exc)
+    except InvalidStateError:
+        pass
+
+
+def _canon_ns(namespaces) -> Optional[tuple]:
+    """One request's namespace spec (an int or an iterable of ids) as a
+    canonical hashable tuple — equal specs must produce equal cache keys."""
+    if namespaces is None:
+        return None
+    if np.isscalar(namespaces):
+        return (int(namespaces),)
+    return tuple(sorted({int(n) for n in namespaces}))
+
+
+class ServingRuntime:
+    """Bucketed micro-batching + caching + admission control over one
+    :class:`repro.launch.serve.Server` (any layout: plain, sharded,
+    mutable, sharded-mutable; any codec; with or without namespaces).
+
+    Lifecycle: construct → :meth:`warmup` (compiles every bucket, starts
+    the scheduler) → :meth:`submit`/:meth:`query` → :meth:`close`.
+    Usable as a context manager (``close(drain=True)`` on exit).
+    """
+
+    def __init__(self, server, cfg: RuntimeConfig = RuntimeConfig()):
+        if cfg.linger_ms < 0:
+            raise ValueError("linger_ms must be >= 0")
+        if cfg.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        self.server = server
+        self.cfg = cfg
+        self.max_batch = int(server.cfg.max_batch)
+        self.buckets = bucket_sizes(self.max_batch, cfg.min_bucket)
+        self.cache = (QueryCache(cfg.cache_size) if cfg.cache_size > 0
+                      else None)
+        self._hidden: Optional[int] = None
+        self._query_len: Optional[int] = None
+        # serve lock: serializes search execution, mutations, and the
+        # epoch reads cache keys depend on
+        self._serve_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._queue: collections.deque = collections.deque()
+        self._thread: Optional[threading.Thread] = None
+        self._closing = False
+        self._drop_pending = False
+        # telemetry
+        self.n_served = 0
+        self.n_rejected = 0
+        self.n_batches = 0
+        self.bucket_counts = {b: 0 for b in self.buckets}
+        self.warm_traces: dict = {}
+        # compiles triggered by runtime batches after warmup — 0 when
+        # every request lands in a warmed bucket.  Deltas are taken
+        # around the scheduler's own search calls; a direct Server.query
+        # compiling a NEW signature concurrently with a runtime batch
+        # would be misattributed (the process-global trace counter can't
+        # tell threads apart), so keep external searches off the hot
+        # serving window — the bench and tests interleave them only
+        # while the runtime is idle.
+        self.serve_traces = 0
+
+    # --- lifecycle -------------------------------------------------------
+    def warmup(self, hidden: int, query_len: int) -> None:
+        """Compile every bucket's search program (one compile per bucket
+        — the deltas land in :attr:`warm_traces`) and start the
+        scheduler.  Must run before :meth:`submit`; running it again
+        after :meth:`close` revives the runtime."""
+        self._hidden, self._query_len = int(hidden), int(query_len)
+        with self._serve_lock:
+            self._warm_buckets()
+        with self._cond:
+            closing, t = self._closing, self._thread
+        if (closing and t is not None
+                and t is not threading.current_thread()):
+            # close() initiated from a done-callback stops the scheduler
+            # asynchronously; wait it out so the revive below is real
+            t.join()
+            with self._cond:
+                if self._thread is t:
+                    self._thread = None
+        with self._cond:
+            # check-and-start under the lock: two racing warmups must
+            # not each start a scheduler (one scheduler thread is the
+            # concurrency model)
+            if self._thread is None:
+                self._closing = False
+                self._drop_pending = False
+                self._thread = threading.Thread(target=self._loop,
+                                                name="hi2-serving-runtime",
+                                                daemon=True)
+                self._thread.start()
+
+    def _warm_buckets(self) -> None:
+        """Compile the ladder at the current index shapes (caller holds
+        the serve lock; :meth:`warmup` has recorded the query dims)."""
+        for b in self.buckets:
+            qe = jnp.zeros((b, self._hidden), jnp.float32)
+            qt = jnp.full((b, self._query_len), -1, jnp.int32)
+            before = qexec.trace_count()
+            jax.block_until_ready(
+                self.server._search(self.server.index, qe, qt,
+                                    filter=self._bitmap([], b)))
+            self.warm_traces[b] = qexec.trace_count() - before
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the runtime.  ``drain=True`` (the default) completes
+        every accepted request first; ``drain=False`` fails pending
+        futures with :class:`RuntimeClosed`.  Idempotent.  From a
+        done-callback (which may run on the scheduler thread) the stop
+        is asynchronous — the scheduler cannot join itself."""
+        with self._cond:
+            self._closing = True
+            self._drop_pending = not drain
+            self._cond.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join()
+            with self._cond:
+                if self._thread is t:   # exiting schedulers self-clear
+                    self._thread = None
+
+    def __enter__(self) -> "ServingRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=True)
+
+    # --- request path ----------------------------------------------------
+    def submit(self, query_emb, query_tokens, namespaces=None) -> Future:
+        """Enqueue ONE query; returns a future resolving to its
+        :class:`~repro.core.hybrid_index.SearchResult` rows —
+        ``doc_ids``/``scores`` of shape (R,), scalar ``n_candidates`` —
+        bit-identical to the same query through ``Server.query``.
+
+        Raises :class:`RuntimeOverloaded` past ``queue_depth`` pending
+        requests and :class:`RuntimeClosed` after :meth:`close` (or
+        before :meth:`warmup`).
+        """
+        if self._thread is None or self._closing:
+            raise RuntimeClosed(
+                "runtime not serving; call warmup(hidden, query_len) "
+                "first" if self._thread is None else "runtime closed")
+        qe = np.asarray(query_emb, np.float32).reshape(-1)
+        qt = np.asarray(query_tokens, np.int32).reshape(-1)
+        if qe.shape[0] != self._hidden or qt.shape[0] != self._query_len:
+            raise ValueError(
+                f"query shapes ({qe.shape[0]},)/({qt.shape[0]},) do not "
+                f"match the warmed ({self._hidden},)/({self._query_len},)")
+        ns = _canon_ns(namespaces)
+        if ns is not None:
+            n_ns = self.server.cfg.n_namespaces
+            if not n_ns:
+                raise ValueError(
+                    "this server was built without namespaces; construct "
+                    "with ServeConfig(n_namespaces=N) / --namespaces N")
+            # validate here, per request — a bad id surfacing later as a
+            # make_filter error inside the scheduler would fail every
+            # co-rider in the same micro-batch
+            bad = [i for i in ns if not 0 <= i < n_ns]
+            if bad:
+                raise ValueError(
+                    f"namespace id(s) {bad} out of range [0, {n_ns})")
+        future: Future = Future()
+        if self.cache is not None:
+            # lock-free pre-check: submit must never wait behind an
+            # in-flight batch holding the serve lock.  A racing
+            # mutation can at worst make this a spurious miss — the
+            # scheduler re-checks under the lock before executing —
+            # and a hit at the pre-read epoch is a result the request
+            # could have legitimately observed (it raced the mutation).
+            hit = self.cache.get(self._key(qe, qt, ns))
+            if hit is not None:
+                future.set_result(hit)
+                return future
+        req = _Request(qe, qt, ns, future)
+        with self._cond:
+            if self._closing:
+                raise RuntimeClosed("runtime closed")
+            if len(self._queue) >= self.cfg.queue_depth:
+                self.n_rejected += 1
+                raise RuntimeOverloaded(len(self._queue),
+                                        self.cfg.retry_after_ms)
+            self._queue.append(req)
+            self._cond.notify_all()
+        return future
+
+    def query(self, query_emb, query_tokens,
+              namespaces=None) -> hi.SearchResult:
+        """Synchronous batch convenience with the ``Server.query``
+        signature: splits the batch into per-query submissions, waits,
+        and reassembles — so callers migrating from direct serving keep
+        their call sites."""
+        qe = np.atleast_2d(np.asarray(query_emb, np.float32))
+        qt = np.atleast_2d(np.asarray(query_tokens, np.int32))
+        n = qe.shape[0]
+        if namespaces is not None and len(namespaces) != n:
+            raise ValueError(f"{len(namespaces)} filter rows for {n} "
+                             "queries")
+        futures = [self.submit(qe[i], qt[i],
+                               None if namespaces is None else namespaces[i])
+                   for i in range(n)]
+        rows = [f.result() for f in futures]
+        return hi.SearchResult(
+            doc_ids=np.stack([r.doc_ids for r in rows]),
+            scores=np.stack([r.scores for r in rows]),
+            n_candidates=np.stack([r.n_candidates for r in rows]))
+
+    # --- mutations (mutable servers): epoch-coherent forwarding ----------
+    def add(self, doc_emb, doc_tokens, namespaces=None) -> np.ndarray:
+        with self._serve_lock:
+            return self.server.add(doc_emb, doc_tokens,
+                                   namespaces=namespaces)
+
+    def delete(self, doc_ids) -> None:
+        with self._serve_lock:
+            self.server.delete(doc_ids)
+
+    def compact(self) -> None:
+        with self._serve_lock:
+            self.server.compact()
+            # compaction rebuilds the base with new plane shapes, so
+            # the §8 one-recompile-per-compaction happens here, off the
+            # request path — re-warming keeps the compile ledger honest
+            # instead of charging the next request of every bucket
+            if self._hidden is not None:
+                self._warm_buckets()
+
+    # --- observability ---------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "buckets": list(self.buckets),
+            "warm_traces": dict(self.warm_traces),
+            "post_warmup_traces": self.serve_traces,
+            "n_served": self.n_served,
+            "n_rejected": self.n_rejected,
+            "n_batches": self.n_batches,
+            "bucket_counts": dict(self.bucket_counts),
+            "cache": (None if self.cache is None else
+                      {"hits": self.cache.hits,
+                       "misses": self.cache.misses,
+                       "entries": len(self.cache)}),
+        }
+
+    def assert_one_compile_per_bucket(self) -> None:
+        """The warmup contract (DESIGN.md §10): every bucket compiled at
+        most once during warmup (exactly once on a cold jit cache) and
+        nothing has compiled since."""
+        bad = {b: n for b, n in self.warm_traces.items() if n > 1}
+        if bad:
+            raise AssertionError(
+                f"buckets compiled more than once during warmup: {bad}")
+        if self.serve_traces:
+            raise AssertionError(
+                f"{self.serve_traces} search program(s) compiled after "
+                "warmup — a request escaped the warmed bucket shapes")
+
+    # --- internals -------------------------------------------------------
+    def _epoch(self) -> int:
+        return getattr(self.server, "epoch", 0)
+
+    def _key(self, qe: np.ndarray, qt: np.ndarray, ns,
+             epoch: Optional[int] = None) -> tuple:
+        """The one cache-key schema; the scheduler passes its
+        lock-pinned ``epoch``, the submit pre-check reads the live one."""
+        e = self._epoch() if epoch is None else epoch
+        return (e, ns, qe.tobytes(), qt.tobytes())
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_batch
+
+    def _bitmap(self, specs: Sequence, bucket: int):
+        """Per-bucket namespace bitmap, or None on an unfiltered server.
+        A namespaced server ALWAYS gets a bitmap (allow-all rows for
+        requests without a filter — a bitwise no-op) so each bucket has
+        one jit signature; pad rows match nothing."""
+        n_ns = self.server.cfg.n_namespaces
+        if not n_ns:
+            return None
+        rows = [range(n_ns) if ns is None else ns for ns in specs]
+        return ns_filters.pad_filter(ns_filters.make_filter(rows, n_ns),
+                                     bucket)
+
+    def _loop(self) -> None:
+        try:
+            self._run_scheduler()
+        finally:
+            # let close()-from-a-done-callback revive later: the
+            # scheduler clears its own registration on exit so a
+            # subsequent warmup() starts a fresh thread
+            with self._cond:
+                if self._thread is threading.current_thread():
+                    self._thread = None
+
+    def _run_scheduler(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._closing:
+                    self._cond.wait()
+                if not self._queue:          # closing and drained
+                    return
+                # linger: wait for co-riders until the oldest request's
+                # deadline, then take what arrived (never past max_batch)
+                deadline = self._queue[0].t_submit + self.cfg.linger_ms / 1e3
+                while (len(self._queue) < self.max_batch
+                       and not self._closing):
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                if self._closing and self._drop_pending:
+                    dropped = list(self._queue)
+                    self._queue.clear()
+                else:
+                    dropped = None
+                    n = min(len(self._queue), self.max_batch)
+                    batch = [self._queue.popleft() for _ in range(n)]
+            if dropped is not None:
+                # futures resolve outside the locks: a done-callback may
+                # re-enter submit()/close() (both take them)
+                for req in dropped:
+                    _fail(req.future,
+                          RuntimeClosed("runtime closed before execution"))
+                return
+            # claim each future: a client that cancel()ed while queued
+            # drops out here, and a claimed (RUNNING) future can no
+            # longer be cancelled out from under set_result
+            batch = [r for r in batch
+                     if r.future.set_running_or_notify_cancel()]
+            if not batch:
+                continue
+            try:
+                self._execute(batch)
+            except BaseException as e:       # noqa: BLE001 — fail futures,
+                for req in batch:            # never strand waiting clients
+                    if not req.future.done():
+                        _fail(req.future, e)
+
+    def _execute(self, batch: list) -> None:
+        rows = {}              # id(req) -> row; futures resolve OUTSIDE
+        #                        the serve lock (a done-callback may
+        #                        re-enter submit()/add()/close(), which
+        #                        take it) and in batch order (FIFO even
+        #                        when a scheduler-side cache hit lands
+        #                        next to computed rows)
+        err = None
+        with self._serve_lock:
+            epoch = self._epoch()
+            misses = []
+            for req in batch:
+                hit = (None if self.cache is None else
+                       self.cache.get(self._key(req.qe, req.qt, req.ns,
+                                                epoch)))
+                if hit is not None:
+                    rows[id(req)] = hit
+                else:
+                    misses.append(req)
+            if misses:
+                try:
+                    bucket = self._bucket_for(len(misses))
+                    qe = np.zeros((bucket, self._hidden), np.float32)
+                    qt = np.full((bucket, self._query_len), -1, np.int32)
+                    for i, req in enumerate(misses):
+                        qe[i], qt[i] = req.qe, req.qt
+                    before = qexec.trace_count()
+                    res = self.server._search(
+                        self.server.index, jnp.asarray(qe),
+                        jnp.asarray(qt),
+                        filter=self._bitmap([r.ns for r in misses],
+                                            bucket))
+                    self.serve_traces += qexec.trace_count() - before
+                    ids = np.asarray(res.doc_ids)
+                    scores = np.asarray(res.scores)
+                    n_cand = np.asarray(res.n_candidates)
+                    for i, req in enumerate(misses):
+                        row = hi.SearchResult(doc_ids=ids[i],
+                                              scores=scores[i],
+                                              n_candidates=n_cand[i])
+                        if self.cache is not None:
+                            self.cache.put(self._key(req.qe, req.qt,
+                                                     req.ns, epoch), row)
+                        rows[id(req)] = row
+                    if self.cache is not None:
+                        self.cache.misses += len(misses)
+                    self.n_served += len(misses)
+                    self.n_batches += 1
+                    self.bucket_counts[bucket] += 1
+                    if hasattr(self.server, "n_served"):
+                        self.server.n_served += len(misses)
+                except BaseException as e:   # noqa: BLE001 — the cache
+                    err = e                  # hits still resolve below
+        for req in batch:
+            row = rows.get(id(req))
+            if row is not None:
+                req.future.set_result(row)
+            else:
+                req.future.set_exception(err)

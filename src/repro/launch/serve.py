@@ -5,6 +5,8 @@ search step (the production query path, DESIGN.md §2).
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
     PYTHONPATH=src python -m repro.launch.serve --shards 4      # sharded
     PYTHONPATH=src python -m repro.launch.serve --mutable       # streaming
+    PYTHONPATH=src python -m repro.launch.serve --runtime \\
+        --linger-ms 2 --cache 1024                  # micro-batched (§10)
 
 Serving layouts:
 
@@ -27,6 +29,14 @@ build the index with ``--namespaces N`` and pass
 ``query(..., namespaces=...)`` — one namespace id (or an iterable of
 ids) per query — and no document outside those namespaces can appear
 in that query's results, on any layout, bit-identically.
+
+``--runtime`` puts the asynchronous serving runtime of
+:mod:`repro.launch.runtime` (DESIGN.md §10) in front of the chosen
+layout: clients submit single queries, a scheduler thread coalesces
+them into power-of-two shape buckets (one pre-compiled program each),
+an LRU cache short-circuits repeats (``--cache N`` entries, invalidated
+by mutations through the index epoch), and a bounded queue
+fails fast when overloaded instead of stretching tail latency.
 
 Latency is governed by the static per-query candidate budget
 (:func:`repro.core.hybrid_index.candidate_budget` — the proxy all of
@@ -87,6 +97,13 @@ class Server:
     def from_checkpoint(cls, path: str, like: hi.HybridIndex,
                         cfg: ServeConfig = ServeConfig()) -> "Server":
         return cls(ckpt.restore_index(path, like), cfg)
+
+    @property
+    def epoch(self) -> int:
+        """Index mutation counter (DESIGN.md §10) — constant 0 here:
+        an immutable index never invalidates cached results.  Mutable
+        servers override with the live counter."""
+        return 0
 
     def warmup(self, hidden: int, query_len: int) -> None:
         qe = jnp.zeros((self.cfg.max_batch, hidden), jnp.float32)
@@ -185,6 +202,13 @@ class MutableServer(Server):
                                use_kernel=self.cfg.use_kernel,
                                filter=filter)
 
+    @property
+    def epoch(self) -> int:
+        """The mutable index's mutation counter: bumps on every
+        ``add``/``delete`` and across ``compact`` — the cache
+        invalidation key of the serving runtime (DESIGN.md §10)."""
+        return self.mut.epoch
+
     def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray,
             namespaces=None) -> np.ndarray:
         """Index new documents; returns their global doc ids.  On a
@@ -258,6 +282,15 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--namespaces", type=int, default=0,
                     help="partition the corpus into N namespaces and demo "
                          "per-query filtered search (DESIGN.md §9)")
+    ap.add_argument("--runtime", action="store_true",
+                    help="serve through the micro-batching runtime "
+                         "(DESIGN.md §10) instead of direct batched calls")
+    ap.add_argument("--linger-ms", type=float, default=2.0,
+                    help="max wait of the oldest queued request for "
+                         "co-riders before its bucket executes (--runtime)")
+    ap.add_argument("--cache", type=int, default=0,
+                    help="LRU query-result cache entries, 0 = off "
+                         "(--runtime)")
     args = ap.parse_args(argv)
     codecs.get(args.codec)   # fail fast (with the registered names) on typos
 
@@ -296,11 +329,22 @@ def main(argv: Optional[list] = None) -> None:
                          jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
                          doc_namespaces=doc_ns, **build_kwargs)
         server = make_server(index, cfg)
-    server.warmup(64, corpus.query_tokens.shape[1])
+    if args.runtime:
+        from repro.launch import runtime as rt_mod
+        front = rt_mod.ServingRuntime(
+            server, rt_mod.RuntimeConfig(
+                linger_ms=args.linger_ms, cache_size=args.cache,
+                # the demo submits whole batches back-to-back; admission
+                # control must not reject its own driver loop
+                queue_depth=max(256, 2 * args.batch)))
+        front.warmup(64, corpus.query_tokens.shape[1])
+    else:
+        front = server
+        server.warmup(64, corpus.query_tokens.shape[1])
     t0 = time.perf_counter()
     for i in range(0, args.queries, args.batch):
-        server.query(corpus.query_emb[i:i + args.batch],
-                     corpus.query_tokens[i:i + args.batch])
+        front.query(corpus.query_emb[i:i + args.batch],
+                    corpus.query_tokens[i:i + args.batch])
     dt = time.perf_counter() - t0
     layout = f"{args.shards} shard(s)" if args.shards > 1 else "1 device"
     print(f"served {server.n_served} queries in {dt:.3f}s "
@@ -309,8 +353,8 @@ def main(argv: Optional[list] = None) -> None:
         # each query restricted to one tenant; results must honor it
         b = min(args.batch, args.queries)
         want = [i % args.namespaces for i in range(b)]
-        res = server.query(corpus.query_emb[:b], corpus.query_tokens[:b],
-                           namespaces=want)
+        res = front.query(corpus.query_emb[:b], corpus.query_tokens[:b],
+                          namespaces=want)
         ids = np.asarray(res.doc_ids)
         ok = all((ids[i][ids[i] >= 0] % args.namespaces == want[i]).all()
                  for i in range(b))
@@ -321,19 +365,30 @@ def main(argv: Optional[list] = None) -> None:
         if not ok:
             sys.exit("namespace filter violated tenant isolation")
     if args.mutable:
-        ids = server.add(corpus.doc_emb[-held:], corpus.doc_tokens[-held:],
-                         namespaces=(None if not args.namespaces else
-                                     doc_ns[-held:]))
-        server.query(corpus.query_emb[:args.batch],
-                     corpus.query_tokens[:args.batch])
-        server.delete(ids[: held // 4])
+        ids = front.add(corpus.doc_emb[-held:], corpus.doc_tokens[-held:],
+                        namespaces=(None if not args.namespaces else
+                                    doc_ns[-held:]))
+        front.query(corpus.query_emb[:args.batch],
+                    corpus.query_tokens[:args.batch])
+        front.delete(ids[: held // 4])
         t0 = time.perf_counter()
-        server.compact()
+        front.compact()
         dt_c = time.perf_counter() - t0
         mut_idx = server.mut
         print(f"mutable: added {held}, deleted {held // 4}, "
               f"compacted to {getattr(mut_idx, 'mut', mut_idx).n_base} "
               f"docs in {dt_c:.2f}s")
+    if args.runtime:
+        front.close(drain=True)
+        s = front.stats()
+        cache = s["cache"]
+        print(f"runtime: {s['n_batches']} batches over buckets "
+              f"{s['buckets']} (counts {s['bucket_counts']}), "
+              f"compiles/bucket {s['warm_traces']}, "
+              f"{s['post_warmup_traces']} post-warmup compiles"
+              + ("" if cache is None else
+                 f", cache {cache['hits']} hits / {cache['misses']} "
+                 f"misses"))
 
 
 if __name__ == "__main__":

@@ -21,7 +21,8 @@ def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jax.Arra
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
 
 
-def accumulate_grads(loss_fn, params: PyTree, microbatches, *args) -> tuple[jax.Array, PyTree]:
+def accumulate_grads(loss_fn, params: PyTree, microbatches,
+                     *args) -> tuple[jax.Array, PyTree]:
     """Sequential gradient accumulation over a stacked microbatch pytree.
 
     ``microbatches`` leaves have a leading microbatch axis; the scan keeps

@@ -1,0 +1,80 @@
+"""Documentation integrity: the docs spine stays navigable as the
+system grows.
+
+  · every ``§N`` cross-reference anywhere in the repo resolves to a
+    ``## §N`` heading in DESIGN.md (the ISSUE-5 re-anchor check);
+  · no retired module path (the pre-codec ``core/pq`` / ``core/opq`` /
+    ``core/ivf`` / ``core/flat`` files, folded into ``core/codecs`` and
+    ``hybrid_index`` by PR 4) is referenced anywhere outside the
+    CHANGES.md history log;
+  · every path named in the README "Repository map" exists on disk.
+"""
+import pathlib
+import re
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: files whose references are historical records or work orders, not
+#: live pointers into the tree
+_HISTORY = {"CHANGES.md", "ISSUE.md"}
+
+#: module paths retired by PR 4 (their code lives in core/codecs and
+#: hybrid_index now) — referencing them anywhere is a stale doc
+_RETIRED = ("core/pq.py", "core/opq.py", "core/ivf.py", "core/flat.py",
+            "core.pq", "core.opq", "core.ivf")
+
+
+def _repo_files(*suffixes):
+    for p in sorted(_ROOT.rglob("*")):
+        if p.suffix not in suffixes or not p.is_file():
+            continue
+        rel = p.relative_to(_ROOT).as_posix()
+        if any(part in ("__pycache__", ".git", "ci_results", ".venv",
+                        "venv", "build", "dist", ".eggs", "node_modules")
+               for part in p.parts):
+            continue
+        yield rel, p.read_text()
+
+
+def test_every_section_reference_resolves():
+    design = (_ROOT / "DESIGN.md").read_text()
+    headings = {int(m) for m in re.findall(r"^## §(\d+)", design, re.M)}
+    assert headings, "DESIGN.md lost its ## §N headings"
+    dangling = []
+    for rel, text in _repo_files(".py", ".md"):
+        for n in {int(m) for m in re.findall(r"§(\d+)", text)}:
+            if n not in headings:
+                dangling.append((rel, f"§{n}"))
+    assert not dangling, (
+        f"cross-references to missing DESIGN.md sections: {dangling}")
+
+
+def test_no_retired_module_referenced():
+    offenders = []
+    this = pathlib.Path(__file__).name
+    for rel, text in _repo_files(".py", ".md"):
+        if rel.rsplit("/", 1)[-1] in _HISTORY | {this}:
+            continue
+        for stale in _RETIRED:
+            if stale in text:
+                offenders.append((rel, stale))
+    assert not offenders, (
+        f"retired pre-codec modules referenced: {offenders}")
+
+
+def test_readme_repository_map_paths_exist():
+    readme = (_ROOT / "README.md").read_text()
+    m = re.search(r"## Repository map\s+```(.*?)```", readme, re.S)
+    assert m, "README.md lost its Repository map section"
+    missing = []
+    for line in m.group(1).splitlines():
+        # the path column starts each entry; indented lines are
+        # description continuations
+        if not line or line[0].isspace():
+            continue
+        path = line.split()[0]
+        if "/" not in path:
+            continue
+        if not (_ROOT / path.rstrip("/")).exists():
+            missing.append(path)
+    assert not missing, f"Repository map names missing paths: {missing}"

@@ -1,0 +1,383 @@
+"""The serving runtime (DESIGN.md §10): bucketed micro-batching, the
+epoch-keyed LRU result cache, and admission control.
+
+Contracts under test:
+  · a query submitted through the runtime resolves to rows bit-identical
+    to the same query through ``Server.query`` — cached or uncached,
+    and across a mutation (the epoch bump must recompute, not replay);
+  · warmup compiles exactly one program per bucket and serving compiles
+    nothing further (``repro.core.exec.trace_count`` accounting);
+  · completion order is FIFO for queued requests, including under
+    backpressure (accepted requests complete in submission order,
+    excess submissions fail fast with a retry-after hint);
+  · ``close(drain=True)`` completes every accepted request — none
+    dropped, none stranded.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid_index as hi
+from repro.core import segments as seg
+from repro.data import synthetic
+from repro.launch import runtime as rt_mod
+from repro.launch import serve
+
+
+def _corpus():
+    return synthetic.generate(seed=0, n_docs=1400, n_queries=24, hidden=32,
+                              vocab_size=512, n_topics=8)
+
+
+_KW = dict(n_clusters=16, k1_terms=4, codec="pq", pq_m=4, pq_k=64,
+           cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+
+
+def _plain_server(c, max_batch=16, n_namespaces=0):
+    ns = (None if not n_namespaces
+          else np.arange(c.doc_emb.shape[0]) % n_namespaces)
+    idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                   jnp.asarray(c.doc_tokens), c.vocab_size,
+                   doc_namespaces=ns, **_KW)
+    return serve.make_server(idx, serve.ServeConfig(
+        max_batch=max_batch, n_namespaces=n_namespaces))
+
+
+def _mutable_server(c, max_batch=16, hold=64):
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-hold], c.doc_tokens[:-hold],
+        c.vocab_size, delta_capacity=hold, **_KW)
+    return serve.make_mutable_server(
+        mut, serve.ServeConfig(max_batch=max_batch, mutable=True))
+
+
+def _runtime(server, c, **cfg):
+    rt = rt_mod.ServingRuntime(server, rt_mod.RuntimeConfig(**cfg))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    return rt
+
+
+def _rows_equal(row, batch_res, i):
+    np.testing.assert_array_equal(np.asarray(row.doc_ids),
+                                  np.asarray(batch_res.doc_ids)[i])
+    np.testing.assert_array_equal(np.asarray(row.scores),
+                                  np.asarray(batch_res.scores)[i])
+    assert int(row.n_candidates) == int(
+        np.asarray(batch_res.n_candidates)[i])
+
+
+# --------------------------------------------------------------------------
+# bit-identity: runtime rows == Server.query rows, cached and uncached
+# --------------------------------------------------------------------------
+
+def test_runtime_rows_bit_identical_to_server_query():
+    c = _corpus()
+    server = _plain_server(c)
+    direct = server.query(c.query_emb[:8], c.query_tokens[:8])
+    with _runtime(server, c) as rt:
+        futures = [rt.submit(c.query_emb[i], c.query_tokens[i])
+                   for i in range(8)]
+        for i, f in enumerate(futures):
+            _rows_equal(f.result(timeout=60), direct, i)
+        # the batched convenience wrapper reassembles the same rows
+        again = rt.query(c.query_emb[:8], c.query_tokens[:8])
+        np.testing.assert_array_equal(np.asarray(again.doc_ids),
+                                      np.asarray(direct.doc_ids)[:8])
+        np.testing.assert_array_equal(np.asarray(again.scores),
+                                      np.asarray(direct.scores)[:8])
+
+
+def test_runtime_filtered_rows_bit_identical():
+    c = _corpus()
+    server = _plain_server(c, n_namespaces=4)
+    want = [i % 4 for i in range(8)]
+    direct = server.query(c.query_emb[:8], c.query_tokens[:8],
+                          namespaces=want)
+    with _runtime(server, c) as rt:
+        got = rt.query(c.query_emb[:8], c.query_tokens[:8],
+                       namespaces=want)
+        np.testing.assert_array_equal(np.asarray(got.doc_ids),
+                                      np.asarray(direct.doc_ids))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(direct.scores))
+        # unfiltered requests on a namespaced server ride an allow-all
+        # bitmap row — a bitwise no-op vs Server.query's filter=None
+        plain = server.query(c.query_emb[:8], c.query_tokens[:8])
+        got2 = rt.query(c.query_emb[:8], c.query_tokens[:8])
+        np.testing.assert_array_equal(np.asarray(got2.doc_ids),
+                                      np.asarray(plain.doc_ids))
+        np.testing.assert_array_equal(np.asarray(got2.scores),
+                                      np.asarray(plain.scores))
+
+
+def test_cache_hit_is_bit_identical_and_epoch_bump_invalidates():
+    c = _corpus()
+    server = _mutable_server(c)
+    with _runtime(server, c, cache_size=64) as rt:
+        first = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        hits0 = rt.cache.hits
+        again = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        assert rt.cache.hits == hits0 + 4
+        np.testing.assert_array_equal(np.asarray(first.doc_ids),
+                                      np.asarray(again.doc_ids))
+        np.testing.assert_array_equal(np.asarray(first.scores),
+                                      np.asarray(again.scores))
+        # cached rows equal a fresh direct query
+        direct = server.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(again.doc_ids),
+                                      np.asarray(direct.doc_ids)[:4])
+
+        # mutation bumps the epoch: the same queries must MISS and
+        # re-execute against the mutated index
+        epoch0 = server.epoch
+        rt.add(c.doc_emb[-16:], c.doc_tokens[-16:])
+        assert server.epoch == epoch0 + 1
+        hits1, misses1 = rt.cache.hits, rt.cache.misses
+        post = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        assert rt.cache.hits == hits1         # no stale replay
+        assert rt.cache.misses == misses1 + 4
+        direct_post = server.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(post.doc_ids),
+                                      np.asarray(direct_post.doc_ids)[:4])
+        np.testing.assert_array_equal(np.asarray(post.scores),
+                                      np.asarray(direct_post.scores)[:4])
+
+
+def test_compaction_through_runtime_rewarms_off_the_request_path():
+    """compact() rebuilds the base with new plane shapes — the §8
+    one-recompile-per-compaction must land in the runtime's re-warm,
+    not on the next request of every bucket (which would trip the
+    compile ledger)."""
+    c = _corpus()
+    server = _mutable_server(c)
+    with _runtime(server, c, cache_size=16) as rt:
+        rt.query(c.query_emb[:4], c.query_tokens[:4])
+        rt.add(c.doc_emb[-8:], c.doc_tokens[-8:])
+        rt.compact()
+        post = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        assert rt.serve_traces == 0            # requests never compile
+        rt.assert_one_compile_per_bucket()
+        direct = server.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(post.doc_ids),
+                                      np.asarray(direct.doc_ids)[:4])
+        np.testing.assert_array_equal(np.asarray(post.scores),
+                                      np.asarray(direct.scores)[:4])
+
+
+def test_warmup_revives_a_closed_runtime():
+    c = _corpus()
+    server = _plain_server(c)
+    rt = _runtime(server, c)
+    first = rt.query(c.query_emb[:2], c.query_tokens[:2])
+    rt.close(drain=True)
+    with pytest.raises(rt_mod.RuntimeClosed):
+        rt.submit(c.query_emb[0], c.query_tokens[0])
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    again = rt.query(c.query_emb[:2], c.query_tokens[:2])
+    np.testing.assert_array_equal(np.asarray(first.doc_ids),
+                                  np.asarray(again.doc_ids))
+    rt.close()
+
+
+def test_done_callback_may_reenter_submit():
+    """concurrent.futures runs done-callbacks inline on the resolving
+    thread (the scheduler); a callback that submits a follow-up query —
+    the natural pipelined-client pattern — must not deadlock."""
+    c = _corpus()
+    server = _plain_server(c)
+    with _runtime(server, c, cache_size=8) as rt:
+        chained, attached = [], threading.Event()
+
+        def follow_up(_):
+            chained.append(rt.submit(c.query_emb[1], c.query_tokens[1]))
+            attached.set()
+
+        f = rt.submit(c.query_emb[0], c.query_tokens[0])
+        f.add_done_callback(follow_up)
+        f.result(timeout=60)
+        # the chained submit (issued from whichever thread ran the
+        # callback — possibly the scheduler) completes, not deadlocks
+        assert attached.wait(timeout=60)
+        direct = server.query(c.query_emb[:2], c.query_tokens[:2])
+        _rows_equal(chained[0].result(timeout=60), direct, 1)
+
+
+def test_epoch_counter_semantics():
+    c = _corpus()
+    server = _mutable_server(c)
+    assert server.epoch == 0
+    ids = server.add(c.doc_emb[-8:], c.doc_tokens[-8:])
+    assert server.epoch == 1
+    server.delete(ids[:2])
+    assert server.epoch == 2
+    server.compact()
+    assert server.epoch == 3     # compaction renumbers -> must invalidate
+    plain = _plain_server(c)
+    assert plain.epoch == 0      # immutable: never invalidates
+    # the counter travels with checkpoint state: a restored index keeps
+    # invalidating epoch-keyed caches where the saved one left off
+    mut = server.mut
+    back = seg.MutableHybridIndex.from_state(mut.state_tree(),
+                                             mut.state_extra())
+    assert back.epoch == mut.epoch == 3
+
+
+def test_cancelled_future_does_not_poison_the_batch():
+    """A client that cancel()s while queued must neither receive a
+    result nor break co-riders in the same batch (the scheduler claims
+    futures via set_running_or_notify_cancel before executing)."""
+    c = _corpus()
+    server = _plain_server(c, max_batch=4)
+    rt = rt_mod.ServingRuntime(
+        server, rt_mod.RuntimeConfig(linger_ms=300.0))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    futures = [rt.submit(c.query_emb[i], c.query_tokens[i])
+               for i in range(3)]
+    cancelled = futures[1].cancel()    # still queued (300ms linger)
+    rt.close(drain=True)
+    direct = server.query(c.query_emb[:4], c.query_tokens[:4])
+    for i in (0, 2):
+        _rows_equal(futures[i].result(timeout=60), direct, i)
+    if cancelled:                      # raced the scheduler: either way,
+        assert futures[1].cancelled()  # the future is terminal
+    else:
+        _rows_equal(futures[1].result(timeout=60), direct, 1)
+
+
+# --------------------------------------------------------------------------
+# compile accounting: one program per bucket, none after warmup
+# --------------------------------------------------------------------------
+
+def test_one_compile_per_bucket_and_none_while_serving():
+    c = _corpus()
+    # odd max_batch: the ladder must top out at max_batch itself
+    server = _plain_server(c, max_batch=12)
+    rt = rt_mod.ServingRuntime(server, rt_mod.RuntimeConfig())
+    assert rt.buckets == (2, 4, 8, 12)
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    # <= 1 compile per bucket (== 1 unless another test already
+    # compiled the same shape in this process)
+    assert all(n <= 1 for n in rt.warm_traces.values()), rt.warm_traces
+    with rt:
+        for n in (1, 3, 5, 12, 7, 2):
+            rt.query(c.query_emb[:n], c.query_tokens[:n])
+        assert rt.serve_traces == 0
+        rt.assert_one_compile_per_bucket()
+        # every request landed in a warmed bucket
+        assert sum(rt.bucket_counts.values()) == rt.n_batches
+
+
+def test_bucket_ladder_shapes():
+    assert rt_mod.bucket_sizes(64) == (2, 4, 8, 16, 32, 64)
+    assert rt_mod.bucket_sizes(48) == (2, 4, 8, 16, 32, 48)
+    assert rt_mod.bucket_sizes(2) == (2,)
+    assert rt_mod.bucket_sizes(1) == (1,)
+    assert rt_mod.bucket_sizes(8, min_bucket=4) == (4, 8)
+    with pytest.raises(ValueError):
+        rt_mod.bucket_sizes(0)
+
+
+# --------------------------------------------------------------------------
+# admission control: FIFO under backpressure, fail-fast rejection
+# --------------------------------------------------------------------------
+
+def test_fifo_completion_under_backpressure():
+    c = _corpus()
+    server = _plain_server(c, max_batch=4)
+    rt = rt_mod.ServingRuntime(
+        server, rt_mod.RuntimeConfig(queue_depth=6, linger_ms=50.0))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    done_order = []
+    lock = threading.Lock()
+
+    def _track(i):
+        def cb(_):
+            with lock:
+                done_order.append(i)
+        return cb
+
+    accepted, rejected = [], 0
+    for i in range(24):
+        try:
+            f = rt.submit(c.query_emb[i % 24], c.query_tokens[i % 24])
+        except rt_mod.RuntimeOverloaded as e:
+            rejected += 1
+            assert e.retry_after_ms > 0
+            continue
+        f.add_done_callback(_track(i))
+        accepted.append((i, f))
+    for _, f in accepted:
+        f.result(timeout=60)
+    assert rejected > 0                    # depth 6 must push back on 24
+    assert rt.n_rejected == rejected
+    # accepted requests complete in submission order (single scheduler,
+    # FIFO batches, in-order resolution within a batch)
+    assert done_order == [i for i, _ in accepted]
+    rt.close()
+
+
+def test_graceful_drain_leaves_no_dropped_requests():
+    c = _corpus()
+    server = _plain_server(c, max_batch=4)
+    rt = rt_mod.ServingRuntime(
+        server, rt_mod.RuntimeConfig(queue_depth=64, linger_ms=200.0))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    # long linger: the queue is still holding requests when close() lands
+    futures = [rt.submit(c.query_emb[i], c.query_tokens[i])
+               for i in range(16)]
+    rt.close(drain=True)
+    direct = hi.SearchResult(*[np.concatenate(planes) for planes in zip(
+        *[server.query(c.query_emb[i:i + 4], c.query_tokens[i:i + 4])
+          for i in range(0, 16, 4)])])
+    for i, f in enumerate(futures):
+        assert f.done()
+        _rows_equal(f.result(), direct, i)
+    with pytest.raises(rt_mod.RuntimeClosed):
+        rt.submit(c.query_emb[0], c.query_tokens[0])
+
+
+def test_close_without_drain_fails_pending_futures():
+    c = _corpus()
+    server = _plain_server(c, max_batch=4)
+    rt = rt_mod.ServingRuntime(
+        server, rt_mod.RuntimeConfig(linger_ms=500.0))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    futures = [rt.submit(c.query_emb[i], c.query_tokens[i])
+               for i in range(6)]
+    rt.close(drain=False)
+    outcomes = []
+    for f in futures:
+        assert f.done()
+        try:
+            f.result()
+            outcomes.append("ok")
+        except rt_mod.RuntimeClosed:
+            outcomes.append("closed")
+    # every future resolved one way or the other — none stranded; and a
+    # 500ms linger guarantees at least the tail was still pending
+    assert "closed" in outcomes
+
+
+def test_submit_validation():
+    c = _corpus()
+    server = _plain_server(c)                    # unfiltered
+    rt = rt_mod.ServingRuntime(server, rt_mod.RuntimeConfig())
+    with pytest.raises(rt_mod.RuntimeClosed, match="warmup"):
+        rt.submit(c.query_emb[0], c.query_tokens[0])
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    with rt:
+        with pytest.raises(ValueError, match="namespaces"):
+            rt.submit(c.query_emb[0], c.query_tokens[0], namespaces=1)
+        with pytest.raises(ValueError, match="shapes"):
+            rt.submit(c.query_emb[0][:8], c.query_tokens[0])
+    # an out-of-range tenant id fails ITS request at submit; it must
+    # never reach the scheduler where it would poison a whole batch
+    server_ns = _plain_server(c, n_namespaces=4)
+    with _runtime(server_ns, c) as rt:
+        good = rt.submit(c.query_emb[0], c.query_tokens[0], namespaces=2)
+        with pytest.raises(ValueError, match="out of range"):
+            rt.submit(c.query_emb[1], c.query_tokens[1], namespaces=99)
+        assert good.result(timeout=60).doc_ids.shape[0] > 0

@@ -236,6 +236,12 @@ def test_compact_then_save_equals_rebuild_then_save():
         p_b = ckpt.save_mutable(os.path.join(d, "b"), 0, rebuilt)
         man_a, man_b = ckpt.load_manifest(p_a), ckpt.load_manifest(p_b)
         assert man_a["leaves"] == man_b["leaves"]
+        # the mutation epoch is lineage metadata, not index content: it
+        # deliberately survives compaction (+1, DESIGN.md §10) so
+        # epoch-keyed serving caches cannot replay across the renumbering
+        # — the content contract is everything else being identical
+        assert man_a["extra"]["mutable"].pop("epoch") > 0
+        assert man_b["extra"]["mutable"].pop("epoch") == 0
         assert man_a["extra"] == man_b["extra"]
         with np.load(os.path.join(p_a, "arrays.npz")) as za, \
                 np.load(os.path.join(p_b, "arrays.npz")) as zb:

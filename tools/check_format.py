@@ -1,0 +1,144 @@
+"""Blocking layout gate (stdlib-only, so it runs in the offline build
+environment where ruff cannot be installed).
+
+    python tools/check_format.py          # check, exit 1 on violations
+    python tools/check_format.py --fix    # rewrite the mechanical ones
+
+Enforced over every tracked ``*.py``:
+
+  · no tab characters, no CRLF line endings
+  · no trailing whitespace
+  · file ends with exactly one newline
+  · line length ≤ 88 (the ``ruff.toml`` line-length)
+
+This is the *enforceable subset* of ``ruff format --check``: the full
+formatter promotion (CI step in ``.github/workflows/ci.yml``) is staged
+behind a one-time ``ruff format .`` that needs a networked environment
+— until that lands, this gate is blocking and the ruff-format step
+stays advisory, so layout cannot regress while the tree waits for the
+real reformat.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import pathlib
+import subprocess
+import sys
+import tokenize
+
+MAX_LEN = 88           # keep in sync with ruff.toml line-length
+SKIP_PARTS = {"__pycache__", ".git", ".ruff_cache", "ci_results",
+              ".venv", "venv", ".eggs", "build", "dist", "node_modules"}
+
+
+def py_files(root: pathlib.Path):
+    """Tracked + untracked-but-not-ignored ``*.py`` via git (so a local
+    virtualenv or build dir is never scanned, let alone --fix'ed); the
+    rglob fallback covers running outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "-C", str(root), "ls-files", "-co",
+             "--exclude-standard", "*.py"],
+            capture_output=True, text=True, check=True).stdout
+        for rel in out.splitlines():
+            p = root / rel
+            if p.is_file() and not SKIP_PARTS & set(
+                    pathlib.Path(rel).parts):
+                yield p
+        return
+    except (OSError, subprocess.CalledProcessError):
+        pass
+    for p in sorted(root.rglob("*.py")):
+        if not SKIP_PARTS & set(p.parts):
+            yield p
+
+
+def _string_interior_lines(text: str) -> set:
+    """1-based line numbers touched by a multi-line string token.  The
+    trailing bytes of every such line (including the opening line —
+    everything after the quote is literal content) are program *data*:
+    trailing spaces, tabs or length there are the author's business,
+    exactly as the real formatter treats them, so the gate must neither
+    flag nor rewrite those lines."""
+    interior: set = set()
+    # Python >= 3.12 tokenizes f-strings as FSTRING_START/.../END
+    # instead of one STRING token — track the enclosing span
+    fstart = getattr(tokenize, "FSTRING_START", None)
+    fend = getattr(tokenize, "FSTRING_END", None)
+    stack: list = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.STRING and tok.end[0] > tok.start[0]:
+                interior.update(range(tok.start[0], tok.end[0] + 1))
+            elif fstart is not None and tok.type == fstart:
+                stack.append(tok.start[0])
+            elif fend is not None and tok.type == fend:
+                lo = stack.pop() if stack else tok.start[0]
+                if tok.end[0] > lo:
+                    interior.update(range(lo, tok.end[0] + 1))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        pass          # unparsable file: fall back to checking every line
+    return interior
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    raw = path.read_bytes()
+    fails = []
+    if b"\r\n" in raw:
+        fails.append(f"{path}: CRLF line endings")
+    text = raw.decode("utf-8")
+    if text and (not text.endswith("\n") or text.endswith("\n\n")):
+        fails.append(f"{path}: must end with exactly one newline")
+    skip = _string_interior_lines(text)
+    for i, line in enumerate(text.splitlines(), 1):
+        if i in skip:
+            continue
+        if "\t" in line:
+            fails.append(f"{path}:{i}: tab characters")
+        if line != line.rstrip():
+            fails.append(f"{path}:{i}: trailing whitespace")
+        if len(line) > MAX_LEN:
+            fails.append(f"{path}:{i}: {len(line)} chars > {MAX_LEN}")
+    return fails
+
+
+def fix_file(path: pathlib.Path) -> bool:
+    """Rewrite the mechanically fixable violations (everything except
+    long lines, which need a human/author decision).  True if changed.
+    Lines inside multi-line string literals are left byte-for-byte."""
+    text = path.read_bytes().decode("utf-8").replace("\r\n", "\n")
+    keep = _string_interior_lines(text)
+    lines = [line if i in keep else line.rstrip()
+             for i, line in enumerate(text.splitlines(), 1)]
+    fixed = "\n".join(lines).rstrip("\n") + "\n" if lines else text
+    if fixed != text:
+        path.write_bytes(fixed.encode("utf-8"))
+        return True
+    return False
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite mechanical violations in place")
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root)
+
+    if args.fix:
+        changed = [str(p) for p in py_files(root) if fix_file(p)]
+        for p in changed:
+            print(f"fixed {p}")
+    fails = [msg for p in py_files(root) for msg in check_file(p)]
+    if fails:
+        print(f"{len(fails)} layout violation(s):", file=sys.stderr)
+        for msg in fails:
+            print(f"  {msg}", file=sys.stderr)
+        sys.exit(1)
+    n = sum(1 for _ in py_files(root))
+    print(f"ok: {n} files clean (tabs/CRLF/trailing-ws/EOF/≤{MAX_LEN} cols)")
+
+
+if __name__ == "__main__":
+    main()
