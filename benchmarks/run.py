@@ -54,8 +54,8 @@ def _run_core_search() -> None:
 
 
 def _run_kernels() -> None:
-    # oracle-path timings; the Pallas bodies are TPU-targeted and
-    # validated in interpret mode by the tests
+    # oracle-path timing only; the fused/unfused Pallas comparison is
+    # benchmarks/kernel_bench.py (gated via results/BENCH_kernels.json)
     from benchmarks import common
     from repro.kernels.pq_adc import ref as adc_ref
 
@@ -169,9 +169,21 @@ def _serving_load() -> None:
               f"cache_hits={r['cache']['hits']}", flush=True)
 
 
+def _kernel_bench() -> None:
+    rep = _subprocess_json("kernel_bench", ["--smoke", "--check"])
+    for name in ("pq_adc", "sq8_dot", "assign_topk"):
+        e = rep[name]
+        derived = ";".join(f"{k}={v}" for k, v in sorted(e.items())
+                           if isinstance(v, bool)
+                           or k.startswith("qps"))
+        print(f"kernel_bench/{name},{e['fused_us_per_call']:.0f},"
+              f"{derived}", flush=True)
+
+
 #: every benchmark entry point; the driver refuses to run if a
 #: benchmarks/*.py exists without a row here
 DISPATCH = {
+    "kernel_bench": _kernel_bench,
     "table1_main": _table1,
     "table2_robustness": _table2,
     "table3_codec": _table3,

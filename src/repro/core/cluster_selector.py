@@ -10,8 +10,10 @@ HI²_sup:   the same tensor is a *learnable parameter* optimized by the
            assignment φ(D) frozen after initialization (§4.3).
 
 Scoring is a single (B, h) × (h, L) matmul + top-k — the Pallas kernel
-``repro.kernels.topk_score`` implements the fused version; the jnp path
-here is the oracle and the autodiff path used in training.
+``repro.kernels.assign_topk.ops.topk_scores`` implements the fused
+version (running top-k across centroid tiles, the (B, L) score plane
+never reaching HBM); the jnp path here is the oracle and the autodiff
+path used in training.
 """
 from __future__ import annotations
 
@@ -60,10 +62,20 @@ def select_for_doc(selector: ClusterSelector, doc_embeddings: Array) -> Array:
     return jnp.argmax(scores(selector, doc_embeddings), axis=-1).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
 def select_for_query(selector: ClusterSelector, query_embeddings: Array,
-                     k: int) -> tuple[Array, Array]:
-    """Search side (Eq. 6): top-K^C clusters per query."""
+                     k: int, *, use_kernel: bool = False
+                     ) -> tuple[Array, Array]:
+    """Search side (Eq. 6): top-K^C clusters per query.
+
+    ``use_kernel`` routes through the fused running-top-k kernel —
+    bit-identical list ids (same ``lax.top_k`` tie-break, asserted by
+    tests/test_kernels.py)."""
+    if use_kernel:
+        from repro.kernels.assign_topk import ops as at_ops
+        top_s, top_i = at_ops.topk_scores(
+            query_embeddings.astype(jnp.float32), selector.embeddings, k)
+        return top_i, top_s
     s = scores(selector, query_embeddings)
     top_s, top_i = jax.lax.top_k(s, k)
     return top_i.astype(jnp.int32), top_s

@@ -13,7 +13,7 @@ path, split into two pytrees that the index layers treat opaquely:
 Search integration (``hybrid_index.search`` / ``sharded_index``):
 
     scorer = codec.make_scorer(params, doc_planes, queries, use_kernel)
-    scores = scorer(candidate_rows)          # stage 1, all candidates
+    scores = scorer(candidate_rows, live)    # stage 1, all candidates
     top    = topk_by_score(..., codec.refine_width(top_r))
     top    = codec.refine(..., top_r, ctx)   # stage 2 (identity unless
                                              # the codec re-ranks)
@@ -109,13 +109,18 @@ class Codec:
 
     # --- search-time -----------------------------------------------------
     def make_scorer(self, params: PyTree, doc_planes: dict, queries: Array,
-                    use_kernel: bool = False) -> Callable[[Array], Array]:
-        """Returns ``score(ids) -> (B, C) f32`` over candidate rows.
+                    use_kernel: bool = False) -> Callable[..., Array]:
+        """Returns ``score(ids, live=None) -> (B, C) f32`` over candidate
+        rows, with ``-inf`` on non-live lanes.
 
         ``ids`` index rows of ``doc_planes`` (already shard-local on the
         sharded path) and may contain PAD (-1): implementations gather
-        via :func:`gather_rows` and never branch on validity — invalid
-        slots are masked by the caller's dedup mask.
+        via :func:`gather_rows` (or clip in-kernel) and never branch on
+        validity.  ``live`` is the caller's dedup ∧ ¬tombstone ∧
+        namespace mask for this source's slice of the candidate plane;
+        the scorer owns the mask-to-``-inf`` so fused kernels can apply
+        it in-kernel (DESIGN.md §11).  ``live=None`` means all-live
+        (scores returned unmasked — the codec-numerics test path).
         """
         raise NotImplementedError
 

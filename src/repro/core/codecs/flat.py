@@ -69,11 +69,16 @@ class FlatCodec(base.Codec):
 
     def make_scorer(self, params, doc_planes: dict, queries: Array,
                     use_kernel: bool = False):
+        # no fused kernel for flat: the fp32 plane's gather IS the score
+        # input (h floats/doc, no decode step), so a fused op would save
+        # nothing — ``use_kernel`` is accepted and ignored (the
+        # documented fallback, DESIGN.md §11)
         q = queries.astype(jnp.float32)
         emb = doc_planes["emb"]
 
-        def score(ids: Array) -> Array:
+        def score(ids: Array, live: Array = None) -> Array:
             rows = base.gather_rows(emb, ids)            # (B, C, h)
-            return jnp.einsum("bh,bch->bc", q, rows)
+            s = jnp.einsum("bh,bch->bc", q, rows)
+            return s if live is None else jnp.where(live, s, -jnp.inf)
 
         return score

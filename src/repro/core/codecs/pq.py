@@ -216,12 +216,18 @@ def _code_dtype(k: int):
 
 
 def _adc_scorer(lut: Array, codes_plane: Array, use_kernel: bool):
-    def score(ids: Array) -> Array:
-        codes = base.gather_rows(codes_plane, ids)       # (B, C, m)
+    def score(ids: Array, live: Array = None) -> Array:
         if use_kernel:
+            # fused path: the (N, m) plane is gathered INSIDE the kernel
+            # and the live mask applied in-kernel — no (B, C, m) in HBM
             from repro.kernels.pq_adc import ops as adc_ops
-            return adc_ops.pq_adc(lut, codes)
-        return adc_score(lut, codes)
+            if live is None:
+                live = jnp.ones(ids.shape, jnp.int32)
+            return adc_ops.pq_adc_fused(
+                lut, codes_plane, jnp.clip(ids, 0, None), live)
+        codes = base.gather_rows(codes_plane, ids)       # (B, C, m)
+        s = adc_score(lut, codes)
+        return s if live is None else jnp.where(live, s, -jnp.inf)
 
     return score
 

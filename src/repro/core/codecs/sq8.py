@@ -61,10 +61,20 @@ class SQ8Codec(base.Codec):
         bias = q @ params["lo"]                          # (B,)
         codes_plane = doc_planes["codes"]
 
-        def score(ids: Array) -> Array:
+        def score(ids: Array, live: Array = None) -> Array:
+            if use_kernel:
+                # fused gather+dot; the bias is added AFTER the in-kernel
+                # mask (-inf + bias = -inf, so masked lanes stay masked)
+                from repro.kernels.sq8_dot import ops as sq8_ops
+                lv = (jnp.ones(ids.shape, jnp.int32) if live is None
+                      else live)
+                return sq8_ops.sq8_dot_fused(
+                    q_scaled, codes_plane, jnp.clip(ids, 0, None), lv
+                ) + bias[:, None]
             rows = base.gather_rows(codes_plane, ids)    # (B, C, h) u8
-            return (jnp.einsum("bh,bch->bc", q_scaled,
-                               rows.astype(jnp.float32))
-                    + bias[:, None])
+            s = (jnp.einsum("bh,bch->bc", q_scaled,
+                            rows.astype(jnp.float32))
+                 + bias[:, None])
+            return s if live is None else jnp.where(live, s, -jnp.inf)
 
         return score

@@ -138,10 +138,17 @@ def topk_by_score(scores: Array, ids: Array, r: int) -> tuple[Array, Array]:
 def dispatch(cluster_sel: cs_mod.ClusterSelector,
              term_sel: ts_mod.TermSelector,
              query_embeddings: Array, query_tokens: Array,
-             kc: int, k2: int) -> tuple[Array, Array]:
-    """Query → K^C cluster list ids + ≤K₂ᵀ term list ids (Eq. 5 LHS)."""
+             kc: int, k2: int, use_kernel: bool = False
+             ) -> tuple[Array, Array]:
+    """Query → K^C cluster list ids + ≤K₂ᵀ term list ids (Eq. 5 LHS).
+
+    Under ``use_kernel`` the cluster top-k runs through the
+    ``kernels/assign_topk`` running-top-k kernel (bit-identical ids to
+    the ``lax.top_k`` path — same tie-break, asserted by
+    tests/test_kernels.py)."""
     cluster_ids, _ = cs_mod.select_for_query(cluster_sel,
-                                             query_embeddings, kc)
+                                             query_embeddings, kc,
+                                             use_kernel=use_kernel)
     term_ids = ts_mod.query_terms(term_sel, query_tokens, k2)
     return cluster_ids, term_ids
 
@@ -206,13 +213,22 @@ def score(codec_impl: codecs_base.Codec, codec_params: Any,
           sources: Sequence[Source], frontier: Frontier, live: Array,
           query_embeddings: Array, use_kernel: bool) -> Array:
     """Codec-score each source's block against its own doc planes;
-    masked slots carry ``-inf`` into selection."""
-    parts = [
-        codec_impl.make_scorer(codec_params, s.doc_planes,
-                               query_embeddings, use_kernel)(loc)
-        for s, loc in zip(sources, frontier.local)]
-    scores = parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
-    return jnp.where(live, scores, -jnp.inf)
+    masked slots carry ``-inf`` into selection.
+
+    Each scorer receives its source's static-width slice of ``live``
+    and owns the mask-to-``-inf`` (fused kernels apply it in-kernel —
+    DESIGN.md §11).  Slicing + per-part masking + concat is elementwise-
+    identical to masking the concatenated plane, so this refactor is
+    bitwise-neutral for the unfused path."""
+    parts, off = [], 0
+    for s, loc in zip(sources, frontier.local):
+        w = loc.shape[-1]
+        parts.append(
+            codec_impl.make_scorer(codec_params, s.doc_planes,
+                                   query_embeddings, use_kernel)
+            (loc, live[..., off:off + w]))
+        off += w
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
 
 
 def topk(frontier: Frontier, r_prime: int,
@@ -334,7 +350,8 @@ def execute(codec_impl: codecs_base.Codec, codec_params: Any,
     global _TRACES
     _TRACES += 1
     cluster_ids, term_ids = dispatch(cluster_sel, term_sel,
-                                     query_embeddings, query_tokens, kc, k2)
+                                     query_embeddings, query_tokens, kc, k2,
+                                     use_kernel)
     frontier = gather(sources, cluster_ids, term_ids)
     keep = dedup(frontier)
     frontier.live = filter_stage(frontier, sources, keep, ns_filter)

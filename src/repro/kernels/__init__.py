@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
     pq_adc          — PQ asymmetric-distance scoring (paper Eq. 4), the
-                      per-query candidate-evaluation hot path of HI².
+                      per-query candidate-evaluation hot path of HI²;
+                      includes the fused gather+ADC+mask search path
+                      (DESIGN.md §11).
+    sq8_dot         — fused gather+dequantized-dot scoring for the sq8
+                      codec (DESIGN.md §11).
     assign_topk     — fused embedding×centroid scoring with running
                       argmax: KMeans assignment + cluster dispatch
-                      (paper Eq. 6) over large L.
+                      (paper Eq. 6) over large L; ``topk_scores`` is
+                      the lax.top_k-exact dispatch top-k (§11).
     flash_attention — SWA/GQA-capable flash attention for the LM-family
                       architecture backbones (beyond-paper optimization).
 

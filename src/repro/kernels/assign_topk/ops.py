@@ -37,3 +37,32 @@ def assign_argmax(x: jax.Array, centroids: jax.Array, *, n_blk: int = 256,
     s, i = kernel.assign_argmax(xp, cp, n_blk=n_blk, l_blk=l_blk,
                                 interpret=not _on_tpu())
     return s[:n], i[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "n_blk", "l_blk", "use_kernel"))
+def topk_scores(x: jax.Array, emb: jax.Array, k: int, *, n_blk: int = 256,
+                l_blk: int = 512, use_kernel: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """Top-k plain inner products per row of ``x`` against ``emb``,
+    ``lax.top_k`` semantics (score desc, lowest index first on ties).
+
+    Padding uses zero rows masked to -inf in-kernel via the static
+    ``l_true`` — NOT the duplicate-row trick from assign_argmax, which
+    is only safe for argmax (a duplicated centroid would enter a top-k
+    list twice under a second id).
+    """
+    if not use_kernel:
+        return ref.topk_scores(x, emb, k)
+    n, h = x.shape
+    l = emb.shape[0]
+    assert k <= l, (k, l)
+    n_blk = min(n_blk, max(8, n))
+    l_blk = min(l_blk, max(8, l))
+    pad_n = (-n) % n_blk
+    pad_l = (-l) % l_blk
+    xp = jnp.pad(x, ((0, pad_n), (0, 0)))
+    ep = jnp.pad(emb, ((0, pad_l), (0, 0)))
+    s, i = kernel.topk_scores(xp, ep, k=k, n_blk=n_blk, l_blk=l_blk,
+                              l_true=l, interpret=not _on_tpu())
+    return s[:n], i[:n]

@@ -10,3 +10,12 @@ def assign_argmax(x: jax.Array, centroids: jax.Array
     c = centroids.astype(jnp.float32)
     s = x.astype(jnp.float32) @ c.T - 0.5 * jnp.sum(c * c, axis=-1)[None, :]
     return jnp.max(s, axis=-1), jnp.argmax(s, axis=-1).astype(jnp.int32)
+
+
+def topk_scores(x: jax.Array, emb: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Plain inner-product top-k — the dispatch-stage routing score
+    (no -½‖c‖² bias; that is KMeans-assignment-only)."""
+    s = x.astype(jnp.float32) @ emb.astype(jnp.float32).T
+    vals, idx = jax.lax.top_k(s, k)
+    return vals, idx.astype(jnp.int32)

@@ -29,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _adc_kernel(lut_ref, codes_ref, out_ref, *, m: int, k: int, c_blk: int):
@@ -65,3 +66,103 @@ def pq_adc_fragmajor(lut: jax.Array, codes_fm: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
         interpret=interpret,
     )(lut, codes_fm)
+
+
+# --------------------------------------------------------------------------
+# fused gather + ADC (PR 6) — the whole within-list evaluation in one kernel
+# --------------------------------------------------------------------------
+#
+# The unfused path above needs the caller to materialize the (B, C, m)
+# candidate-code gather in HBM first (an XLA gather over the resident
+# (N, m) plane), then streams that plane back through the ADC kernel —
+# 2× the HBM traffic of the codes actually scored, plus the intermediate
+# itself.  The fused kernel takes the *resident* plane and the (B, C)
+# candidate ids and performs the row gather inside the kernel body:
+#
+#   · ids are scalar-prefetched (SMEM), so each row's HBM address is
+#     known before the compute step runs;
+#   · the codes plane stays in HBM (memory_space=ANY) and candidate
+#     rows are DMA'd into a (c_blk, m) VMEM scratch, double-buffered so
+#     row i+1 is in flight while row i lands;
+#   · the live mask (dedup ∧ ¬tombstone ∧ namespace) is applied
+#     in-kernel: masked lanes leave as -inf, so the (B, C) score plane
+#     that reaches HBM is already selection-ready.
+#
+# Nothing of shape (B, C, m) ever exists — asserted over the jaxpr by
+# tests/test_kernels.py.  Per-candidate accumulation order (fragment
+# j = 0..m-1, one-hot dot per fragment) is identical to `_adc_kernel`,
+# so fused and unfused *kernel* scores agree bitwise; only the pure-jnp
+# oracle's m-reduction order differs (DESIGN.md §11 bounds it).
+
+
+def _adc_fused_kernel(ids_ref, lut_ref, live_ref, plane_ref, out_ref,
+                      codes_sc, sems, *, m: int, k: int, c_blk: int):
+    b, ci = pl.program_id(0), pl.program_id(1)
+    base = ci * c_blk
+
+    def row_copy(i, slot):
+        idx = ids_ref[b, base + i]
+        return pltpu.make_async_copy(plane_ref.at[pl.ds(idx, 1)],
+                                     codes_sc.at[pl.ds(i, 1)],
+                                     sems.at[slot])
+
+    row_copy(0, 0).start()
+
+    def gather_body(i, _):
+        @pl.when(i + 1 < c_blk)
+        def _prefetch():
+            row_copy(i + 1, (i + 1) % 2).start()
+
+        row_copy(i, i % 2).wait()
+        return 0
+
+    jax.lax.fori_loop(0, c_blk, gather_body, 0)
+
+    lut = lut_ref[0]                                   # (m, k) f32
+    codes = codes_sc[...].astype(jnp.int32)            # (c_blk, m)
+    acc = jnp.zeros((c_blk,), jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (c_blk, k), 1)
+    for j in range(m):        # static unroll — same order as _adc_kernel
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.float32)
+        acc = acc + jnp.dot(onehot, lut[j],
+                            preferred_element_type=jnp.float32)
+    out_ref[0] = jnp.where(live_ref[0] != 0, acc, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "interpret"))
+def pq_adc_fused(lut: jax.Array, codes_plane: jax.Array, ids: jax.Array,
+                 live: jax.Array, *, c_blk: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """lut: (B, m, k) f32; codes_plane: (N, m) int; ids: (B, C) i32 in
+    [0, N); live: (B, C) i32 (0 = masked) → scores (B, C) f32, ``-inf``
+    on masked lanes.
+
+    C must be a multiple of ``c_blk`` and k of 128 (ops.py pads both).
+    The codes plane keeps its storage dtype (uint8 when k ≤ 256) all
+    the way into VMEM; widening to i32 happens on-chip.
+    """
+    b, m, k = lut.shape
+    n = codes_plane.shape[0]
+    _, c = ids.shape
+    assert c % c_blk == 0, (c, c_blk)
+    del n
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c // c_blk),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda bi, ci, ids_ref: (bi, 0, 0)),
+            pl.BlockSpec((1, c_blk), lambda bi, ci, ids_ref: (bi, ci)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # resident plane
+        ],
+        out_specs=pl.BlockSpec((1, c_blk), lambda bi, ci, ids_ref: (bi, ci)),
+        scratch_shapes=[
+            pltpu.VMEM((c_blk, m), codes_plane.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_adc_fused_kernel, m=m, k=k, c_blk=c_blk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(ids, lut, live, codes_plane)

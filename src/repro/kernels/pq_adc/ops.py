@@ -33,3 +33,39 @@ def pq_adc(lut: jax.Array, codes: jax.Array, *, c_blk: int = 512,
     out = kernel.pq_adc_fragmajor(lut, codes_fm, c_blk=c_blk,
                                   interpret=not _on_tpu())
     return out[:, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "use_kernel"))
+def pq_adc_fused(lut: jax.Array, codes_plane: jax.Array, ids: jax.Array,
+                 live: jax.Array, *, c_blk: int = 256,
+                 use_kernel: bool = True) -> jax.Array:
+    """Fused gather + ADC + mask over the *resident* codes plane.
+
+    lut: (B, m, k) f32; codes_plane: (N, m) uint8/i32; ids: (B, C) i32
+    in [0, N); live: (B, C) bool/i32 (falsy = masked) → (B, C) f32
+    scores with ``-inf`` on masked lanes.  The candidate rows are
+    gathered inside the kernel (DMA from the HBM-resident plane) — no
+    (B, C, m) intermediate is ever allocated.
+
+    Padding done here so the kernel sees aligned shapes only:
+      · C → multiple of ``c_blk`` with ids=0 / live=0 (rows stripped
+        after the call; id 0 keeps the in-kernel DMA in bounds);
+      · k → multiple of 128 with zero LUT columns (codes < k never
+        select them).
+    """
+    if not use_kernel:
+        return ref.pq_adc_fused(lut, codes_plane, ids, live)
+    b, m, k = lut.shape
+    _, c = ids.shape
+    k_pad = (-k) % 128
+    if k_pad:
+        lut = jnp.pad(lut, ((0, 0), (0, 0), (0, k_pad)))
+    c_pad = (-c) % c_blk
+    ids = jnp.clip(ids.astype(jnp.int32), 0, codes_plane.shape[0] - 1)
+    live = live.astype(jnp.int32)
+    if c_pad:
+        ids = jnp.pad(ids, ((0, 0), (0, c_pad)))
+        live = jnp.pad(live, ((0, 0), (0, c_pad)))
+    out = kernel.pq_adc_fused(lut, codes_plane, ids, live, c_blk=c_blk,
+                              interpret=not _on_tpu())
+    return out[:, :c]

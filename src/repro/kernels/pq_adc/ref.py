@@ -13,3 +13,17 @@ def pq_adc(lut: jax.Array, codes: jax.Array) -> jax.Array:
         axis=-1,
     )[..., 0]
     return jnp.sum(gathered, axis=-1).astype(jnp.float32)
+
+
+def pq_adc_fused(lut: jax.Array, codes_plane: jax.Array, ids: jax.Array,
+                 live: jax.Array) -> jax.Array:
+    """Oracle for the fused op: gather rows, score, mask to ``-inf``.
+
+    lut: (B, m, k); codes_plane: (N, m) int; ids: (B, C) i32;
+    live: (B, C) bool/i32 → (B, C) f32.  This is the semantic spec —
+    the kernel must agree up to m-reduction order (DESIGN.md §11).
+    """
+    ids = jnp.clip(ids.astype(jnp.int32), 0, codes_plane.shape[0] - 1)
+    codes = codes_plane[ids].astype(jnp.int32)        # (B, C, m)
+    scores = pq_adc(lut, codes)
+    return jnp.where(live.astype(bool), scores, -jnp.inf)

@@ -1,0 +1,3 @@
+from repro.kernels.sq8_dot import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the fused SQ8 gather+dot kernel: pads C to
+the tile size, clips ids defensively, and switches to interpret mode
+off-TPU so CPU CI runs the same kernel body."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sq8_dot import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "use_kernel"))
+def sq8_dot_fused(q_scaled: jax.Array, codes_plane: jax.Array,
+                  ids: jax.Array, live: jax.Array, *, c_blk: int = 256,
+                  use_kernel: bool = True) -> jax.Array:
+    """Fused gather + dequantized dot + mask over the resident plane.
+
+    q_scaled: (B, h) f32 (queries already multiplied by the per-dim
+    scale); codes_plane: (N, h) u8; ids: (B, C); live: (B, C) → (B, C)
+    f32 *bias-free* scores, ``-inf`` on masked lanes.  The caller adds
+    the per-query ⟨q, lo⟩ bias afterwards (-inf survives the add).
+    """
+    if not use_kernel:
+        return ref.sq8_dot_fused(q_scaled, codes_plane, ids, live)
+    _, c = ids.shape
+    c_pad = (-c) % c_blk
+    ids = jnp.clip(ids.astype(jnp.int32), 0, codes_plane.shape[0] - 1)
+    live = live.astype(jnp.int32)
+    if c_pad:
+        ids = jnp.pad(ids, ((0, 0), (0, c_pad)))
+        live = jnp.pad(live, ((0, 0), (0, c_pad)))
+    out = kernel.sq8_dot_fused(q_scaled, codes_plane, ids, live,
+                               c_blk=c_blk, interpret=not _on_tpu())
+    return out[:, :c]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused SQ8 gather+dot kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq8_dot_fused(q_scaled: jax.Array, codes_plane: jax.Array,
+                  ids: jax.Array, live: jax.Array) -> jax.Array:
+    """q_scaled: (B, h); codes_plane: (N, h) u8; ids/live: (B, C) →
+    (B, C) f32 bias-free scores, ``-inf`` where not live."""
+    ids = jnp.clip(ids.astype(jnp.int32), 0, codes_plane.shape[0] - 1)
+    rows = codes_plane[ids].astype(jnp.float32)        # (B, C, h)
+    scores = jnp.einsum("bh,bch->bc", q_scaled.astype(jnp.float32), rows)
+    return jnp.where(live.astype(bool), scores, -jnp.inf)

@@ -71,7 +71,7 @@ class ServeConfig:
     k2: int = 8
     top_r: int = 100
     max_batch: int = 64
-    use_kernel: bool = False     # Pallas ADC on TPU
+    use_kernel: bool = False     # fused Pallas scoring (--use-kernel, §11)
     n_shards: int = 1            # >1 → document-sharded layout
     mutable: bool = False        # serve a MutableHybridIndex (§8)
     delta_capacity: int = 1024   # delta slots between compactions
@@ -282,6 +282,9 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--namespaces", type=int, default=0,
                     help="partition the corpus into N namespaces and demo "
                          "per-query filtered search (DESIGN.md §9)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="score candidates with the fused Pallas kernels "
+                         "(DESIGN.md §11; interpret-mode on CPU)")
     ap.add_argument("--runtime", action="store_true",
                     help="serve through the micro-batching runtime "
                          "(DESIGN.md §10) instead of direct batched calls")
@@ -302,6 +305,7 @@ def main(argv: Optional[list] = None) -> None:
                         pq_m=8, pq_k=256, cluster_capacity=192,
                         term_capacity=96, kmeans_iters=8)
     cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards,
+                      use_kernel=args.use_kernel,
                       mutable=args.mutable,
                       delta_capacity=args.delta_capacity,
                       n_namespaces=args.namespaces)

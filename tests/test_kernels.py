@@ -11,6 +11,7 @@ except ImportError:  # accelerator image: no pip installs; CI has the real one
 from repro.kernels.assign_topk import ops as at_ops, ref as at_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.pq_adc import ops as adc_ops, ref as adc_ref
+from repro.kernels.sq8_dot import ops as sq8_ops, ref as sq8_ref
 
 settings.register_profile("kernels", max_examples=12, deadline=None)
 settings.load_profile("kernels")
@@ -45,8 +46,155 @@ def test_pq_adc_paper_scale():
 
 
 # --------------------------------------------------------------------------
+# pq_adc_fused — gather + ADC + mask in one kernel (DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def _fused_case(seed, b, c, m, k, n, code_dtype, mask_row=None,
+                dup_ids=False):
+    """Random (lut, plane, ids, live) with the edge shapes under test."""
+    key = jax.random.key(seed)
+    lut = jax.random.normal(key, (b, m, k), jnp.float32)
+    plane = jax.random.randint(jax.random.fold_in(key, 1), (n, m),
+                               0, k).astype(code_dtype)
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (b, c), 0, n,
+                             jnp.int32)
+    if dup_ids:          # every id appears at least twice per row
+        ids = jnp.concatenate([ids[:, : (c + 1) // 2]] * 2, -1)[:, :c]
+    live = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.8,
+                                (b, c)).astype(jnp.int32)
+    if mask_row is not None:
+        live = live.at[mask_row % b].set(0)          # fully-masked row
+    return lut, plane, ids, live
+
+
+def _assert_fused_matches_ref(lut, plane, ids, live, c_blk):
+    got = np.asarray(adc_ops.pq_adc_fused(lut, plane, ids, live,
+                                          c_blk=c_blk))
+    want = np.asarray(adc_ref.pq_adc_fused(lut, plane, ids, live))
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(want))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-4)
+
+
+@given(b=st.integers(1, 4), c=st.integers(1, 700),
+       m=st.sampled_from([1, 4, 8]), k=st.sampled_from([64, 128, 256]),
+       code_i32=st.booleans(), dup=st.booleans(),
+       mask_row=st.integers(0, 3))
+def test_pq_adc_fused_matches_oracle_on_edge_shapes(b, c, m, k, code_i32,
+                                                    dup, mask_row):
+    """The ISSUE-6 edge sweep: C not a multiple of c_blk (c_blk=128,
+    any C), C smaller than one block (C=1 is a boundary draw),
+    duplicate candidate ids, one fully-masked (all -inf) row, and
+    uint8 vs int32 code planes — all against ref.py."""
+    dtype = jnp.int32 if code_i32 else jnp.uint8
+    lut, plane, ids, live = _fused_case(
+        b * 7919 + c, b, c, m, k, n=500, code_dtype=dtype,
+        mask_row=mask_row, dup_ids=dup)
+    _assert_fused_matches_ref(lut, plane, ids, live, c_blk=128)
+
+
+def test_pq_adc_fused_all_rows_masked_is_all_inf():
+    lut, plane, ids, live = _fused_case(0, 3, 200, 4, 64, n=100,
+                                        code_dtype=jnp.uint8)
+    live = jnp.zeros_like(live)
+    out = np.asarray(adc_ops.pq_adc_fused(lut, plane, ids, live, c_blk=128))
+    assert np.isneginf(out).all()
+
+
+def test_pq_adc_fused_never_materializes_candidate_codes():
+    """The fused op's whole point: no (B, C, m) — or padded
+    (B, C_pad, m) — intermediate may exist anywhere in its jaxpr.  The
+    unfused path is the positive control: its gather produces exactly
+    that shape, so the walker provably sees such intermediates."""
+    b, c, m, k, n, c_blk = 2, 384, 4, 64, 1000, 128
+    lut, plane, ids, live = _fused_case(1, b, c, m, k, n=n,
+                                        code_dtype=jnp.uint8)
+
+    def shapes_of(fn, *args):
+        seen = set()
+
+        def walk(jaxpr):
+            for eqn in jaxpr.eqns:
+                for v in eqn.outvars:
+                    aval = getattr(v, "aval", None)
+                    if aval is not None and hasattr(aval, "shape"):
+                        seen.add(tuple(aval.shape))
+                for val in jax.tree_util.tree_leaves(
+                        eqn.params, is_leaf=lambda x: hasattr(x, "eqns")):
+                    if hasattr(val, "eqns"):
+                        walk(val)
+                    elif hasattr(val, "jaxpr"):
+                        walk(val.jaxpr)
+        closed = jax.make_jaxpr(fn)(*args)
+        walk(closed.jaxpr)
+        return seen
+
+    def is_candidate_codes(shape):
+        return (len(shape) == 3 and shape[0] == b and shape[2] == m
+                and shape[1] >= c)
+
+    fused_shapes = shapes_of(
+        lambda *a: adc_ops.pq_adc_fused(*a, c_blk=c_blk),
+        lut, plane, ids, live)
+    offenders = sorted(s for s in fused_shapes if is_candidate_codes(s))
+    assert not offenders, (
+        f"fused kernel materialized candidate codes: {offenders}")
+
+    unfused_shapes = shapes_of(
+        lambda l, p, i, lv: jnp.where(lv.astype(bool),
+                                      adc_ops.pq_adc(l, p[i]), -jnp.inf),
+        lut, plane, ids, live)
+    assert any(is_candidate_codes(s) for s in unfused_shapes), (
+        "positive control failed: the walker no longer sees the "
+        "unfused (B, C, m) gather — fix the walker, not the kernel")
+
+
+# --------------------------------------------------------------------------
+# sq8_dot_fused
+# --------------------------------------------------------------------------
+
+@given(b=st.integers(1, 4), c=st.integers(1, 700),
+       h=st.sampled_from([16, 32, 64]), mask_row=st.integers(0, 3))
+def test_sq8_dot_fused_matches_oracle(b, c, h, mask_row):
+    key = jax.random.key(b * 31 + c)
+    q = jax.random.normal(key, (b, h), jnp.float32)
+    plane = jax.random.randint(jax.random.fold_in(key, 1), (400, h),
+                               0, 256).astype(jnp.uint8)
+    ids = jax.random.randint(jax.random.fold_in(key, 2), (b, c), 0, 400,
+                             jnp.int32)
+    live = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.8,
+                                (b, c)).astype(jnp.int32)
+    live = live.at[mask_row % b].set(0)
+    got = np.asarray(sq8_ops.sq8_dot_fused(q, plane, ids, live, c_blk=128))
+    want = np.asarray(sq8_ref.sq8_dot_fused(q, plane, ids, live))
+    np.testing.assert_array_equal(np.isinf(got), np.isinf(want))
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-2)
+
+
+# --------------------------------------------------------------------------
 # assign_topk
 # --------------------------------------------------------------------------
+
+@given(n=st.integers(1, 300), l=st.integers(2, 600),
+       h=st.sampled_from([16, 32]), k=st.integers(1, 12),
+       ties=st.booleans())
+def test_topk_scores_matches_lax_topk(n, l, h, k, ties):
+    """The dispatch kernel must be BIT-identical to ``lax.top_k`` over
+    the plain inner-product plane — scores and ids, including the
+    lowest-index-first tie-break (forced by duplicating rows)."""
+    k = min(k, l)
+    key = jax.random.key(n * 13 + l)
+    x = jax.random.normal(key, (n, h), jnp.float32)
+    emb = jax.random.normal(jax.random.fold_in(key, 1), (l, h),
+                            jnp.float32)
+    if ties:             # duplicate the first half: every score tied 2x
+        emb = jnp.concatenate([emb[: (l + 1) // 2]] * 2)[:l]
+    ws, wi = at_ref.topk_scores(x, emb, k)
+    gs, gi = at_ops.topk_scores(x, emb, k, l_blk=128)
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(gi))
+    np.testing.assert_allclose(np.asarray(ws), np.asarray(gs),
+                               rtol=1e-5, atol=1e-5)
 
 @given(n=st.integers(1, 1200), l=st.integers(2, 600),
        h=st.sampled_from([16, 64, 128]))
