@@ -27,7 +27,8 @@ import sys
 #: benchmark files the gate covers (committed baseline name = fresh name)
 DEFAULT_FILES = ("BENCH_codec.json", "sharded_search.json",
                  "BENCH_streaming.json", "BENCH_filtered.json",
-                 "BENCH_serving.json", "BENCH_kernels.json")
+                 "BENCH_serving.json", "BENCH_kernels.json",
+                 "BENCH_mesh.json")
 
 _HIGHER_BETTER = ("qps", "speedup")
 _LOWER_BETTER = ("us_per_batch", "us_per_call", "_us", "us", "seconds",

@@ -169,6 +169,19 @@ def _serving_load() -> None:
               f"cache_hits={r['cache']['hits']}", flush=True)
 
 
+def _mesh_serving() -> None:
+    rep = _subprocess_json("mesh_serving", ["--smoke", "--check"])
+    for name, r in rep["geometries"].items():
+        print(f"mesh/{name},{r['us_per_batch']:.0f},"
+              f"qps_emulated={r['qps_emulated']};"
+              f"identical={r['runtime_bit_identical']};"
+              f"p99_ms={r['poisson']['p99_ms']}", flush=True)
+    d = rep["failover"]
+    print(f"mesh/failover,0,"
+          f"partial={d['partial_flagged']};"
+          f"rejoin_identical={d['rejoin_bit_identical']}", flush=True)
+
+
 def _kernel_bench() -> None:
     rep = _subprocess_json("kernel_bench", ["--smoke", "--check"])
     for name in ("pq_adc", "sq8_dot", "assign_topk"):
@@ -193,6 +206,7 @@ DISPATCH = {
     "streaming_updates": _streaming_updates,
     "filtered_search": _filtered_search,
     "serving_load": _serving_load,
+    "mesh_serving": _mesh_serving,
 }
 
 

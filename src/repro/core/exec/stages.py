@@ -50,6 +50,11 @@ class SearchResult(NamedTuple):
     doc_ids: Array        # (B, R) i32, PAD_DOC when fewer candidates
     scores: Array         # (B, R) f32
     n_candidates: Array   # (B,) i32 — unique live docs evaluated (∝ QL)
+    #: False on every full-index search.  The degraded serving path
+    #: (DESIGN.md §12) sets it True host-side when one or more index
+    #: shards are ejected, so results cover the surviving document
+    #: ranges only — a contract flag, never a traced value.
+    partial: Any = False
 
 
 @dataclasses.dataclass(frozen=True)

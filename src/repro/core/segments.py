@@ -317,6 +317,24 @@ class MutableHybridIndex:
         return self.n_docs - self.n_deleted
 
     @property
+    def tombstone_ratio(self) -> float:
+        """Deleted fraction of the allocated corpus — with
+        :attr:`delta_fill`, one of the two auto-compaction watermarks
+        (DESIGN.md §8)."""
+        return self.n_deleted / self.n_docs if self.n_docs else 0.0
+
+    def needs_compact(self, fill_watermark: float = 0.0,
+                      tombstone_watermark: float = 0.0) -> bool:
+        """True when either watermark is crossed: delta fill >=
+        ``fill_watermark`` or tombstone ratio >= ``tombstone_watermark``.
+        A watermark of 0 disables that trigger (the default — compaction
+        stays manual unless serving opts in)."""
+        if fill_watermark > 0 and self.delta_fill >= fill_watermark:
+            return True
+        return (tombstone_watermark > 0
+                and self.tombstone_ratio >= tombstone_watermark)
+
+    @property
     def tombstones(self) -> np.ndarray:
         return self._tomb.copy()
 
@@ -626,6 +644,7 @@ class MutableHybridIndex:
 def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
                              per: int, dper: int, kc: int, k2: int,
                              top_r: int, use_kernel: bool = False,
+                             batch_axis: Optional[str] = None,
                              filtered: bool = False):
     """shard_map'd base∪delta search + merge for one static config.
 
@@ -636,7 +655,10 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
     every other variant, so results stay bit-identical.  With
     ``filtered=True`` the step takes a fifth argument, the replicated
     (B, W) namespace bitmap, and ``planes`` must carry ``base_ns`` /
-    ``delta_ns``.
+    ``delta_ns``.  ``batch_axis`` optionally partitions the query batch
+    (and the bitmap) over a second mesh axis — the 2-D (data, model)
+    serving layout of DESIGN.md §12, same semantics as
+    :func:`repro.core.sharded_index.make_search_step`.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -686,7 +708,7 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
             lambda x: P(leading, *(None,) * (x.ndim - 1)) if leading
             else P(*(None,) * x.ndim), tree)
 
-    qspec = P(None, None)
+    qspec = P(batch_axis, None)
 
     def run(planes, rep, qe, qt, ns_filter=None):
         in_specs = [specs_like(planes, axis_name), specs_like(rep, None),
@@ -698,7 +720,7 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
         mapped = compat.shard_map(
             body, mesh=mesh,
             in_specs=tuple(in_specs),
-            out_specs=(qspec, qspec, P(None)),
+            out_specs=(qspec, qspec, P(batch_axis)),
             check=False)  # outputs replicated by construction (§6 merge)
         return mapped(*args)
 
@@ -707,10 +729,11 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
 
 @functools.lru_cache(maxsize=32)
 def _compiled_mutable_search(mesh, axis_name, codec, n_base, per, dper,
-                             kc, k2, top_r, use_kernel, filtered):
+                             kc, k2, top_r, use_kernel, filtered,
+                             batch_axis=None):
     return jax.jit(make_mutable_search_step(
         mesh, axis_name, codec, n_base, per, dper, kc, k2, top_r,
-        use_kernel, filtered=filtered))
+        use_kernel, batch_axis=batch_axis, filtered=filtered))
 
 
 class ShardedMutableIndex:
@@ -727,10 +750,15 @@ class ShardedMutableIndex:
     """
 
     def __init__(self, mut: MutableHybridIndex, n_shards: int, mesh=None,
-                 axis_name: str = shi.SHARD_AXIS):
+                 axis_name: str = shi.SHARD_AXIS,
+                 data_axis: Optional[str] = None):
         self.mut = mut
         self.n_shards = int(n_shards)
         self.axis_name = axis_name
+        self.data_axis = data_axis
+        if data_axis is not None and mesh is None:
+            raise ValueError("data_axis= needs the 2-D mesh passed in "
+                             "(launch.mesh.make_serving_mesh)")
         self.mesh = mesh if mesh is not None else shi.make_shard_mesh(
             n_shards, axis_name)
         sbase = shi.partition(mut.base, n_shards)
@@ -751,7 +779,8 @@ class ShardedMutableIndex:
 
     def compact(self, key: Optional[Array] = None) -> "ShardedMutableIndex":
         return type(self)(self.mut.compact(key), self.n_shards,
-                          mesh=self.mesh, axis_name=self.axis_name)
+                          mesh=self.mesh, axis_name=self.axis_name,
+                          data_axis=self.data_axis)
 
     @property
     def epoch(self) -> int:
@@ -824,10 +853,16 @@ class ShardedMutableIndex:
         rep = {"cluster_emb": self._sbase.cluster_sel.embeddings,
                "term_avg": self._sbase.term_sel.avg_scores,
                "codec": self._sbase.codec_params}
+        if self.data_axis is not None:
+            d = self.mesh.shape[self.data_axis]
+            if np.shape(query_embeddings)[0] % d:
+                raise ValueError(
+                    f"batch {np.shape(query_embeddings)[0]} does not "
+                    f"divide over {d} data-axis slices")
         fn = _compiled_mutable_search(
             self.mesh, self.axis_name, self.mut.base.codec, self.mut.n_base,
             self.per, self.dper, kc, k2, top_r, use_kernel,
-            filter is not None)
+            filter is not None, self.data_axis)
         args = [self._planes(), rep, jnp.asarray(query_embeddings),
                 jnp.asarray(query_tokens)]
         if filter is not None:

@@ -267,7 +267,13 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
         # shard_map hands this device's block with a leading length-1
         # shard axis; drop it to get the local planes
         shard = jax.tree.map(lambda x: x[0], shard)
-        offset = jax.lax.axis_index(axis_name) * per
+        # an explicit per-shard "offsets" plane overrides the contiguous
+        # axis_index * per layout — the survivor-set serving path
+        # (DESIGN.md §12) keeps global doc ids stable when shard m is
+        # ejected and position i no longer owns range [i·per, (i+1)·per)
+        offset = shard.get("offsets")
+        if offset is None:
+            offset = jax.lax.axis_index(axis_name) * per
         source = qexec.Source(
             cluster_lists=PaddedLists(shard["cluster_entries"],
                                       shard["cluster_lengths"]),
@@ -315,17 +321,56 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
 @functools.lru_cache(maxsize=32)
 def _compiled_search(mesh: Mesh, axis_name: str, codec: str, per: int,
                      kc: int, k2: int, top_r: int, use_kernel: bool,
-                     filtered: bool):
+                     filtered: bool, batch_axis: Optional[str] = None):
     return jax.jit(make_search_step(mesh, axis_name, codec, per,
                                     kc, k2, top_r, use_kernel,
+                                    batch_axis=batch_axis,
                                     filtered=filtered))
+
+
+def take_shards(sindex: ShardedHybridIndex,
+                shard_ids) -> ShardedHybridIndex:
+    """The survivor view: a smaller sharded index holding only the
+    given shards' planes (DESIGN.md §12).
+
+    Global doc ids are preserved — list entries still name the original
+    corpus positions — but the surviving shards no longer sit at their
+    original mesh positions, so searches over the view must pass
+    :func:`search` the matching ``shard_offsets`` (``shard_ids · per``);
+    without it, shard position i would be misattributed range
+    [i·per, (i+1)·per).
+    """
+    sel = np.asarray(sorted(int(s) for s in shard_ids))
+    if sel.size == 0:
+        raise ValueError("take_shards needs at least one surviving shard")
+    if sel.min() < 0 or sel.max() >= sindex.n_shards:
+        raise ValueError(f"shard ids {sel.tolist()} out of range "
+                         f"[0, {sindex.n_shards})")
+    take = lambda x: None if x is None else x[jnp.asarray(sel)]  # noqa: E731
+    return dataclasses.replace(
+        sindex,
+        cluster_entries=take(sindex.cluster_entries),
+        cluster_lengths=take(sindex.cluster_lengths),
+        term_entries=take(sindex.term_entries),
+        term_lengths=take(sindex.term_lengths),
+        doc_planes=jax.tree.map(take, sindex.doc_planes),
+        doc_assign=take(sindex.doc_assign),
+        doc_ns=take(sindex.doc_ns))
+
+
+def shard_offsets_for(shard_ids, per: int) -> np.ndarray:
+    """The explicit offsets plane matching :func:`take_shards`."""
+    return np.asarray(sorted(int(s) for s in shard_ids),
+                      np.int32) * np.int32(per)
 
 
 def search(sindex: ShardedHybridIndex, query_embeddings: Array,
            query_tokens: Array, *, kc: int, k2: int, top_r: int,
            mesh: Optional[Mesh] = None, axis_name: str = SHARD_AXIS,
            use_kernel: bool = False,
-           filter: Optional[Array] = None) -> hi.SearchResult:
+           filter: Optional[Array] = None,
+           data_axis: Optional[str] = None,
+           shard_offsets: Optional[Array] = None) -> hi.SearchResult:
     """Sharded Eq. 5 — same contract and bit-identical results as
     :func:`repro.core.hybrid_index.search` (DESIGN.md §6), including
     under a per-query namespace ``filter`` (DESIGN.md §9).
@@ -333,6 +378,13 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
     ``mesh`` defaults to a fresh 1-D mesh over the first ``n_shards``
     devices; pass the mesh from :func:`make_shard_mesh` (after
     :func:`device_put`) to reuse placement across calls.
+
+    ``data_axis`` names a second mesh axis to partition the query batch
+    over — the 2-D (data, model) serving layout of DESIGN.md §12: the
+    index planes replicate along it, each data slice searches its rows
+    independently, and the batch size must divide by its length.
+    ``shard_offsets`` ((S,) i32) overrides the contiguous s·per doc-id
+    layout for survivor views (:func:`take_shards`).
     """
     if mesh is None:
         mesh = make_shard_mesh(sindex.n_shards, axis_name)
@@ -342,6 +394,15 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
         raise ValueError(
             f"mesh axis {axis_name!r} has size {mesh.shape[axis_name]} "
             f"but the index has {sindex.n_shards} shards")
+    if data_axis is not None:
+        if data_axis not in mesh.shape:
+            raise ValueError(f"mesh has no axis {data_axis!r} "
+                             f"(axes: {tuple(mesh.shape)})")
+        d = mesh.shape[data_axis]
+        if query_embeddings.shape[0] % d:
+            raise ValueError(
+                f"batch {query_embeddings.shape[0]} does not divide over "
+                f"{d} data-axis slices; pad to a multiple of {d}")
     if filter is not None and sindex.doc_ns is None:
         raise ValueError(
             "search(filter=...) needs an index partitioned from one "
@@ -351,8 +412,15 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
            "codec": sindex.codec_params}
     fn = _compiled_search(mesh, axis_name, sindex.codec,
                           sindex.docs_per_shard, kc, k2, top_r, use_kernel,
-                          filter is not None)
-    args = (_shard_planes(sindex), rep, query_embeddings, query_tokens)
+                          filter is not None, data_axis)
+    planes = _shard_planes(sindex)
+    if shard_offsets is not None:
+        off = jnp.asarray(shard_offsets, jnp.int32)
+        if off.shape != (sindex.n_shards,):
+            raise ValueError(f"shard_offsets shape {off.shape} != "
+                             f"({sindex.n_shards},)")
+        planes["offsets"] = off
+    args = (planes, rep, query_embeddings, query_tokens)
     if filter is not None:
         args += (jnp.asarray(filter, jnp.uint32),)
     ids, scores, n_cand = fn(*args)

@@ -7,6 +7,7 @@ dry-run must set XLA_FLAGS before the first jax init).
 """
 from __future__ import annotations
 
+import jax
 from jax.sharding import Mesh
 
 from repro.distributed import compat
@@ -22,3 +23,25 @@ def make_host_mesh(data: int = 2, model: int = 4) -> Mesh:
     """Small mesh over host devices for tests (requires
     xla_force_host_platform_device_count ≥ data·model)."""
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(data: int, model: int,
+                      data_axis: str = "data",
+                      model_axis: str = "shards") -> Mesh:
+    """The 2-D serving mesh (DESIGN.md §12): queries partition over
+    ``data`` replica slices, document shards over ``model`` devices per
+    replica — ``data · model`` devices total.  The model axis keeps the
+    sharded-index default name ("shards") so the same search step runs
+    on 1-D and 2-D meshes unchanged.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got ({data}, {model})")
+    devs = jax.devices()
+    need = data * model
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for a ({data}, {model}) serving mesh, "
+            f"have {len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    return compat.make_mesh((data, model), (data_axis, model_axis),
+                            devices=devs[:need])

@@ -63,6 +63,18 @@ from repro.core.exec import filters as ns_filters
 #: results bit-identical to ``Server.query`` (DESIGN.md §10).
 MIN_BUCKET = 2
 
+#: Cache-key quantum for the L2-normalized query embedding: components
+#: are rounded to multiples of this before hashing, so two embeddings
+#: that are positive scalings of each other (ranking is scale-invariant
+#: under cosine scoring) — or that differ by < CACHE_QUANT/2 per
+#: normalized component — share one cache entry.  A hit returns the
+#: representative's stored rows verbatim; exact repeats are still
+#: deterministic, so cached replay stays bit-identical.  1e-4 sits ~4
+#: orders of magnitude above float32 scaling noise on a unit vector
+#: (so scale-variants land in the same grid cell) and ~3 below the
+#: distance between genuinely different queries.
+CACHE_QUANT = 1e-4
+
 
 class RuntimeOverloaded(RuntimeError):
     """Admission control rejected the request: the queue is at
@@ -88,12 +100,22 @@ class RuntimeConfig:
     min_bucket: int = MIN_BUCKET
 
 
-def bucket_sizes(max_batch: int, min_bucket: int = MIN_BUCKET) -> tuple:
+def bucket_sizes(max_batch: int, min_bucket: int = MIN_BUCKET,
+                 quantum: int = 1) -> tuple:
     """The bucket ladder: powers of two from ``min_bucket`` up, capped
-    by a final ``max_batch`` rung (itself, even when not a power of 2)."""
+    by a final ``max_batch`` rung (itself, even when not a power of 2).
+
+    ``quantum`` is the batch granularity of the serving layout — the
+    data-axis replica count of a 2-D mesh server (DESIGN.md §12), whose
+    query batch must split into equal per-replica row blocks.  Every
+    rung is a multiple of it (``max_batch`` itself must be)."""
     if max_batch < 1:
         raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-    sizes, b = [], max(1, min_bucket)
+    q = max(1, int(quantum))
+    if max_batch % q:
+        raise ValueError(f"max_batch {max_batch} is not a multiple of "
+                         f"the batch quantum {q}")
+    sizes, b = [], max(1, min_bucket) * q
     while b < max_batch:
         sizes.append(b)
         b *= 2
@@ -102,15 +124,20 @@ def bucket_sizes(max_batch: int, min_bucket: int = MIN_BUCKET) -> tuple:
 
 
 class QueryCache:
-    """Thread-safe LRU over exact query keys.
+    """Thread-safe LRU over normalized query keys.
 
-    A key is (index epoch, canonical namespace spec, query embedding
-    bytes, query token bytes): byte-exact equality, no fuzzy matching —
-    a hit returns the stored result rows verbatim, which is what makes
-    cached and uncached responses bit-identical.  The epoch component
-    is how mutations invalidate: ``add``/``delete``/``compact`` bump the
-    server's epoch, so stale entries simply never match again (they age
-    out of the LRU instead of being swept eagerly).
+    A key is (index epoch, canonical namespace spec, normalized query
+    embedding bytes, query token bytes).  The embedding component is the
+    L2-normalized vector quantized to :data:`CACHE_QUANT` — ranking is
+    scale-invariant, so positive scalings of one query (and embeddings
+    within the documented tolerance) share an entry; the token
+    component stays byte-exact.  A hit returns the stored result rows
+    verbatim, which is what makes cached and uncached responses
+    bit-identical for exact repeats.  The epoch component is how
+    mutations invalidate: ``add``/``delete``/``compact`` (and mesh
+    membership changes, DESIGN.md §12) bump the server's epoch, so
+    stale entries simply never match again (they age out of the LRU
+    instead of being swept eagerly).
     """
 
     def __init__(self, capacity: int):
@@ -167,6 +194,18 @@ def _fail(future: Future, exc: BaseException) -> None:
         pass
 
 
+def _canon_qe(qe: np.ndarray) -> bytes:
+    """Cache-key bytes for one query embedding: L2-normalize (float64 —
+    the quantization must not inherit float32 rounding), quantize to
+    :data:`CACHE_QUANT`, hash the integer grid point.  Zero vectors pass
+    through unnormalized (nothing meaningful to scale)."""
+    v = qe.astype(np.float64)
+    n = float(np.linalg.norm(v))
+    if n > 0.0:
+        v = v / n
+    return np.round(v / CACHE_QUANT).astype(np.int64).tobytes()
+
+
 def _canon_ns(namespaces) -> Optional[tuple]:
     """One request's namespace spec (an int or an iterable of ids) as a
     canonical hashable tuple — equal specs must produce equal cache keys."""
@@ -195,7 +234,12 @@ class ServingRuntime:
         self.server = server
         self.cfg = cfg
         self.max_batch = int(server.cfg.max_batch)
-        self.buckets = bucket_sizes(self.max_batch, cfg.min_bucket)
+        # batch quantum: a 2-D mesh server partitions each bucket over
+        # its data-axis replicas (DESIGN.md §12), so every rung must
+        # split into equal per-replica row blocks
+        self.n_replicas = max(1, int(getattr(server, "n_replicas", 1)))
+        self.buckets = bucket_sizes(self.max_batch, cfg.min_bucket,
+                                    self.n_replicas)
         self.cache = (QueryCache(cfg.cache_size) if cfg.cache_size > 0
                       else None)
         self._hidden: Optional[int] = None
@@ -213,6 +257,7 @@ class ServingRuntime:
         self.n_rejected = 0
         self.n_batches = 0
         self.bucket_counts = {b: 0 for b in self.buckets}
+        self.replica_dispatch = {r: 0 for r in range(self.n_replicas)}
         self.warm_traces: dict = {}
         # compiles triggered by runtime batches after warmup — 0 when
         # every request lands in a warmed bucket.  Deltas are taken
@@ -368,17 +413,31 @@ class ServingRuntime:
         return hi.SearchResult(
             doc_ids=np.stack([r.doc_ids for r in rows]),
             scores=np.stack([r.scores for r in rows]),
-            n_candidates=np.stack([r.n_candidates for r in rows]))
+            n_candidates=np.stack([r.n_candidates for r in rows]),
+            partial=any(bool(getattr(r, "partial", False)) for r in rows))
 
     # --- mutations (mutable servers): epoch-coherent forwarding ----------
     def add(self, doc_emb, doc_tokens, namespaces=None) -> np.ndarray:
         with self._serve_lock:
-            return self.server.add(doc_emb, doc_tokens,
-                                   namespaces=namespaces)
+            base = self.server.index
+            ids = self.server.add(doc_emb, doc_tokens,
+                                  namespaces=namespaces)
+            self._rewarm_if_compacted(base)
+            return ids
 
     def delete(self, doc_ids) -> None:
         with self._serve_lock:
+            base = self.server.index
             self.server.delete(doc_ids)
+            self._rewarm_if_compacted(base)
+
+    def _rewarm_if_compacted(self, base) -> None:
+        """A watermark-triggered auto-compaction inside ``add``/``delete``
+        (ServeConfig.compact_*_watermark, DESIGN.md §8) swaps the base
+        index; re-warm here — under the serve lock, off the request
+        path — exactly like an explicit :meth:`compact`."""
+        if self.server.index is not base and self._hidden is not None:
+            self._warm_buckets()
 
     def compact(self) -> None:
         with self._serve_lock:
@@ -392,6 +451,13 @@ class ServingRuntime:
 
     # --- observability ---------------------------------------------------
     def stats(self) -> dict:
+        cache = None
+        if self.cache is not None:
+            h, m = self.cache.hits, self.cache.misses
+            cache = {"hits": h, "misses": m, "entries": len(self.cache),
+                     "hit_rate": (h / (h + m)) if h + m else 0.0}
+        with self._cond:
+            depth = len(self._queue)
         return {
             "buckets": list(self.buckets),
             "warm_traces": dict(self.warm_traces),
@@ -399,12 +465,19 @@ class ServingRuntime:
             "n_served": self.n_served,
             "n_rejected": self.n_rejected,
             "n_batches": self.n_batches,
+            "queue_depth": depth,
             "bucket_counts": dict(self.bucket_counts),
-            "cache": (None if self.cache is None else
-                      {"hits": self.cache.hits,
-                       "misses": self.cache.misses,
-                       "entries": len(self.cache)}),
+            "n_replicas": self.n_replicas,
+            "replica_dispatch": dict(self.replica_dispatch),
+            "cache": cache,
         }
+
+    def serve_metrics(self, port: int = 0) -> "MetricsServer":
+        """Expose :meth:`stats` as plaintext (Prometheus exposition
+        style) on ``http://127.0.0.1:port/metrics``; ``port=0`` binds an
+        ephemeral port (read it from the returned server).  The caller
+        owns the returned :class:`MetricsServer` (``close()`` it)."""
+        return MetricsServer(self, port)
 
     def assert_one_compile_per_bucket(self) -> None:
         """The warmup contract (DESIGN.md §10): every bucket compiled at
@@ -428,7 +501,7 @@ class ServingRuntime:
         """The one cache-key schema; the scheduler passes its
         lock-pinned ``epoch``, the submit pre-check reads the live one."""
         e = self._epoch() if epoch is None else epoch
-        return (e, ns, qe.tobytes(), qt.tobytes())
+        return (e, ns, _canon_qe(qe), qt.tobytes())
 
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
@@ -436,17 +509,36 @@ class ServingRuntime:
                 return b
         return self.max_batch
 
-    def _bitmap(self, specs: Sequence, bucket: int):
+    def _rows_idx(self, n: int, bucket: int) -> list:
+        """Row placement for n requests in a bucket: identity on 1-D
+        layouts; on a D-replica mesh, request i rides row
+        ``(i % D) · bucket/D + i // D`` — round-robin over the
+        contiguous per-replica row blocks the data axis partitions the
+        bucket into, so a part-full bucket spreads live queries across
+        every replica instead of stacking them on replica 0."""
+        d = self.n_replicas
+        if d == 1:
+            return list(range(n))
+        per = bucket // d
+        return [(i % d) * per + (i // d) for i in range(n)]
+
+    def _bitmap(self, specs: Sequence, bucket: int, rows_idx=None):
         """Per-bucket namespace bitmap, or None on an unfiltered server.
         A namespaced server ALWAYS gets a bitmap (allow-all rows for
         requests without a filter — a bitwise no-op) so each bucket has
-        one jit signature; pad rows match nothing."""
+        one jit signature; pad rows match nothing.  ``rows_idx`` scatters
+        the specs to their mesh-placed rows (:meth:`_rows_idx`)."""
         n_ns = self.server.cfg.n_namespaces
         if not n_ns:
             return None
-        rows = [range(n_ns) if ns is None else ns for ns in specs]
-        return ns_filters.pad_filter(ns_filters.make_filter(rows, n_ns),
-                                     bucket)
+        if rows_idx is None:
+            rows = [range(n_ns) if ns is None else ns for ns in specs]
+            return ns_filters.pad_filter(ns_filters.make_filter(rows, n_ns),
+                                         bucket)
+        rows = [()] * bucket     # un-placed rows match nothing (pad rows)
+        for i, ns in enumerate(specs):
+            rows[rows_idx[i]] = range(n_ns) if ns is None else ns
+        return ns_filters.make_filter(rows, n_ns)
 
     def _loop(self) -> None:
         try:
@@ -525,28 +617,35 @@ class ServingRuntime:
             if misses:
                 try:
                     bucket = self._bucket_for(len(misses))
+                    place = self._rows_idx(len(misses), bucket)
                     qe = np.zeros((bucket, self._hidden), np.float32)
                     qt = np.full((bucket, self._query_len), -1, np.int32)
                     for i, req in enumerate(misses):
-                        qe[i], qt[i] = req.qe, req.qt
+                        qe[place[i]], qt[place[i]] = req.qe, req.qt
                     before = qexec.trace_count()
                     res = self.server._search(
                         self.server.index, jnp.asarray(qe),
                         jnp.asarray(qt),
-                        filter=self._bitmap([r.ns for r in misses],
-                                            bucket))
+                        filter=self._bitmap(
+                            [r.ns for r in misses], bucket,
+                            None if self.n_replicas == 1 else place))
                     self.serve_traces += qexec.trace_count() - before
                     ids = np.asarray(res.doc_ids)
                     scores = np.asarray(res.scores)
                     n_cand = np.asarray(res.n_candidates)
+                    part = bool(np.asarray(getattr(res, "partial",
+                                                   False)))
                     for i, req in enumerate(misses):
-                        row = hi.SearchResult(doc_ids=ids[i],
-                                              scores=scores[i],
-                                              n_candidates=n_cand[i])
+                        j = place[i]
+                        row = hi.SearchResult(doc_ids=ids[j],
+                                              scores=scores[j],
+                                              n_candidates=n_cand[j],
+                                              partial=part)
                         if self.cache is not None:
                             self.cache.put(self._key(req.qe, req.qt,
                                                      req.ns, epoch), row)
                         rows[id(req)] = row
+                        self.replica_dispatch[i % self.n_replicas] += 1
                     if self.cache is not None:
                         self.cache.misses += len(misses)
                     self.n_served += len(misses)
@@ -562,3 +661,81 @@ class ServingRuntime:
                 req.future.set_result(row)
             else:
                 req.future.set_exception(err)
+
+
+def render_metrics(stats: dict) -> str:
+    """One :meth:`ServingRuntime.stats` dict as plaintext metrics
+    (Prometheus exposition style: ``name{label="v"} value`` lines) —
+    the scrape payload of :class:`MetricsServer`."""
+    lines = [
+        f"hi2_runtime_served_total {stats['n_served']}",
+        f"hi2_runtime_rejected_total {stats['n_rejected']}",
+        f"hi2_runtime_batches_total {stats['n_batches']}",
+        f"hi2_runtime_queue_depth {stats['queue_depth']}",
+        f"hi2_runtime_replicas {stats['n_replicas']}",
+        f"hi2_runtime_post_warmup_compiles {stats['post_warmup_traces']}",
+    ]
+    for b in stats["buckets"]:
+        lines.append(f'hi2_runtime_bucket_batches_total{{bucket="{b}"}} '
+                     f"{stats['bucket_counts'][b]}")
+    for b, n in sorted(stats["warm_traces"].items()):
+        lines.append(f'hi2_runtime_bucket_compiles{{bucket="{b}"}} {n}')
+    for r, n in sorted(stats["replica_dispatch"].items()):
+        lines.append(f'hi2_runtime_replica_dispatch_total{{replica="{r}"}} '
+                     f"{n}")
+    cache = stats["cache"]
+    if cache is not None:
+        lines += [
+            f"hi2_runtime_cache_hits_total {cache['hits']}",
+            f"hi2_runtime_cache_misses_total {cache['misses']}",
+            f"hi2_runtime_cache_entries {cache['entries']}",
+            f"hi2_runtime_cache_hit_rate {cache['hit_rate']:.6f}",
+        ]
+    return "\n".join(lines) + "\n"
+
+
+class MetricsServer:
+    """Plaintext metrics endpoint over one :class:`ServingRuntime`
+    (DESIGN.md §10): ``GET /metrics`` on a loopback-only stdlib HTTP
+    server returns :func:`render_metrics` of a live :meth:`stats`
+    snapshot.  Daemon-threaded; ``close()`` (or process exit) stops it.
+    """
+
+    def __init__(self, runtime: ServingRuntime, port: int = 0):
+        import http.server
+
+        rt = runtime
+
+        class _Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path.split("?", 1)[0] != "/metrics":
+                    self.send_error(404, "scrape /metrics")
+                    return
+                body = render_metrics(rt.stats()).encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):     # scrapes are not stdout news
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer(("127.0.0.1", port),
+                                                      _Handler)
+        self.port = int(self._httpd.server_address[1])
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="hi2-metrics", daemon=True)
+        self._thread.start()
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join()
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

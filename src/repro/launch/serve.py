@@ -18,6 +18,13 @@ Serving layouts:
     (:mod:`repro.core.sharded_index`), per-shard search under
     shard_map, top-R merged by one all-gather.  Bit-identical results,
     1/S of the doc-plane HBM per device.
+  · :class:`MeshServer` — the 2-D (data, model) serving mesh of
+    DESIGN.md §12 (``--data-parallel D``): doc planes sharded along the
+    model axis AND replicated along a data axis over which the query
+    batch is partitioned — D× the query throughput of the sharded
+    layout, bit-identical results.  Survives model-axis shard loss by
+    serving from the survivors' document ranges (``partial=True``)
+    until :meth:`MeshServer.rejoin` restores from checkpoint.
   · :class:`MutableServer` / :class:`ShardedMutableServer` — the
     streaming layout of DESIGN.md §8 (``--mutable``): base + delta
     segment + tombstones (:mod:`repro.core.segments`), live
@@ -63,6 +70,8 @@ from repro.core import hybrid_index as hi
 from repro.core.exec import filters as ns_filters
 from repro.core import segments as seg
 from repro.core import sharded_index as shi
+from repro.distributed import fault
+from repro.launch import mesh as mesh_mod
 
 
 @dataclasses.dataclass
@@ -76,6 +85,12 @@ class ServeConfig:
     mutable: bool = False        # serve a MutableHybridIndex (§8)
     delta_capacity: int = 1024   # delta slots between compactions
     n_namespaces: int = 0        # >0 → filtered search over N namespaces
+    data_parallel: int = 1       # >1 → 2-D (data, model) serving mesh (§12)
+    # auto-compaction watermarks (§8): compact when delta fill or
+    # tombstone ratio crosses the threshold; 0 disables (the default —
+    # serving never compacts behind the operator's back unless asked)
+    compact_fill_watermark: float = 0.0
+    compact_tombstone_watermark: float = 0.0
 
 
 class Server:
@@ -104,6 +119,13 @@ class Server:
         an immutable index never invalidates cached results.  Mutable
         servers override with the live counter."""
         return 0
+
+    @property
+    def n_replicas(self) -> int:
+        """Data-axis replica slices (DESIGN.md §12) — the runtime's
+        batch quantum: every micro-batch bucket must divide into equal
+        per-replica row blocks.  1 on every non-mesh layout."""
+        return max(1, int(self.cfg.data_parallel))
 
     def warmup(self, hidden: int, query_len: int) -> None:
         qe = jnp.zeros((self.cfg.max_batch, hidden), jnp.float32)
@@ -141,9 +163,11 @@ class Server:
         res = self._search(self.index, qe, qt,
                            filter=self._filter(namespaces, n))
         self.n_served += n
-        return hi.SearchResult(doc_ids=res.doc_ids[:n],
-                               scores=res.scores[:n],
-                               n_candidates=res.n_candidates[:n])
+        return hi.SearchResult(
+            doc_ids=res.doc_ids[:n],
+            scores=res.scores[:n],
+            n_candidates=res.n_candidates[:n],
+            partial=bool(np.asarray(getattr(res, "partial", False))))
 
     # mutation API — live only on the mutable servers below
     def add(self, doc_emb: np.ndarray, doc_tokens: np.ndarray,
@@ -180,6 +204,125 @@ class ShardedServer(Server):
                           use_kernel=self.cfg.use_kernel, filter=filter)
 
 
+class MeshServer(Server):
+    """2-D (data, model) mesh serving with shard-loss degradation
+    (DESIGN.md §12).
+
+    The index is partitioned into ``cfg.n_shards`` document shards along
+    the model axis and replicated along ``cfg.data_parallel`` data-axis
+    slices; each slice searches its block of the query batch
+    independently, so throughput scales with the data axis while every
+    result stays bit-identical to the single-device search (the §6 merge
+    runs per-replica over the model axis only).
+
+    Survivability: :meth:`eject_shard` drops one model-axis shard from
+    the serving set — requests keep being served from the survivors'
+    document ranges, flagged ``partial=True`` — and :meth:`rejoin`
+    restores the full mesh from a :meth:`checkpoint`, bit-identical to
+    the pre-failure results.  Both bump :attr:`epoch`, so runtime caches
+    can never replay full results while degraded or vice versa.
+    """
+
+    def __init__(self, index: hi.HybridIndex,
+                 cfg: ServeConfig = ServeConfig(), mesh=None):
+        data, model = max(1, int(cfg.data_parallel)), int(cfg.n_shards)
+        if cfg.max_batch % data:
+            raise ValueError(
+                f"max_batch {cfg.max_batch} must divide over "
+                f"{data} data-axis slices")
+        self.cfg = cfg
+        self.data, self.model = data, model
+        self.data_axis = "data"
+        self.mesh = mesh or mesh_mod.make_serving_mesh(data, model)
+        self._full = shi.device_put(shi.partition(index, model), self.mesh)
+        self.index = self._full
+        # zero-memory restore template (shapes/dtypes, no plane bytes):
+        # rejoin-from-checkpoint must not depend on live full-mesh state
+        self._template = jax.tree.map(
+            lambda x: np.broadcast_to(np.zeros((), x.dtype), x.shape),
+            self._full)
+        self.health = fault.ShardHealth(model)
+        self._survivor = None    # (sub_index, sub_mesh, offsets) | None
+        self._mesh_epoch = 0
+        self._search = self._mesh_search
+        self.n_served = 0
+
+    @property
+    def epoch(self) -> int:
+        """Bumps on every membership change (eject/rejoin) — degraded
+        and full results must never share a cache namespace."""
+        return self._mesh_epoch
+
+    @property
+    def partial(self) -> bool:
+        return self.health.degraded
+
+    def _mesh_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
+        da = self.data_axis if self.data > 1 else None
+        if self._survivor is None:
+            return shi.search(self._full, qe, qt, kc=self.cfg.kc,
+                              k2=self.cfg.k2, top_r=self.cfg.top_r,
+                              mesh=self.mesh,
+                              use_kernel=self.cfg.use_kernel,
+                              filter=filter, data_axis=da)
+        sub, sub_mesh, offsets = self._survivor
+        res = shi.search(sub, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+                         top_r=self.cfg.top_r, mesh=sub_mesh,
+                         use_kernel=self.cfg.use_kernel, filter=filter,
+                         data_axis=da, shard_offsets=offsets)
+        return res._replace(partial=True)
+
+    # --- shard-loss degradation + recovery -------------------------------
+    def note_shard_latency(self, shard: int, dt: float) -> bool:
+        """Feed one measured per-shard latency into the straggler policy
+        (:class:`repro.distributed.fault.ShardHealth`); ejects the shard
+        and returns True once it crosses ``MAX_STRIKES`` deadline
+        misses."""
+        if self.health.observe(shard, dt):
+            self.eject_shard(shard)
+            return True
+        return False
+
+    def eject_shard(self, shard: int) -> None:
+        """Drop one model-axis shard from the serving set: subsequent
+        queries are served from the survivors' document ranges and
+        flagged ``partial=True``.  Idempotent per shard; the last
+        healthy shard cannot be ejected."""
+        if shard in self.health.lost:
+            return
+        self.health.eject(shard)
+        survivors = self.health.healthy
+        sub_mesh = mesh_mod.make_serving_mesh(self.data, len(survivors))
+        sub = shi.device_put(shi.take_shards(self._full, survivors),
+                             sub_mesh)
+        offsets = shi.shard_offsets_for(survivors,
+                                        self._full.docs_per_shard)
+        self._survivor = (sub, sub_mesh, offsets)
+        self._mesh_epoch += 1
+
+    def lost_doc_ranges(self) -> list:
+        """[lo, hi) global doc-id ranges currently missing from results
+        — the degradation contract surface (DESIGN.md §12)."""
+        per, n = self._full.docs_per_shard, self._full.n_docs
+        return [(m * per, min((m + 1) * per, n)) for m in self.health.lost]
+
+    def checkpoint(self, directory: str, step: int = 0) -> str:
+        """Persist the full sharded index (codec spec recorded in the
+        manifest); the path feeds :meth:`rejoin`."""
+        return ckpt.save_index(directory, step, self._full)
+
+    def rejoin(self, checkpoint_path: str) -> None:
+        """Restore the full mesh from a checkpoint: every lost shard
+        returns, results are bit-identical to pre-failure full-mesh
+        serving (one more epoch bump keeps caches honest)."""
+        restored = ckpt.restore_index(checkpoint_path, self._template)
+        self._full = shi.device_put(restored, self.mesh)
+        self.index = self._full
+        self.health.rejoin()
+        self._survivor = None
+        self._mesh_epoch += 1
+
+
 class MutableServer(Server):
     """Serving over a :class:`repro.core.segments.MutableHybridIndex`
     (DESIGN.md §8): the same padded-batch request contract as
@@ -214,12 +357,28 @@ class MutableServer(Server):
         """Index new documents; returns their global doc ids.  On a
         namespaced server ``namespaces`` (scalar or (n,) ids) is
         required."""
-        return self.mut.add_docs(doc_emb, doc_tokens,
-                                 namespaces=namespaces)
+        ids = self.mut.add_docs(doc_emb, doc_tokens,
+                                namespaces=namespaces)
+        self._auto_compact()
+        return ids
 
     def delete(self, doc_ids) -> None:
         """Tombstone documents; they can never appear in results again."""
         self.mut.delete_docs(doc_ids)
+        self._auto_compact()
+
+    def _auto_compact(self) -> None:
+        """Watermark-driven compaction (DESIGN.md §8): compact when the
+        delta fill or tombstone ratio crosses its configured threshold.
+        Both watermarks default to 0.0 = disabled — serving never
+        compacts behind the operator's back unless asked."""
+        fill = self.cfg.compact_fill_watermark
+        tomb = self.cfg.compact_tombstone_watermark
+        if fill <= 0.0 and tomb <= 0.0:
+            return
+        host = getattr(self.mut, "mut", self.mut)
+        if host.needs_compact(fill_watermark=fill, tombstone_watermark=tomb):
+            self.compact()
 
     def compact(self) -> None:
         """Fold delta + tombstones into a fresh base (bit-identical to a
@@ -235,7 +394,17 @@ class ShardedMutableServer(MutableServer):
 
     def __init__(self, mut: seg.MutableHybridIndex,
                  cfg: ServeConfig = ServeConfig(), mesh=None):
-        smut = seg.ShardedMutableIndex(mut, cfg.n_shards, mesh)
+        data = max(1, int(cfg.data_parallel))
+        if data > 1:
+            if cfg.max_batch % data:
+                raise ValueError(
+                    f"max_batch {cfg.max_batch} must divide over "
+                    f"{data} data-axis slices")
+            mesh = mesh or mesh_mod.make_serving_mesh(data, cfg.n_shards)
+            smut = seg.ShardedMutableIndex(mut, cfg.n_shards, mesh,
+                                           data_axis="data")
+        else:
+            smut = seg.ShardedMutableIndex(mut, cfg.n_shards, mesh)
         self.mut = smut
         self.cfg = cfg
         self.index = smut.mut.base
@@ -252,6 +421,8 @@ def make_server(index: hi.HybridIndex, cfg: ServeConfig) -> Server:
         raise ValueError("make_server serves a built immutable index; "
                          "use make_mutable_server(mut, cfg) for "
                          "ServeConfig(mutable=True)")
+    if cfg.data_parallel > 1:
+        return MeshServer(index, cfg)
     return ShardedServer(index, cfg) if cfg.n_shards > 1 else Server(index,
                                                                      cfg)
 
@@ -294,6 +465,13 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--cache", type=int, default=0,
                     help="LRU query-result cache entries, 0 = off "
                          "(--runtime)")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="data-axis replica slices for the 2-D serving "
+                         "mesh (DESIGN.md §12); needs shards x replicas "
+                         "devices")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="with --runtime: serve plaintext metrics on "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral)")
     args = ap.parse_args(argv)
     codecs.get(args.codec)   # fail fast (with the registered names) on typos
 
@@ -308,7 +486,8 @@ def main(argv: Optional[list] = None) -> None:
                       use_kernel=args.use_kernel,
                       mutable=args.mutable,
                       delta_capacity=args.delta_capacity,
-                      n_namespaces=args.namespaces)
+                      n_namespaces=args.namespaces,
+                      data_parallel=args.data_parallel)
     # round-robin tenant assignment for the demo corpus
     doc_ns = (np.arange(args.docs) % args.namespaces
               if args.namespaces else None)
@@ -333,6 +512,7 @@ def main(argv: Optional[list] = None) -> None:
                          jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
                          doc_namespaces=doc_ns, **build_kwargs)
         server = make_server(index, cfg)
+    metrics = None
     if args.runtime:
         from repro.launch import runtime as rt_mod
         front = rt_mod.ServingRuntime(
@@ -342,6 +522,9 @@ def main(argv: Optional[list] = None) -> None:
                 # control must not reject its own driver loop
                 queue_depth=max(256, 2 * args.batch)))
         front.warmup(64, corpus.query_tokens.shape[1])
+        if args.metrics_port is not None:
+            metrics = front.serve_metrics(args.metrics_port)
+            print(f"metrics: http://127.0.0.1:{metrics.port}/metrics")
     else:
         front = server
         server.warmup(64, corpus.query_tokens.shape[1])
@@ -350,7 +533,12 @@ def main(argv: Optional[list] = None) -> None:
         front.query(corpus.query_emb[i:i + args.batch],
                     corpus.query_tokens[i:i + args.batch])
     dt = time.perf_counter() - t0
-    layout = f"{args.shards} shard(s)" if args.shards > 1 else "1 device"
+    if args.data_parallel > 1:
+        layout = f"({args.data_parallel}, {args.shards}) mesh"
+    elif args.shards > 1:
+        layout = f"{args.shards} shard(s)"
+    else:
+        layout = "1 device"
     print(f"served {server.n_served} queries in {dt:.3f}s "
           f"({server.n_served / dt:.0f} q/s, {layout})")
     if args.namespaces:
@@ -383,6 +571,8 @@ def main(argv: Optional[list] = None) -> None:
               f"compacted to {getattr(mut_idx, 'mut', mut_idx).n_base} "
               f"docs in {dt_c:.2f}s")
     if args.runtime:
+        if metrics is not None:
+            metrics.close()
         front.close(drain=True)
         s = front.stats()
         cache = s["cache"]

@@ -128,6 +128,59 @@ def test_straggler_monitor_flags_outlier():
     assert mon.strikes[0] == 1
 
 
+def test_straggler_observe_external_measurements():
+    """The serving seam (DESIGN.md §12): per-shard latencies measured by
+    the caller, median window shared across hosts, strikes per host."""
+    mon = fault.StragglerMonitor(window=16, factor=2.0, max_strikes=3)
+    # no deadline until the median window has >= 8 samples
+    assert not mon.observe(10.0, host_id=1)
+    for _ in range(8):
+        assert not mon.observe(0.1, host_id=0)
+    # shared median (~0.1s) flags host 1, not host 0
+    assert mon.observe(1.0, host_id=1)
+    assert not mon.observe(0.15, host_id=0)
+    assert mon.strikes[1] == 1 and mon.strikes[0] == 0
+    assert not mon.should_eject(1)
+    for _ in range(2):
+        assert mon.observe(1.0, host_id=1)
+    assert mon.should_eject(1) and not mon.should_eject(0)
+
+
+def test_shard_health_policy():
+    """ShardHealth as used by MeshServer recovery: observe -> eject at
+    max_strikes, refuse to eject the last survivor, rejoin clears
+    strikes, out-of-range shards rejected."""
+    h = fault.ShardHealth(2, window=16, factor=2.0, max_strikes=2)
+    assert h.healthy == [0, 1] and h.lost == [] and not h.degraded
+    for _ in range(10):
+        assert not h.observe(0, 0.1)
+        assert not h.observe(1, 0.1)
+    assert not h.observe(1, 1.0)      # strike 1 of 2
+    assert h.observe(1, 1.0)          # strike 2 -> eject signal
+    h.eject(1)
+    assert h.degraded and h.lost == [1] and h.healthy == [0]
+    # an already-lost shard never re-signals ejection
+    assert not h.observe(1, 1.0)
+    with pytest.raises(ValueError, match="last healthy"):
+        h.eject(0)
+    with pytest.raises(ValueError, match="out of range"):
+        h.observe(2, 0.1)
+    with pytest.raises(ValueError, match="out of range"):
+        h.eject(-1)
+    h.rejoin(1)
+    assert not h.degraded and h.healthy == [0, 1]
+    assert h.monitor.strikes[1] == 0  # clean slate after rejoin
+
+
+def test_shard_health_rejoin_all():
+    h = fault.ShardHealth(4)
+    h.eject(0)
+    h.eject(2)
+    assert h.lost == [0, 2] and h.healthy == [1, 3]
+    h.rejoin()                        # None -> every lost shard returns
+    assert h.healthy == [0, 1, 2, 3] and not h.degraded
+
+
 def test_loader_reshards_after_ejection():
     loader = Dataloader(_batch_factory, global_batch=12, seed=0,
                         host_id=0, healthy_hosts=[0, 1, 2])

@@ -310,6 +310,13 @@ def test_bucket_ladder_shapes():
     assert rt_mod.bucket_sizes(8, min_bucket=4) == (4, 8)
     with pytest.raises(ValueError):
         rt_mod.bucket_sizes(0)
+    # the batch quantum of a 2-D mesh server (DESIGN.md §12): every
+    # rung must split into equal per-replica row blocks
+    assert rt_mod.bucket_sizes(64, quantum=2) == (4, 8, 16, 32, 64)
+    assert rt_mod.bucket_sizes(32, quantum=4) == (8, 16, 32)
+    assert rt_mod.bucket_sizes(4, quantum=4) == (4,)
+    with pytest.raises(ValueError, match="quantum"):
+        rt_mod.bucket_sizes(30, quantum=4)
 
 
 # --------------------------------------------------------------------------
@@ -362,7 +369,7 @@ def test_graceful_drain_leaves_no_dropped_requests():
                for i in range(16)]
     rt.close(drain=True)
     direct = hi.SearchResult(*[np.concatenate(planes) for planes in zip(
-        *[server.query(c.query_emb[i:i + 4], c.query_tokens[i:i + 4])
+        *[server.query(c.query_emb[i:i + 4], c.query_tokens[i:i + 4])[:3]
           for i in range(0, 16, 4)])])
     for i, f in enumerate(futures):
         assert f.done()
@@ -413,3 +420,180 @@ def test_submit_validation():
         with pytest.raises(ValueError, match="out of range"):
             rt.submit(c.query_emb[1], c.query_tokens[1], namespaces=99)
         assert good.result(timeout=60).doc_ids.shape[0] > 0
+
+
+# --------------------------------------------------------------------------
+# normalized cache keys: scale-invariant hits, tenant/epoch safety
+# --------------------------------------------------------------------------
+
+def test_cache_key_normalization_scaled_query_hits():
+    """The cache keys on the L2-normalized embedding quantized to
+    CACHE_QUANT, so a positively scaled copy of a cached query (ranking
+    is scale-invariant) hits and replays the representative's rows —
+    while a genuinely different query never collides."""
+    c = _corpus()
+    server = _plain_server(c)
+    with _runtime(server, c, cache_size=32) as rt:
+        row = rt.submit(c.query_emb[0], c.query_tokens[0]).result(timeout=60)
+        hits0 = rt.cache.hits
+        scaled = rt.submit(np.float32(3.7) * c.query_emb[0],
+                           c.query_tokens[0]).result(timeout=60)
+        assert rt.cache.hits == hits0 + 1
+        np.testing.assert_array_equal(np.asarray(row.doc_ids),
+                                      np.asarray(scaled.doc_ids))
+        np.testing.assert_array_equal(np.asarray(row.scores),
+                                      np.asarray(scaled.scores))
+    # distinct queries map to distinct keys at the documented quantum
+    keys = {rt_mod._canon_qe(np.asarray(c.query_emb[i], np.float32))
+            for i in range(c.query_emb.shape[0])}
+    assert len(keys) == c.query_emb.shape[0]
+    # zero-norm embeddings are keyable (no division blow-up)
+    assert rt_mod._canon_qe(np.zeros(32, np.float32)) is not None
+
+
+def test_cache_no_false_hits_across_tenants_or_mutations():
+    """Namespace-safety of the normalized key: the same embedding under
+    different tenant filters, or across a mutation epoch, must never
+    replay the other's rows."""
+    c = _corpus()
+    server = _plain_server(c, n_namespaces=4)
+    with _runtime(server, c, cache_size=64) as rt:
+        a = rt.submit(c.query_emb[0], c.query_tokens[0],
+                      namespaces=0).result(timeout=60)
+        hits0 = rt.cache.hits
+        b = rt.submit(c.query_emb[0], c.query_tokens[0],
+                      namespaces=1).result(timeout=60)
+        assert rt.cache.hits == hits0          # different tenant: no hit
+        ids_a = np.asarray(a.doc_ids)
+        ids_b = np.asarray(b.doc_ids)
+        assert (ids_a[ids_a >= 0] % 4 == 0).all()
+        assert (ids_b[ids_b >= 0] % 4 == 1).all()
+        # same tenant, scaled embedding: hit (key is (epoch, ns, qe, qt))
+        again = rt.submit(np.float32(2.0) * c.query_emb[0],
+                          c.query_tokens[0], namespaces=0).result(timeout=60)
+        assert rt.cache.hits == hits0 + 1
+        np.testing.assert_array_equal(ids_a, np.asarray(again.doc_ids))
+    # epoch safety for the scaled variant too
+    mut_server = _mutable_server(c)
+    with _runtime(mut_server, c, cache_size=64) as rt:
+        rt.submit(c.query_emb[0], c.query_tokens[0]).result(timeout=60)
+        rt.add(c.doc_emb[-8:], c.doc_tokens[-8:])
+        hits0 = rt.cache.hits
+        rt.submit(np.float32(2.0) * c.query_emb[0],
+                  c.query_tokens[0]).result(timeout=60)
+        assert rt.cache.hits == hits0          # epoch bumped: no replay
+
+
+# --------------------------------------------------------------------------
+# metrics endpoint: stats() scrape-able as plaintext over HTTP
+# --------------------------------------------------------------------------
+
+def test_metrics_endpoint_serves_runtime_stats():
+    import urllib.error
+    import urllib.request
+
+    c = _corpus()
+    server = _plain_server(c)
+    with _runtime(server, c, cache_size=8) as rt:
+        rt.query(c.query_emb[:4], c.query_tokens[:4])
+        rt.query(c.query_emb[:4], c.query_tokens[:4])   # cache hits
+        with rt.serve_metrics(port=0) as metrics:
+            url = f"http://127.0.0.1:{metrics.port}/metrics"
+            body = urllib.request.urlopen(url, timeout=10).read().decode()
+            assert "hi2_runtime_served_total 4" in body
+            assert "hi2_runtime_queue_depth 0" in body
+            assert "hi2_runtime_replicas 1" in body
+            assert 'hi2_runtime_bucket_compiles{bucket="4"} ' in body
+            assert "hi2_runtime_cache_hits_total 4" in body
+            assert "hi2_runtime_cache_hit_rate 0.5" in body
+            # only COMPUTED rows dispatch to a replica; the second
+            # batch replayed from the cache
+            assert 'hi2_runtime_replica_dispatch_total{replica="0"} 4' \
+                in body
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{metrics.port}/other", timeout=10)
+        # the rendered text is exactly render_metrics(stats())
+        text = rt_mod.render_metrics(rt.stats())
+        assert text.endswith("\n") and "hi2_runtime_batches_total" in text
+    # stats() carries the scrape fields even without a cache
+    server2 = _plain_server(c)
+    with _runtime(server2, c) as rt2:
+        s = rt2.stats()
+        assert s["cache"] is None and s["queue_depth"] == 0
+        assert "hi2_runtime_cache_hits_total" not in \
+            rt_mod.render_metrics(s)
+
+
+# --------------------------------------------------------------------------
+# auto-compaction watermarks (DESIGN.md §8): off by default, bit-identical
+# --------------------------------------------------------------------------
+
+def _mutable_server_watermark(c, fill=0.0, tomb=0.0, hold=64):
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:-hold], c.doc_tokens[:-hold],
+        c.vocab_size, delta_capacity=hold, **_KW)
+    return serve.make_mutable_server(mut, serve.ServeConfig(
+        max_batch=16, mutable=True, compact_fill_watermark=fill,
+        compact_tombstone_watermark=tomb))
+
+
+def test_auto_compaction_is_off_by_default():
+    c = _corpus()
+    server = _mutable_server(c)
+    server.add(c.doc_emb[-64:], c.doc_tokens[-64:])    # delta 100% full
+    assert server.mut.delta_count == 64                # never compacted
+
+
+def test_auto_compaction_fill_watermark_bit_identical():
+    """Crossing the fill watermark compacts mid-add-stream; the served
+    results must be bit-identical to an explicitly compacted twin."""
+    c = _corpus()
+    auto = _mutable_server_watermark(c, fill=0.5)
+    manual = _mutable_server_watermark(c)              # watermarks off
+    for lo in (64, 48, 32, 16):                        # 4 adds of 16
+        auto.add(c.doc_emb[-lo:][:16], c.doc_tokens[-lo:][:16])
+        manual.add(c.doc_emb[-lo:][:16], c.doc_tokens[-lo:][:16])
+        if manual.mut.needs_compact(fill_watermark=0.5):
+            manual.compact()
+    assert auto.mut.delta_count < 64                   # it did compact
+    a = auto.query(c.query_emb[:8], c.query_tokens[:8])
+    m = manual.query(c.query_emb[:8], c.query_tokens[:8])
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(m.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(m.scores))
+
+
+def test_auto_compaction_tombstone_watermark():
+    c = _corpus()
+    server = _mutable_server_watermark(c, tomb=0.02)
+    n0 = server.mut.n_base
+    assert server.mut.tombstone_ratio == 0.0
+    server.delete(np.arange(40))                       # ~3% of 1336 docs
+    # the delete itself crossed the watermark -> compacted away (the
+    # survivors are renumbered 0..n-1, so no tombstones remain)
+    assert server.mut.n_deleted == 0
+    assert server.mut.n_base == n0 - 40
+    direct = server.query(c.query_emb[:8], c.query_tokens[:8])
+    ids = np.asarray(direct.doc_ids)
+    assert (ids[ids >= 0] < server.mut.n_base).all()
+
+
+def test_auto_compaction_through_runtime_rewarms():
+    """A watermark compaction fired by a runtime add() swaps the base
+    index; the runtime must re-warm its buckets (off the request path)
+    so serving still never compiles."""
+    c = _corpus()
+    server = _mutable_server_watermark(c, fill=0.25, hold=64)
+    with _runtime(server, c, cache_size=16) as rt:
+        rt.query(c.query_emb[:4], c.query_tokens[:4])
+        base0 = server.index
+        rt.add(c.doc_emb[-32:], c.doc_tokens[-32:])    # fill 0.5 >= 0.25
+        assert server.index is not base0               # auto-compacted
+        post = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        assert rt.serve_traces == 0
+        rt.assert_one_compile_per_bucket()
+        direct = server.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(post.doc_ids),
+                                      np.asarray(direct.doc_ids)[:4])
