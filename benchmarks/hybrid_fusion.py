@@ -1,0 +1,187 @@
+"""Hybrid dense∥sparse fusion benchmark: recall vs fusion weight
+(DESIGN.md §13).
+
+    PYTHONPATH=src python benchmarks/hybrid_fusion.py --smoke --check \\
+        --out results/BENCH_hybrid.json                           # CI
+    PYTHONPATH=src python benchmarks/hybrid_fusion.py             # full
+
+Builds the index with the BM25 impact plane (``sparse=True``) over the
+*weaker* model-B encoder of the synthetic corpus — the paper's
+robustness setting (§5.3): when the dense model is imperfect, the
+lexical channel rescues queries the embedding space misses.  Then
+sweeps the RRF dense weight from 0.0 (pure lexical) to 1.0 (pure
+dense) and reports recall@R against the generator's qrels at each
+point, next to the dense-only baseline.
+
+With ``--check`` it exits nonzero if
+
+  · ``fusion_weight=1.0`` is not bit-identical to dense-only search
+    (the §13 degenerate-weight contract: zero sparse contributions
+    must change nothing), or
+  · a FusionSpec on an index without the impact plane does not fall
+    back to the exact dense result (ids AND scores), or
+  · the best fused recall@R falls below dense-only recall@R — fusion
+    must never cost quality at its operating point.
+
+All quality fields are deterministic; ``benchmarks/check_regression.py``
+gates them bit-exactly against ``results/BENCH_hybrid.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs, hybrid_index as hi, metrics
+from repro.core import exec as qexec
+from repro.data import synthetic
+
+WEIGHTS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def _time_call(fn, *a, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*a))
+    return (time.perf_counter() - t0) / iters * 1e6  # µs per call
+
+
+def run(args) -> dict:
+    codec = args.codec or codecs.DEFAULT
+    codecs.get(codec)    # fail fast on typos, listing registered names
+
+    if args.smoke:
+        n_docs, n_queries = 4000, 64
+        build_kwargs = dict(n_clusters=64, k1_terms=8, codec=codec,
+                            pq_m=4, pq_k=64, cluster_capacity=192,
+                            term_capacity=96, kmeans_iters=5)
+        vocab, hidden, topics = 2048, 32, 32
+    else:
+        n_docs, n_queries = 20_000, 256
+        build_kwargs = dict(n_clusters=256, k1_terms=12, codec=codec,
+                            pq_m=8, pq_k=256, cluster_capacity=256,
+                            term_capacity=128, kmeans_iters=10)
+        vocab, hidden, topics = 8192, 64, 128
+
+    corpus = synthetic.generate(seed=0, n_docs=n_docs, n_queries=n_queries,
+                                hidden=hidden, vocab_size=vocab,
+                                n_topics=topics)
+    # model B: the degraded encoder — the robustness setting where the
+    # sparse channel has signal the dense one lacks
+    qe = jnp.asarray(corpus.query_emb_b)
+    qt = jnp.asarray(corpus.query_tokens)
+    kc, k2, top_r = 6, 8, args.top_r
+
+    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb_b),
+                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                     sparse=True, **build_kwargs)
+
+    report = {
+        "bench": "hybrid",
+        "smoke": bool(args.smoke),
+        "codec": codec,
+        "encoder": "model_b",
+        "n_docs": n_docs,
+        "n_queries": n_queries,
+        "top_r": top_r,
+        "rrf_k": qexec.FusionSpec().rrf_k,
+        "candidate_budget": hi.candidate_budget(index, kc, k2),
+        "points": [],
+    }
+    failures = []
+
+    # --- dense-only baseline ---------------------------------------------
+    dense = hi.search(index, qe, qt, kc=kc, k2=k2, top_r=top_r)
+    dense_recall = metrics.recall_at_k(dense.doc_ids, corpus.qrels, top_r)
+    report["dense_only"] = {
+        f"R@{top_r}": dense_recall,
+        "mean_candidates": float(np.asarray(dense.n_candidates).mean()),
+        "search_us_per_batch": round(_time_call(
+            lambda: hi.search(index, qe, qt, kc=kc, k2=k2,
+                              top_r=top_r)), 1),
+    }
+
+    # --- fallback contract: FusionSpec without the impact plane ----------
+    stripped = dataclasses.replace(index, sparse_weights=None)
+    fb = hi.search(stripped, qe, qt, kc=kc, k2=k2, top_r=top_r,
+                   fusion=qexec.FusionSpec(weight=0.5))
+    fallback_ok = (
+        np.array_equal(np.asarray(dense.doc_ids), np.asarray(fb.doc_ids))
+        and np.array_equal(np.asarray(dense.scores), np.asarray(fb.scores)))
+    report["fallback_equals_dense"] = bool(fallback_ok)
+    if not fallback_ok:
+        failures.append("dense-only fallback is not bit-identical")
+
+    # --- fusion-weight sweep ---------------------------------------------
+    best_weight, best_recall = None, -1.0
+    for w in WEIGHTS:
+        fus = qexec.FusionSpec(weight=w)
+        res = hi.search(index, qe, qt, kc=kc, k2=k2, top_r=top_r,
+                        fusion=fus)
+        us = _time_call(lambda: hi.search(index, qe, qt, kc=kc, k2=k2,
+                                          top_r=top_r, fusion=fus))
+        recall = metrics.recall_at_k(res.doc_ids, corpus.qrels, top_r)
+        point = {
+            "fusion_weight": w,
+            f"R@{top_r}": recall,
+            "mean_candidates": float(np.asarray(res.n_candidates).mean()),
+            "search_us_per_batch": round(us, 1),
+        }
+        if w == 1.0:
+            identical = np.array_equal(np.asarray(res.doc_ids),
+                                       np.asarray(dense.doc_ids))
+            point["ids_equal_dense_only"] = bool(identical)
+            if not identical:
+                failures.append("fusion_weight=1.0 is not bit-identical "
+                                "to dense-only search")
+        report["points"].append(point)
+        if recall > best_recall:
+            best_weight, best_recall = w, recall
+
+    report["best_weight"] = best_weight
+    report[f"best_R@{top_r}"] = best_recall
+    report["fused_ge_dense"] = bool(best_recall >= dense_recall)
+    if best_recall < dense_recall:
+        failures.append(
+            f"best fused R@{top_r} {best_recall:.4f} < dense-only "
+            f"{dense_recall:.4f}")
+
+    report["check_failures"] = failures
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized corpus")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on contract violations")
+    ap.add_argument("--codec", default=None,
+                    help="codec spec (default: registry default)")
+    ap.add_argument("--top-r", type=int, default=100)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    report = run(args)
+    text = json.dumps(report, indent=1, sort_keys=True)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.check and report["check_failures"]:
+        sys.exit("hybrid-fusion contract violated: "
+                 + "; ".join(report["check_failures"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -182,6 +182,21 @@ def _mesh_serving() -> None:
           f"rejoin_identical={d['rejoin_bit_identical']}", flush=True)
 
 
+def _hybrid_fusion() -> None:
+    rep = _subprocess_json("hybrid_fusion", ["--smoke", "--check"])
+    r = rep["top_r"]
+    d = rep["dense_only"]
+    print(f"hybrid/dense_only,{d['search_us_per_batch']:.0f},"
+          f"R@{r}={d[f'R@{r}']:.4f}", flush=True)
+    for pt in rep["points"]:
+        print(f"hybrid/w{pt['fusion_weight']:.2f},"
+              f"{pt['search_us_per_batch']:.0f},"
+              f"R@{r}={pt[f'R@{r}']:.4f}", flush=True)
+    print(f"hybrid/best,0,weight={rep['best_weight']};"
+          f"fused_ge_dense={rep['fused_ge_dense']};"
+          f"fallback={rep['fallback_equals_dense']}", flush=True)
+
+
 def _kernel_bench() -> None:
     rep = _subprocess_json("kernel_bench", ["--smoke", "--check"])
     for name in ("pq_adc", "sq8_dot", "assign_topk"):
@@ -205,6 +220,7 @@ DISPATCH = {
     "sharded_search": _sharded_search,
     "streaming_updates": _streaming_updates,
     "filtered_search": _filtered_search,
+    "hybrid_fusion": _hybrid_fusion,
     "serving_load": _serving_load,
     "mesh_serving": _mesh_serving,
 }

@@ -11,6 +11,28 @@ Documents arrive as fixed-shape padded token-id matrices ``(n, L)`` with
 ``PAD_ID`` (= -1) padding, so everything below is fixed-shape jnp:
 TF via an O(L²) within-doc equality count (L ≤ 256 — 64k lane ops, cheap
 on the VPU), document frequency via first-occurrence masking + bincount.
+
+The same scores serve both sides of the hybrid index:
+
+  indexing side — ``fit`` → ``score_positions`` → ``top_terms`` picks
+  each document's K₁ salient terms, and
+  :func:`repro.core.inverted_lists.build_scored` materializes the
+  resulting (doc, term, score) triples as impact-ordered postings plus
+  an aligned impact plane;
+
+  query side (DESIGN.md §13) — a query probes its ≤K₂ᵀ terms (dedup'd
+  through :func:`first_occurrence_mask` inside
+  ``repro.core.term_selector.query_terms``) and
+  ``repro.core.exec.sparse_topk`` sums the *stored* impacts of each
+  candidate over the probed lists — a document's sparse score is the
+  sum of its indexed s_v over query∩doc terms, never a recomputation
+  against fresh statistics.  Example::
+
+      stats = bm25.fit(doc_tokens, vocab_size)          # indexing
+      pos = bm25.score_positions(doc_tokens, stats)
+      terms, scores = bm25.top_terms(doc_tokens, pos, k1)
+      # … build_scored(...) stores `scores` as the impact plane; at
+      # query time execute(fusion=FusionSpec(...)) reads it back.
 """
 from __future__ import annotations
 

@@ -4,18 +4,33 @@ One staged pipeline (dispatch → gather → dedup → filter → score → topk
 → refine) behind every search variant; see :mod:`repro.core.exec.stages`
 for the engine, :mod:`repro.core.exec.filters` for per-query namespace
 bitmaps, and :mod:`repro.core.exec.cost` for the shared latency proxy.
+
+Hybrid dense∥sparse search (DESIGN.md §13) rides the same engine: when
+a :class:`Source` carries a ``sparse_weights`` impact plane (the BM25
+scores aligned with its term-list entries,
+:func:`repro.core.inverted_lists.build_scored`) and the caller passes
+``execute(fusion=FusionSpec(...))``, a sparse BM25 top-R over the
+dispatched term lists runs next to the dense path and the two rankings
+combine by reciprocal-rank fusion *after* the shard merge —
+:mod:`repro.core.exec.fusion` holds the spec and the pure aggregation
+helpers, :func:`~repro.core.exec.stages.sparse_topk` /
+:func:`~repro.core.exec.stages.fuse` the stages.  Indexes without the
+plane fall back to the dense-only result, bit-identically.
 """
 from repro.core.exec import filters
 from repro.core.exec.cost import candidate_budget, candidate_cost
+from repro.core.exec.fusion import FusionSpec
 from repro.core.exec.stages import (Frontier, SearchResult, ShardEnv,
                                     Source, dedup, dispatch, execute,
-                                    filter_stage, gather, make_refine_ctx,
-                                    refine_planes, score, topk,
-                                    topk_by_score, trace_count)
+                                    filter_stage, fuse, gather,
+                                    make_refine_ctx, refine_planes, score,
+                                    sparse_topk, topk, topk_by_score,
+                                    trace_count)
 
 __all__ = [
-    "Frontier", "SearchResult", "ShardEnv", "Source",
+    "Frontier", "FusionSpec", "SearchResult", "ShardEnv", "Source",
     "candidate_budget", "candidate_cost", "dedup", "dispatch", "execute",
-    "filter_stage", "filters", "gather", "make_refine_ctx",
-    "refine_planes", "score", "topk", "topk_by_score", "trace_count",
+    "filter_stage", "filters", "fuse", "gather", "make_refine_ctx",
+    "refine_planes", "score", "sparse_topk", "topk", "topk_by_score",
+    "trace_count",
 ]

@@ -1,0 +1,104 @@
+"""Reciprocal-rank fusion of the dense and sparse result lists
+(DESIGN.md §13).
+
+The sparse (BM25) query path produces a second ranked list next to the
+dense codec ranking; this module holds the *pure* pieces of combining
+them — the :class:`FusionSpec` knob and the fixed-shape per-document
+aggregation both the sparse scorer and the fusion stage share.  The
+stage orchestration (where sparse scoring and fusion sit in the
+dispatch→…→refine pipeline) lives in :mod:`repro.core.exec.stages`;
+nothing here imports the stages module, so the helpers stay reusable
+from kernels and benchmarks without cycles.
+
+RRF (Cormack et al.): a document at 0-based rank r of list ℓ with list
+weight w_ℓ contributes
+
+    w_ℓ / (rrf_k + 1 + r)
+
+and a document's fused score is the sum of its contributions over the
+lists that ranked it.  ``fusion_weight`` splits the mass between the
+two lists: dense gets ``weight``, sparse ``1 − weight`` — so 1.0 is
+pure dense (sparse contributions are exactly 0.0, which is what makes
+the fused doc ids *bit-identical* to the dense-only search, asserted by
+``tests/test_fusion.py``) and 0.0 is pure sparse.  Ties in fused score
+break by ascending doc id — the same total order as every other
+selection in the engine (:func:`repro.core.exec.topk_by_score`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.inverted_lists import PAD_DOC
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    """The hybrid-search knob: how to weigh dense vs sparse (DESIGN.md
+    §13).
+
+    Frozen + hashable on purpose: the spec is a *static* argument of
+    every jitted search variant (a different weight is a different
+    compiled constant) and a component of the serving runtime's cache
+    key (a fusion change must miss, never replay stale rankings).
+
+    ``weight`` ∈ [0, 1]: 1.0 = pure dense (doc ids bit-identical to
+    ``fusion=None``), 0.0 = pure sparse BM25.  ``rrf_k`` is the
+    standard RRF rank damping constant (60 everywhere in the
+    literature); larger values flatten the rank discount.
+    """
+    weight: float = 0.5
+    rrf_k: int = 60
+
+    def __post_init__(self):
+        if not 0.0 <= self.weight <= 1.0:
+            raise ValueError(
+                f"fusion weight must be in [0, 1], got {self.weight}")
+        if self.rrf_k < 0:
+            raise ValueError(f"rrf_k must be >= 0, got {self.rrf_k}")
+
+
+def sum_by_doc(ids: Array, vals: Array) -> tuple[Array, Array, Array]:
+    """Per-row, per-unique-id sums — the fixed-shape "group by doc id"
+    both the sparse scorer (sum of BM25 impacts over probed term lists)
+    and the fusion stage (sum of RRF contributions over lists) need.
+
+    ``ids``/``vals``: (B, C) with ``PAD_DOC`` marking dead slots (their
+    vals must already be 0).  Returns ``(sorted_ids, totals, first)``,
+    all (B, C): ids stably sorted ascending per row, each slot's total
+    over its id's run, and the first-occurrence mask — so
+    ``where(first & live, totals, -inf)`` is ready for
+    :func:`~repro.core.exec.stages.topk_by_score`.
+
+    Bit-identity across partitionings (DESIGN.md §6 discipline): the
+    sort is stable, so slots of one id keep their relative input order,
+    and ``segment_sum`` adds each run in that order — a shard holding
+    all of one document's postings in the same relative order as the
+    single-device plane produces the identical float sum.
+    """
+    b, c = ids.shape
+    order = jnp.argsort(ids, axis=-1, stable=True)
+    sid = jnp.take_along_axis(ids, order, axis=-1)
+    sval = jnp.take_along_axis(vals, order, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones((b, 1), bool), sid[:, 1:] != sid[:, :-1]], axis=-1)
+    run = jnp.cumsum(first, axis=-1) - 1             # run index within row
+    seg = (jnp.arange(b)[:, None] * c + run).reshape(-1)
+    run_sums = jax.ops.segment_sum(sval.reshape(-1), seg,
+                                   num_segments=b * c).reshape(b, c)
+    totals = jnp.take_along_axis(run_sums, run, axis=-1)
+    return sid, totals, first
+
+
+def rrf_contributions(scores: Array, weight: float, rrf_k: int) -> Array:
+    """Per-slot RRF mass of one ranked (B, R) list: ``weight /
+    (rrf_k + 1 + rank)`` where the slot holds a real result
+    (finite score), exactly 0.0 where it is padding — a padded slot
+    must not leak rank mass to ``PAD_DOC``."""
+    ranks = jnp.arange(scores.shape[-1], dtype=jnp.float32)
+    return jnp.where(jnp.isfinite(scores),
+                     weight / (rrf_k + 1.0 + ranks), 0.0)

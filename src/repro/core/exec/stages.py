@@ -41,6 +41,8 @@ from repro.core import inverted_lists as il
 from repro.core import term_selector as ts_mod
 from repro.core.codecs import base as codecs_base
 from repro.core.exec import filters
+from repro.core.exec import fusion as fusion_mod
+from repro.core.exec.fusion import FusionSpec
 from repro.core.inverted_lists import PAD_DOC, PaddedLists
 
 Array = jax.Array
@@ -69,7 +71,10 @@ class Source:
     family this source is a slice of (base docs vs delta slots), which
     is what routes refine-stage gathers when several families coexist.
     ``tombstones``/``doc_ns`` are optional per-row planes consumed by
-    the filter stage.
+    the filter stage.  ``sparse_weights`` is the BM25 impact plane
+    aligned with ``term_lists.entries`` (DESIGN.md §13,
+    :func:`repro.core.inverted_lists.build_scored`); when every source
+    carries one, ``execute(fusion=...)`` can run the sparse query path.
     """
     cluster_lists: PaddedLists
     term_lists: PaddedLists
@@ -80,6 +85,7 @@ class Source:
     family_hi: Optional[int] = None          # default: family_lo + size
     tombstones: Optional[Array] = None       # (size,) bool
     doc_ns: Optional[Array] = None           # (size,) i32 namespace ids
+    sparse_weights: Optional[Array] = None   # (V, Ct) f32 BM25 impacts
 
     @property
     def hi_bound(self):
@@ -251,6 +257,91 @@ def topk(frontier: Frontier, r_prime: int,
     return top_s, top_ids
 
 
+def sparse_topk(sources: Sequence[Source], term_ids: Array, r: int,
+                ns_filter: Optional[Array], shard: Optional[ShardEnv]
+                ) -> tuple[Array, Array, Array]:
+    """The sparse (BM25) query path (DESIGN.md §13): top-r documents by
+    summed term impact over the ≤K₂ᵀ *dispatched* term lists.
+
+    Reuses the dense dispatch's ``term_ids`` — sparse and dense probe
+    the same lists — and each source's impact plane
+    (``Source.sparse_weights``, aligned with ``term_lists.entries``).
+    Per source: gather the probed postings + impacts, mask tombstoned /
+    namespace-filtered docs to (PAD_DOC, 0) — the same fail-closed
+    semantics as the dense filter stage — then sum impacts per unique
+    document (:func:`repro.core.exec.fusion.sum_by_doc`) and select
+    through the same total order as every other stage.  Zero-total
+    documents (only zero-impact postings matched) rank as non-matches.
+
+    Under a :class:`ShardEnv` each shard owns all of a document's
+    postings, so per-shard sums equal single-device sums bit-exactly
+    and the §6 gather + re-select merge applies unchanged.  Returns
+    ``(scores, ids, n_sparse)`` — (B, r) planes (``-inf``/PAD_DOC
+    padded) plus the unique matched-doc count per query.
+    """
+    ids_parts, w_parts = [], []
+    for s in sources:
+        safe = jnp.clip(term_ids, 0, None)
+        rows = s.term_lists.entries[safe]             # (B, K2, Ct)
+        w = s.sparse_weights[safe]
+        probed = (term_ids >= 0)[:, :, None]
+        ids = jnp.where(probed, rows, PAD_DOC).reshape(rows.shape[0], -1)
+        w = jnp.where(probed, w, 0.0).reshape(ids.shape)
+        live = ids != PAD_DOC
+        loc = jnp.clip(ids - s.offset, 0, s.size - 1)
+        if s.tombstones is not None:
+            live = live & ~s.tombstones[loc]
+        if ns_filter is not None:
+            live = live & filters.allowed_mask(ns_filter, s.doc_ns[loc])
+        ids_parts.append(jnp.where(live, ids, PAD_DOC))
+        w_parts.append(jnp.where(live, w, 0.0))
+    ids = (ids_parts[0] if len(ids_parts) == 1
+           else jnp.concatenate(ids_parts, -1))
+    w = w_parts[0] if len(w_parts) == 1 else jnp.concatenate(w_parts, -1)
+    sid, totals, first = fusion_mod.sum_by_doc(ids, w)
+    rep = first & (sid != PAD_DOC) & (totals > 0.0)
+    scores = jnp.where(rep, totals, -jnp.inf)
+    n_sparse = rep.sum(axis=-1).astype(jnp.int32)
+    top_s, top_ids = topk_by_score(scores, sid, r)
+    if shard is not None:
+        from repro.distributed import collectives
+        n_sparse = jax.lax.psum(n_sparse, shard.axis_name)
+        all_s, all_ids = collectives.gather_topk(top_s, top_ids,
+                                                 shard.axis_name)
+        top_s, top_ids = topk_by_score(all_s, all_ids, r)
+    return top_s, top_ids, n_sparse
+
+
+def fuse(dense_scores: Array, dense_ids: Array, sparse_scores: Array,
+         sparse_ids: Array, fusion: FusionSpec, top_r: int
+         ) -> tuple[Array, Array]:
+    """Reciprocal-rank fusion of the final dense and sparse rankings
+    (DESIGN.md §13): contribution ``weight/(rrf_k+1+rank)`` from the
+    dense list, ``(1−weight)/(rrf_k+1+rank)`` from the sparse one,
+    summed per document, ties broken by ascending doc id via
+    :func:`topk_by_score`.
+
+    Runs strictly AFTER the shard merge (both inputs are the already
+    replicated (B, R) planes), mirroring the §7 refine argument: ranks
+    are positions in the merged total order, so every shard fuses the
+    identical lists and the fused result needs no further collective.
+    At ``weight=1.0`` sparse contributions are exactly 0.0 and
+    sparse-only docs mask out, so fused doc ids are bit-identical to
+    the dense-only search; ``weight=0.0`` is symmetric for sparse.
+    """
+    d = fusion_mod.rrf_contributions(dense_scores, fusion.weight,
+                                     fusion.rrf_k)
+    sp = fusion_mod.rrf_contributions(sparse_scores, 1.0 - fusion.weight,
+                                      fusion.rrf_k)
+    ids = jnp.concatenate(
+        [jnp.where(jnp.isfinite(dense_scores), dense_ids, PAD_DOC),
+         jnp.where(jnp.isfinite(sparse_scores), sparse_ids, PAD_DOC)], -1)
+    vals = jnp.concatenate([d, sp], -1)
+    sid, totals, first = fusion_mod.sum_by_doc(ids, vals)
+    live = first & (sid != PAD_DOC) & (totals > 0.0)
+    return topk_by_score(jnp.where(live, totals, -jnp.inf), sid, top_r)
+
+
 # --------------------------------------------------------------------------
 # refine plumbing: route frontier ids back to the owning source
 # --------------------------------------------------------------------------
@@ -343,7 +434,8 @@ def execute(codec_impl: codecs_base.Codec, codec_params: Any,
             query_embeddings: Array, query_tokens: Array, *,
             kc: int, k2: int, top_r: int, use_kernel: bool = False,
             ns_filter: Optional[Array] = None,
-            shard: Optional[ShardEnv] = None) -> SearchResult:
+            shard: Optional[ShardEnv] = None,
+            fusion: Optional[FusionSpec] = None) -> SearchResult:
     """Run the full stage chain over ``sources`` (Eq. 5 + DESIGN.md §9).
 
     One body for all four variants: the single-device immutable path is
@@ -351,6 +443,16 @@ def execute(codec_impl: codecs_base.Codec, codec_params: Any,
     paths run this same function inside shard_map with per-shard sources
     and ``shard`` set.  ``ns_filter`` is the per-query namespace bitmap
     of :func:`repro.core.exec.filters.make_filter` (None ⇒ unfiltered).
+
+    ``fusion`` (a :class:`~repro.core.exec.fusion.FusionSpec`, static)
+    adds the sparse BM25 path + RRF fusion of DESIGN.md §13 after the
+    dense refine; it is honored only when every source carries a
+    ``sparse_weights`` impact plane — otherwise the search falls back
+    to the dense-only result, unchanged to the bit (the documented
+    contract for indexes built without ``sparse=True``).  Under fusion,
+    ``scores`` are RRF mass (not codec scores) and ``n_candidates``
+    additionally counts the unique sparse-matched docs (a doc seen by
+    both paths is counted in each).
     """
     global _TRACES
     _TRACES += 1
@@ -367,9 +469,18 @@ def execute(codec_impl: codecs_base.Codec, codec_params: Any,
         codec_params, refine_planes(sources), query_embeddings,
         top_s, top_ids, top_r, make_refine_ctx(sources, shard))
 
+    fused = (fusion is not None
+             and all(s.sparse_weights is not None for s in sources))
+    if fused:
+        sp_s, sp_ids, n_sparse = sparse_topk(sources, term_ids, top_r,
+                                             ns_filter, shard)
+        top_s, top_ids = fuse(top_s, top_ids, sp_s, sp_ids, fusion, top_r)
+
     n_cand = frontier.live.sum(axis=-1).astype(jnp.int32)
     if shard is not None:
         n_cand = jax.lax.psum(n_cand, shard.axis_name)
+    if fused:
+        n_cand = n_cand + n_sparse
     valid = jnp.isfinite(top_s)
     return SearchResult(
         doc_ids=jnp.where(valid, top_ids, PAD_DOC).astype(jnp.int32),

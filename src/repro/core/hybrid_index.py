@@ -62,7 +62,8 @@ topk_by_score = qexec.topk_by_score
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_lists", "term_lists",
-                 "codec_params", "doc_planes", "doc_assign", "doc_ns"],
+                 "codec_params", "doc_planes", "doc_assign", "doc_ns",
+                 "sparse_weights"],
     meta_fields=["codec"])
 @dataclasses.dataclass(frozen=True)
 class HybridIndex:
@@ -75,6 +76,9 @@ class HybridIndex:
     doc_assign: Array               # φ(D), (n_docs,) i32
     doc_ns: Optional[Array] = None  # (n_docs,) i32 namespace ids (filtered
     #                                 search; None ⇒ index is unfiltered)
+    sparse_weights: Optional[Array] = None  # (V, Ct) f32 BM25 impact plane
+    #                                 aligned with term_lists.entries
+    #                                 (build(sparse=True), DESIGN.md §13)
     codec: str = codecs.DEFAULT     # registry spec (static)
 
     @property
@@ -115,6 +119,7 @@ def build(key: Array,
           use_clusters: bool = True,
           use_terms: bool = True,
           doc_namespaces: Optional[Array] = None,
+          sparse: bool = False,
           ) -> HybridIndex:
     """Build HI² over a corpus.
 
@@ -126,9 +131,17 @@ def build(key: Array,
     (w.o. Clus / w.o. Term, §5.3).  ``codec`` is any
     :func:`repro.core.codecs.get` spec (unknown names raise with the
     registered list).  ``doc_namespaces`` ((n_docs,) int ids) enables
-    per-query filtered search (DESIGN.md §9).
+    per-query filtered search (DESIGN.md §9).  ``sparse=True``
+    additionally materializes the BM25 impact plane next to the term
+    lists, enabling hybrid search via ``search(fusion=...)``
+    (DESIGN.md §13); without it, fusion requests fall back to the
+    dense-only result.
     """
     codec_impl = codecs.get(codec)    # fail fast on unknown specs
+    if sparse and not use_terms:
+        raise ValueError("sparse=True needs the term lists "
+                         "(use_terms=True): the sparse path scores over "
+                         "the term postings")
     n_docs, _ = doc_embeddings.shape
     if doc_namespaces is not None:    # fail fast BEFORE kmeans/codec train
         doc_namespaces = jnp.asarray(doc_namespaces, jnp.int32)
@@ -163,13 +176,20 @@ def build(key: Array,
     if term_sel is None or term_pos_scores is None:
         term_sel, term_pos_scores, _ = ts_mod.fit_unsup(doc_tokens, vocab_size)
 
+    sparse_weights = None
     if use_terms:
         term_ids, term_scores = ts_mod.doc_terms(doc_tokens, term_pos_scores,
                                                  k1_terms)
         doc_rep = np.repeat(np.arange(n_docs), k1_terms)
-        term_lists = il.build(doc_rep, np.asarray(term_ids).reshape(-1),
-                              np.asarray(term_scores).reshape(-1),
-                              n_lists=vocab_size, capacity=term_capacity)
+        if sparse:
+            term_lists, sparse_weights = il.build_scored(
+                doc_rep, np.asarray(term_ids).reshape(-1),
+                np.asarray(term_scores).reshape(-1),
+                n_lists=vocab_size, capacity=term_capacity)
+        else:
+            term_lists = il.build(doc_rep, np.asarray(term_ids).reshape(-1),
+                                  np.asarray(term_scores).reshape(-1),
+                                  n_lists=vocab_size, capacity=term_capacity)
     else:
         term_lists = il.PaddedLists(
             entries=jnp.full((vocab_size, 1), PAD_DOC, jnp.int32),
@@ -185,6 +205,7 @@ def build(key: Array,
                        codec_params=codec_params, doc_planes=doc_planes,
                        doc_assign=jnp.asarray(doc_assign, jnp.int32),
                        doc_ns=doc_namespaces,
+                       sparse_weights=sparse_weights,
                        codec=codec)
 
 
@@ -198,27 +219,34 @@ def base_source(index: HybridIndex) -> qexec.Source:
                         term_lists=index.term_lists,
                         doc_planes=index.doc_planes,
                         size=index.n_docs,
-                        doc_ns=index.doc_ns)
+                        doc_ns=index.doc_ns,
+                        sparse_weights=index.sparse_weights)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("kc", "k2", "top_r", "use_kernel"))
+                   static_argnames=("kc", "k2", "top_r", "use_kernel",
+                                    "fusion"))
 def search(index: HybridIndex, query_embeddings: Array, query_tokens: Array,
            *, kc: int, k2: int, top_r: int, use_kernel: bool = False,
-           filter: Optional[Array] = None) -> SearchResult:
+           filter: Optional[Array] = None,
+           fusion: Optional[qexec.FusionSpec] = None) -> SearchResult:
     """Eq. 5: A(Q) = A^C(Q) ∪ A^T(Q), then codec scoring + top-R —
     executed as the §9 stage chain over one Source.
 
     ``filter`` is an optional (B, W) uint32 per-query namespace bitmap
     (:func:`repro.core.exec.filters.make_filter`); it needs an index
-    built with ``doc_namespaces=``.
+    built with ``doc_namespaces=``.  ``fusion`` (a static
+    :class:`~repro.core.exec.FusionSpec`) enables hybrid dense∥sparse
+    search over an index built with ``sparse=True`` (DESIGN.md §13);
+    on an index without the impact plane it falls back to the dense
+    result, bit-identically.
     """
     return qexec.execute(
         codecs.get(index.codec), index.codec_params,
         index.cluster_sel, index.term_sel, [base_source(index)],
         query_embeddings, query_tokens,
         kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
-        ns_filter=filter)
+        ns_filter=filter, fusion=fusion)
 
 
 def candidate_budget(index: HybridIndex, kc: int, k2: int) -> int:

@@ -13,6 +13,16 @@ per-document score, which is the same operation as the paper's static
 index pruning (Appendix B) applied at build time; :mod:`repro.core.pruning`
 implements the percentile-threshold variant on an already-built index.
 
+Postings are **impact-ordered**: :func:`build` sorts each list by
+descending per-document score before the capacity cut, so ``entries``
+row v holds term v's highest-impact documents first.  The sparse query
+path (DESIGN.md §13) rides on that layout: :func:`build_scored`
+additionally materializes the scores as an aligned ``(n_lists,
+capacity)`` f32 *impact plane* (0 at pads), which makes BM25 search a
+fixed-shape gather + per-document sum over the ≤K₂ᵀ probed term lists
+— never an exhaustive (B, V) matmul — using the same list planes the
+dense path dispatches over.
+
 At scale the ``entries`` plane is sharded over the mesh ``model`` axis
 (row-sharding over lists); see ``repro/distributed/sharding.py``.
 """
@@ -42,15 +52,13 @@ class PaddedLists(NamedTuple):
         return self.entries.shape[1]
 
 
-def build(doc_ids: np.ndarray, list_ids: np.ndarray, scores: Optional[np.ndarray],
-          n_lists: int, capacity: Optional[int] = None) -> PaddedLists:
-    """Bucket (doc, list[, score]) assignment triples into padded lists.
-
-    ``doc_ids``/``list_ids``: (n_assignments,). Assignments with negative
-    list id (PAD terms) are dropped. If a list overflows ``capacity`` the
-    lowest-scoring documents are dropped (score defaults to insertion
-    order → FIFO truncation).
-    """
+def _bucket(doc_ids: np.ndarray, list_ids: np.ndarray,
+            scores: Optional[np.ndarray], n_lists: int,
+            capacity: Optional[int]
+            ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared bucketing body of :func:`build` / :func:`build_scored`:
+    returns (entries, lengths, weights) numpy planes, weights holding
+    each surviving posting's score (0 at pads), aligned with entries."""
     doc_ids = np.asarray(doc_ids).reshape(-1)
     list_ids = np.asarray(list_ids).reshape(-1)
     keep = list_ids >= 0
@@ -74,8 +82,49 @@ def build(doc_ids: np.ndarray, list_ids: np.ndarray, scores: Optional[np.ndarray
 
     entries = np.full((n_lists, capacity), PAD_DOC, np.int32)
     entries[list_ids[keep2], rank_in_list[keep2]] = doc_ids[keep2]
+    weights = np.zeros((n_lists, capacity), np.float32)
+    weights[list_ids[keep2], rank_in_list[keep2]] = scores[keep2]
     lengths = np.minimum(counts, capacity).astype(np.int32)
+    return entries, lengths, weights
+
+
+def build(doc_ids: np.ndarray, list_ids: np.ndarray, scores: Optional[np.ndarray],
+          n_lists: int, capacity: Optional[int] = None) -> PaddedLists:
+    """Bucket (doc, list[, score]) assignment triples into padded lists.
+
+    ``doc_ids``/``list_ids``: (n_assignments,). Assignments with negative
+    list id (PAD terms) are dropped. If a list overflows ``capacity`` the
+    lowest-scoring documents are dropped (score defaults to insertion
+    order → FIFO truncation).
+    """
+    entries, lengths, _ = _bucket(doc_ids, list_ids, scores, n_lists,
+                                  capacity)
     return PaddedLists(entries=jnp.asarray(entries), lengths=jnp.asarray(lengths))
+
+
+def build_scored(doc_ids: np.ndarray, list_ids: np.ndarray,
+                 scores: np.ndarray, n_lists: int,
+                 capacity: Optional[int] = None
+                 ) -> tuple[PaddedLists, Array]:
+    """:func:`build` plus the aligned impact plane for sparse search
+    (DESIGN.md §13): ``weights[v, j]`` is the per-document score of
+    posting ``entries[v, j]`` (0.0 at pads), so a sparse query scores
+    candidates by gathering the same rows the dense path gathers and
+    summing impacts per document — no second postings structure.
+
+    ``scores`` is required: an impact plane built from the FIFO
+    fallback's synthetic insertion-order scores would rank documents by
+    arrival, not relevance, silently.
+    """
+    if scores is None:
+        raise ValueError(
+            "build_scored needs real per-posting scores; the FIFO "
+            "fallback of build() has no meaningful impacts")
+    entries, lengths, weights = _bucket(doc_ids, list_ids, scores, n_lists,
+                                        capacity)
+    return (PaddedLists(entries=jnp.asarray(entries),
+                        lengths=jnp.asarray(lengths)),
+            jnp.asarray(weights))
 
 
 @jax.jit

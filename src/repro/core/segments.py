@@ -74,7 +74,7 @@ class DeltaFull(RuntimeError):
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["cluster_lists", "term_lists", "doc_planes", "doc_assign",
-                 "doc_ns"],
+                 "doc_ns", "sparse_weights"],
     meta_fields=[])
 @dataclasses.dataclass(frozen=True)
 class DeltaSegment:
@@ -86,6 +86,9 @@ class DeltaSegment:
     doc_planes: dict                  # codec planes, leaves (capacity, ...)
     doc_assign: Array                 # (capacity,) i32
     doc_ns: Optional[Array] = None    # (capacity,) i32 namespace ids
+    sparse_weights: Optional[Array] = None  # (V, Ct') f32 BM25 impacts,
+    #                                   derived from the delta's eviction
+    #                                   score plane (DESIGN.md §13)
 
     @property
     def capacity(self) -> int:
@@ -105,7 +108,8 @@ def _pair_sources(base: hi.HybridIndex, delta: DeltaSegment,
                      doc_planes=base.doc_planes,
                      size=n_base,
                      tombstones=tombstones[:n_base],
-                     doc_ns=base.doc_ns),
+                     doc_ns=base.doc_ns,
+                     sparse_weights=base.sparse_weights),
         qexec.Source(cluster_lists=delta.cluster_lists,
                      term_lists=delta.term_lists,
                      doc_planes=delta.doc_planes,
@@ -114,16 +118,19 @@ def _pair_sources(base: hi.HybridIndex, delta: DeltaSegment,
                      family_lo=n_base,
                      family_hi=n_base + cap,
                      tombstones=tombstones[n_base:],
-                     doc_ns=delta.doc_ns),
+                     doc_ns=delta.doc_ns,
+                     sparse_weights=delta.sparse_weights),
     ]
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("kc", "k2", "top_r", "use_kernel"))
+                   static_argnames=("kc", "k2", "top_r", "use_kernel",
+                                    "fusion"))
 def search(base: hi.HybridIndex, delta: DeltaSegment, tombstones: Array,
            query_embeddings: Array, query_tokens: Array, *, kc: int,
            k2: int, top_r: int, use_kernel: bool = False,
-           filter: Optional[Array] = None) -> hi.SearchResult:
+           filter: Optional[Array] = None,
+           fusion: Optional[qexec.FusionSpec] = None) -> hi.SearchResult:
     """Eq. 5 over base ∪ delta minus tombstones — one fixed-shape jitted
     program (DESIGN.md §8): the §9 stage chain over the (base, delta)
     source pair.
@@ -143,7 +150,7 @@ def search(base: hi.HybridIndex, delta: DeltaSegment, tombstones: Array,
         _pair_sources(base, delta, tombstones),
         query_embeddings, query_tokens,
         kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
-        ns_filter=filter)
+        ns_filter=filter, fusion=fusion)
 
 
 # --------------------------------------------------------------------------
@@ -474,19 +481,28 @@ class MutableHybridIndex:
                             for k, v in self._delta_planes.items()},
                 doc_assign=jnp.asarray(self._delta_assign),
                 doc_ns=(None if self._delta_ns is None
-                        else jnp.asarray(self._delta_ns)))
+                        else jnp.asarray(self._delta_ns)),
+                # the eviction score plane IS the impact plane: -inf at
+                # empty slots → 0.0, matching build_scored's pad fill
+                sparse_weights=(
+                    None if self.base.sparse_weights is None
+                    else jnp.where(
+                        jnp.asarray(self._dt_entries) == PAD_DOC, 0.0,
+                        jnp.asarray(self._dt_scores))))
             self._cache = (delta, jnp.asarray(self._tomb))
 
     def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
                top_r: int, use_kernel: bool = False,
-               filter=None) -> hi.SearchResult:
+               filter=None,
+               fusion: Optional[qexec.FusionSpec] = None
+               ) -> hi.SearchResult:
         self._materialize()
         delta, tomb = self._cache
         return search(self.base, delta, tomb,
                       jnp.asarray(query_embeddings),
                       jnp.asarray(query_tokens),
                       kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
-                      filter=filter)
+                      filter=filter, fusion=fusion)
 
     # --- compaction ------------------------------------------------------
     def survivors(self) -> np.ndarray:
@@ -645,7 +661,8 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
                              per: int, dper: int, kc: int, k2: int,
                              top_r: int, use_kernel: bool = False,
                              batch_axis: Optional[str] = None,
-                             filtered: bool = False):
+                             filtered: bool = False,
+                             fusion: Optional[qexec.FusionSpec] = None):
     """shard_map'd base∪delta search + merge for one static config.
 
     Shard ``s`` owns base docs [s·per, (s+1)·per) *and* delta slots
@@ -680,7 +697,8 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
                 offset=b_lo,
                 family_hi=n_base,
                 tombstones=shard["tomb_base"],
-                doc_ns=shard.get("base_ns")),
+                doc_ns=shard.get("base_ns"),
+                sparse_weights=shard.get("base_sparse_weights")),
             qexec.Source(
                 cluster_lists=PaddedLists(shard["delta_cluster_entries"],
                                           shard["delta_cluster_lengths"]),
@@ -692,7 +710,8 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
                 family_lo=n_base,
                 family_hi=n_base + n_shards * dper,
                 tombstones=shard["tomb_delta"],
-                doc_ns=shard.get("delta_ns")),
+                doc_ns=shard.get("delta_ns"),
+                sparse_weights=shard.get("delta_sparse_weights")),
         ]
         res = qexec.execute(
             codec_impl, rep["codec"],
@@ -700,7 +719,8 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
             ts_mod.TermSelector(avg_scores=rep["term_avg"]),
             sources, qe, qt,
             kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
-            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name))
+            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name),
+            fusion=fusion)
         return res.doc_ids, res.scores, res.n_candidates
 
     def specs_like(tree, leading):
@@ -730,10 +750,11 @@ def make_mutable_search_step(mesh, axis_name: str, codec: str, n_base: int,
 @functools.lru_cache(maxsize=32)
 def _compiled_mutable_search(mesh, axis_name, codec, n_base, per, dper,
                              kc, k2, top_r, use_kernel, filtered,
-                             batch_axis=None):
+                             batch_axis=None, fusion=None):
     return jax.jit(make_mutable_search_step(
         mesh, axis_name, codec, n_base, per, dper, kc, k2, top_r,
-        use_kernel, batch_axis=batch_axis, filtered=filtered))
+        use_kernel, batch_axis=batch_axis, filtered=filtered,
+        fusion=fusion))
 
 
 class ShardedMutableIndex:
@@ -800,7 +821,15 @@ class ShardedMutableIndex:
         mut, n_base = self.mut, self.mut.n_base
         s, dper = self.n_shards, self.dper
         dc_e, dc_l = shi._split_lists(mut._dc_entries, s, dper, base=n_base)
-        dt_e, dt_l = shi._split_lists(mut._dt_entries, s, dper, base=n_base)
+        dt_w = None
+        if mut.base.sparse_weights is None:
+            dt_e, dt_l = shi._split_lists(mut._dt_entries, s, dper,
+                                          base=n_base)
+        else:
+            dw = np.where(mut._dt_entries == PAD_DOC, 0.0,
+                          mut._dt_scores).astype(np.float32)
+            dt_e, dt_l, dt_w = shi._split_lists(mut._dt_entries, s, dper,
+                                                base=n_base, weights=dw)
         tomb = mut._tomb
         state = {
             "delta_cluster_entries": jnp.asarray(dc_e),
@@ -815,6 +844,8 @@ class ShardedMutableIndex:
             "tomb_delta": jnp.asarray(
                 shi._split_docs(tomb[n_base:], s, dper)),
         }
+        if dt_w is not None:
+            state["delta_sparse_weights"] = jnp.asarray(dt_w)
         if mut.filtered:
             state["delta_ns"] = jnp.asarray(
                 shi._split_docs(mut._delta_ns, s, dper))
@@ -841,11 +872,15 @@ class ShardedMutableIndex:
         }
         if sb.doc_ns is not None:
             planes["base_ns"] = sb.doc_ns
+        if sb.sparse_weights is not None:
+            planes["base_sparse_weights"] = sb.sparse_weights
         return planes
 
     def search(self, query_embeddings, query_tokens, *, kc: int, k2: int,
                top_r: int, use_kernel: bool = False,
-               filter=None) -> hi.SearchResult:
+               filter=None,
+               fusion: Optional[qexec.FusionSpec] = None
+               ) -> hi.SearchResult:
         if filter is not None and not self.mut.filtered:
             raise ValueError(
                 "search(filter=...) needs an index built with "
@@ -862,7 +897,7 @@ class ShardedMutableIndex:
         fn = _compiled_mutable_search(
             self.mesh, self.axis_name, self.mut.base.codec, self.mut.n_base,
             self.per, self.dper, kc, k2, top_r, use_kernel,
-            filter is not None, self.data_axis)
+            filter is not None, self.data_axis, fusion)
         args = [self._planes(), rep, jnp.asarray(query_embeddings),
                 jnp.asarray(query_tokens)]
         if filter is not None:

@@ -10,8 +10,11 @@ query-execution engine as every other variant
     shard s owns the contiguous doc range [s·P, (s+1)·P)
 
     replicated per device : cluster/term selectors, codec params, queries
-    sharded (leading axis) : every codec doc plane, ``doc_ns``, and the
-                             list entry planes filtered to the shard's docs
+    sharded (leading axis) : every codec doc plane, ``doc_ns``, the
+                             list entry planes filtered to the shard's
+                             docs, and (for sparse-built indexes) the
+                             BM25 impact plane split by the same
+                             permutation
 
     per shard : dispatch → gather → dedup → filter → score → local top-R′
     merge     : all-gather of the (B, R′) planes along the shard axis +
@@ -70,7 +73,8 @@ SHARD_AXIS = "shards"
     jax.tree_util.register_dataclass,
     data_fields=["cluster_sel", "term_sel", "cluster_entries",
                  "cluster_lengths", "term_entries", "term_lengths",
-                 "codec_params", "doc_planes", "doc_assign", "doc_ns"],
+                 "codec_params", "doc_planes", "doc_assign", "doc_ns",
+                 "sparse_weights"],
     meta_fields=["codec", "n_docs"])
 @dataclasses.dataclass(frozen=True)
 class ShardedHybridIndex:
@@ -86,6 +90,8 @@ class ShardedHybridIndex:
     doc_planes: dict                        # codec planes, leaves (S, P, ...)
     doc_assign: Array                       # (S, P) i32, φ(D) per shard
     doc_ns: Optional[Array] = None          # (S, P) i32 namespace ids
+    sparse_weights: Optional[Array] = None  # (S, V, Ct) f32 BM25 impacts
+    #                                         aligned with term_entries
     codec: str = codecs.DEFAULT
     n_docs: int = 0                         # true corpus size (pre-padding)
 
@@ -111,21 +117,31 @@ class ShardedHybridIndex:
 # partition (host-side, build-time)
 # --------------------------------------------------------------------------
 
-def _split_lists(entries: Array, n_shards: int, per: int, base: int = 0
-                 ) -> tuple[np.ndarray, np.ndarray]:
+def _split_lists(entries: Array, n_shards: int, per: int, base: int = 0,
+                 weights: Optional[Array] = None):
     """Filter a global (L, C) entries plane into per-shard planes.
 
     Keeps the global capacity C per shard and left-packs each row, so
     the union over shards is exactly the global plane (order within a
-    list is preserved; it is irrelevant to scoring anyway).  Shard ``s``
-    owns ids in [base + s·per, base + (s+1)·per) — ``base`` is 0 for
-    the doc planes and ``n_base`` when splitting a delta segment's
-    global ids over its slot ranges (repro.core.segments).
+    list is preserved — which the sparse path relies on: impact order
+    survives the split, so per-shard BM25 sums are the same in-order
+    float additions as single-device).  Shard ``s`` owns ids in
+    [base + s·per, base + (s+1)·per) — ``base`` is 0 for the doc planes
+    and ``n_base`` when splitting a delta segment's global ids over its
+    slot ranges (repro.core.segments).
+
+    With ``weights`` (an aligned (L, C) impact plane,
+    :func:`repro.core.inverted_lists.build_scored`) the same
+    permutation splits it too (0.0 beyond each shard's count) and a
+    third plane is returned.
     """
     e = np.asarray(entries)
     n_lists, cap = e.shape
     out = np.full((n_shards, n_lists, cap), PAD_DOC, np.int32)
     lengths = np.zeros((n_shards, n_lists), np.int32)
+    w = None if weights is None else np.asarray(weights)
+    w_out = (None if w is None else
+             np.zeros((n_shards, n_lists, cap), np.float32))
     cols = np.arange(cap)[None, :]
     for s in range(n_shards):
         mine = (e >= base + s * per) & (e < base + (s + 1) * per)
@@ -134,7 +150,12 @@ def _split_lists(entries: Array, n_shards: int, per: int, base: int = 0
         count = mine.sum(axis=1)
         out[s] = np.where(cols < count[:, None], packed, PAD_DOC)
         lengths[s] = count
-    return out, lengths
+        if w is not None:
+            packed_w = np.take_along_axis(w, order, axis=1)
+            w_out[s] = np.where(cols < count[:, None], packed_w, 0.0)
+    if w is None:
+        return out, lengths
+    return out, lengths, w_out
 
 
 def _split_docs(plane: Array, n_shards: int, per: int) -> np.ndarray:
@@ -155,8 +176,14 @@ def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
     per = -(-n_docs // n_shards)    # ceil
     c_entries, c_lengths = _split_lists(index.cluster_lists.entries,
                                         n_shards, per)
-    t_entries, t_lengths = _split_lists(index.term_lists.entries,
-                                        n_shards, per)
+    s_weights = None
+    if index.sparse_weights is None:
+        t_entries, t_lengths = _split_lists(index.term_lists.entries,
+                                            n_shards, per)
+    else:
+        t_entries, t_lengths, s_weights = _split_lists(
+            index.term_lists.entries, n_shards, per,
+            weights=index.sparse_weights)
     return ShardedHybridIndex(
         cluster_sel=index.cluster_sel,
         term_sel=index.term_sel,
@@ -171,6 +198,8 @@ def partition(index: hi.HybridIndex, n_shards: int) -> ShardedHybridIndex:
         doc_assign=jnp.asarray(_split_docs(index.doc_assign, n_shards, per)),
         doc_ns=(None if index.doc_ns is None else
                 jnp.asarray(_split_docs(index.doc_ns, n_shards, per))),
+        sparse_weights=(None if s_weights is None else
+                        jnp.asarray(s_weights)),
         codec=index.codec,
         n_docs=n_docs)
 
@@ -218,7 +247,8 @@ def device_put(sindex: ShardedHybridIndex, mesh: Mesh,
         term_lengths=put_sharded(sindex.term_lengths),
         doc_planes=jax.tree.map(put_sharded, sindex.doc_planes),
         doc_assign=put_sharded(sindex.doc_assign),
-        doc_ns=put_sharded(sindex.doc_ns))
+        doc_ns=put_sharded(sindex.doc_ns),
+        sparse_weights=put_sharded(sindex.sparse_weights))
 
 
 # --------------------------------------------------------------------------
@@ -233,6 +263,8 @@ def _shard_planes(sindex: ShardedHybridIndex) -> dict:
               "codec": sindex.doc_planes}
     if sindex.doc_ns is not None:
         planes["doc_ns"] = sindex.doc_ns
+    if sindex.sparse_weights is not None:
+        planes["sparse_weights"] = sindex.sparse_weights
     return planes
 
 
@@ -240,7 +272,8 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
                      kc: int, k2: int, top_r: int,
                      use_kernel: bool = False,
                      batch_axis: Optional[str] = None,
-                     filtered: bool = False):
+                     filtered: bool = False,
+                     fusion: Optional[qexec.FusionSpec] = None):
     """shard_map'd per-shard search + merge for one static config.
 
     Returns ``step(planes, rep, qe, qt) -> (doc_ids, scores, n_cands)``
@@ -282,14 +315,16 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
             doc_planes=shard["codec"],
             size=per,
             offset=offset,
-            doc_ns=shard.get("doc_ns"))
+            doc_ns=shard.get("doc_ns"),
+            sparse_weights=shard.get("sparse_weights"))
         res = qexec.execute(
             codec_impl, rep["codec"],
             cs_mod.ClusterSelector(embeddings=rep["cluster_emb"]),
             ts_mod.TermSelector(avg_scores=rep["term_avg"]),
             [source], qe, qt,
             kc=kc, k2=k2, top_r=top_r, use_kernel=use_kernel,
-            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name))
+            ns_filter=ns_filter, shard=qexec.ShardEnv(axis_name),
+            fusion=fusion)
         return res.doc_ids, res.scores, res.n_candidates
 
     def specs_like(tree, leading):
@@ -321,11 +356,12 @@ def make_search_step(mesh: Mesh, axis_name: str, codec: str, per: int,
 @functools.lru_cache(maxsize=32)
 def _compiled_search(mesh: Mesh, axis_name: str, codec: str, per: int,
                      kc: int, k2: int, top_r: int, use_kernel: bool,
-                     filtered: bool, batch_axis: Optional[str] = None):
+                     filtered: bool, batch_axis: Optional[str] = None,
+                     fusion: Optional[qexec.FusionSpec] = None):
     return jax.jit(make_search_step(mesh, axis_name, codec, per,
                                     kc, k2, top_r, use_kernel,
                                     batch_axis=batch_axis,
-                                    filtered=filtered))
+                                    filtered=filtered, fusion=fusion))
 
 
 def take_shards(sindex: ShardedHybridIndex,
@@ -355,7 +391,8 @@ def take_shards(sindex: ShardedHybridIndex,
         term_lengths=take(sindex.term_lengths),
         doc_planes=jax.tree.map(take, sindex.doc_planes),
         doc_assign=take(sindex.doc_assign),
-        doc_ns=take(sindex.doc_ns))
+        doc_ns=take(sindex.doc_ns),
+        sparse_weights=take(sindex.sparse_weights))
 
 
 def shard_offsets_for(shard_ids, per: int) -> np.ndarray:
@@ -370,10 +407,14 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
            use_kernel: bool = False,
            filter: Optional[Array] = None,
            data_axis: Optional[str] = None,
-           shard_offsets: Optional[Array] = None) -> hi.SearchResult:
+           shard_offsets: Optional[Array] = None,
+           fusion: Optional[qexec.FusionSpec] = None) -> hi.SearchResult:
     """Sharded Eq. 5 — same contract and bit-identical results as
     :func:`repro.core.hybrid_index.search` (DESIGN.md §6), including
-    under a per-query namespace ``filter`` (DESIGN.md §9).
+    under a per-query namespace ``filter`` (DESIGN.md §9) and under
+    hybrid ``fusion`` (DESIGN.md §13; needs an index partitioned from
+    one built with ``sparse=True`` — otherwise the dense-only fallback
+    applies, exactly as single-device).
 
     ``mesh`` defaults to a fresh 1-D mesh over the first ``n_shards``
     devices; pass the mesh from :func:`make_shard_mesh` (after
@@ -412,7 +453,7 @@ def search(sindex: ShardedHybridIndex, query_embeddings: Array,
            "codec": sindex.codec_params}
     fn = _compiled_search(mesh, axis_name, sindex.codec,
                           sindex.docs_per_shard, kc, k2, top_r, use_kernel,
-                          filter is not None, data_axis)
+                          filter is not None, data_axis, fusion)
     planes = _shard_planes(sindex)
     if shard_offsets is not None:
         off = jnp.asarray(shard_offsets, jnp.int32)

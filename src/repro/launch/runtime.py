@@ -17,11 +17,14 @@ programs:
     enforced through :func:`repro.core.exec.trace_count`), and a lone
     request is never held hostage: the oldest request waits at most
     ``linger_ms`` for co-riders before its bucket executes.
-  · An LRU cache keyed on (index epoch, namespace filter, query bytes)
-    returns bit-identical :class:`~repro.core.hybrid_index.SearchResult`
-    rows for repeated queries.  Mutations (``add``/``delete``/
-    ``compact``) bump the index epoch, so no post-mutation query can
-    see a pre-mutation result.
+  · An LRU cache keyed on (index epoch, namespace filter, fusion spec,
+    query bytes) returns bit-identical
+    :class:`~repro.core.hybrid_index.SearchResult` rows for repeated
+    queries.  Mutations (``add``/``delete``/``compact``) bump the index
+    epoch, and re-weighting hybrid fusion
+    (:meth:`ServingRuntime.set_fusion_weight`, DESIGN.md §13) changes
+    the key's fusion component, so no post-mutation or re-weighted
+    query can see a stale result.
   · Admission control bounds the queue: past ``queue_depth`` pending
     requests, :meth:`submit` fails fast with
     :class:`RuntimeOverloaded` (carrying a retry-after hint) instead of
@@ -449,6 +452,17 @@ class ServingRuntime:
             if self._hidden is not None:
                 self._warm_buckets()
 
+    def set_fusion_weight(self, weight: Optional[float]) -> None:
+        """Re-weight hybrid fusion live (DESIGN.md §13).  Runs under the
+        serve lock (a new FusionSpec is a new compiled program per
+        bucket, so the ladder is re-warmed off the request path), and
+        the spec's place in the cache key keeps previously fused
+        results from replaying at the new weight."""
+        with self._serve_lock:
+            self.server.set_fusion(weight)
+            if self._hidden is not None:
+                self._warm_buckets()
+
     # --- observability ---------------------------------------------------
     def stats(self) -> dict:
         cache = None
@@ -499,9 +513,13 @@ class ServingRuntime:
     def _key(self, qe: np.ndarray, qt: np.ndarray, ns,
              epoch: Optional[int] = None) -> tuple:
         """The one cache-key schema; the scheduler passes its
-        lock-pinned ``epoch``, the submit pre-check reads the live one."""
+        lock-pinned ``epoch``, the submit pre-check reads the live one.
+        The fusion spec joins the key so re-weighting hybrid fusion
+        (DESIGN.md §13) can never replay a result fused at another
+        weight."""
         e = self._epoch() if epoch is None else epoch
-        return (e, ns, _canon_qe(qe), qt.tobytes())
+        return (e, ns, getattr(self.server, "fusion", None),
+                _canon_qe(qe), qt.tobytes())
 
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:

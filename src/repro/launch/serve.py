@@ -37,6 +37,14 @@ build the index with ``--namespaces N`` and pass
 ids) per query — and no document outside those namespaces can appear
 in that query's results, on any layout, bit-identically.
 
+Every layout also serves hybrid dense∥sparse fusion (DESIGN.md §13):
+``--fusion-weight W`` builds the index with the BM25 impact plane
+(``sparse=True``) and fuses the dense ranking with a sparse BM25
+ranking by reciprocal-rank fusion; ``W=1.0`` is bit-identical to
+dense-only, ``W=0.0`` is pure lexical.  :meth:`Server.set_fusion`
+re-weights live (the serving runtime keys its cache on the fusion
+spec, so stale fused results can never be replayed).
+
 ``--runtime`` puts the asynchronous serving runtime of
 :mod:`repro.launch.runtime` (DESIGN.md §10) in front of the chosen
 layout: clients submit single queries, a scheduler thread coalesces
@@ -55,7 +63,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import sys
 import time
 from typing import Optional
@@ -66,6 +73,7 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import codecs
+from repro.core import exec as qexec
 from repro.core import hybrid_index as hi
 from repro.core.exec import filters as ns_filters
 from repro.core import segments as seg
@@ -86,6 +94,10 @@ class ServeConfig:
     delta_capacity: int = 1024   # delta slots between compactions
     n_namespaces: int = 0        # >0 → filtered search over N namespaces
     data_parallel: int = 1       # >1 → 2-D (data, model) serving mesh (§12)
+    # hybrid dense∥sparse fusion (§13): None = dense-only; else the RRF
+    # dense weight in [0, 1] (sparse gets 1-w).  Needs an index built
+    # with sparse=True, otherwise the dense-only fallback applies.
+    fusion_weight: Optional[float] = None
     # auto-compaction watermarks (§8): compact when delta fill or
     # tombstone ratio crosses the threshold; 0 disables (the default —
     # serving never compacts behind the operator's back unless asked)
@@ -100,13 +112,19 @@ class Server:
     def __init__(self, index: hi.HybridIndex, cfg: ServeConfig = ServeConfig()):
         self.index = index
         self.cfg = cfg
-        # hi.search is already jitted (static kc/k2/top_r/use_kernel) —
-        # bind the statics with partial instead of wrapping in a second
-        # jax.jit, which would pay nested-jit dispatch on every request
-        self._search = functools.partial(
-            hi.search, kc=cfg.kc, k2=cfg.k2, top_r=cfg.top_r,
-            use_kernel=cfg.use_kernel)
+        # hi.search is already jitted (static kc/k2/top_r/use_kernel/
+        # fusion) — dispatch through a bound method instead of wrapping
+        # in a second jax.jit, which would pay nested-jit dispatch on
+        # every request; reading cfg at call time lets set_fusion()
+        # re-weight live (one compile per distinct FusionSpec)
+        self._search = self._base_search
         self.n_served = 0
+
+    def _base_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
+        return hi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+                         top_r=self.cfg.top_r,
+                         use_kernel=self.cfg.use_kernel,
+                         filter=filter, fusion=self.fusion)
 
     @classmethod
     def from_checkpoint(cls, path: str, like: hi.HybridIndex,
@@ -126,6 +144,22 @@ class Server:
         batch quantum: every micro-batch bucket must divide into equal
         per-replica row blocks.  1 on every non-mesh layout."""
         return max(1, int(self.cfg.data_parallel))
+
+    @property
+    def fusion(self) -> Optional[qexec.FusionSpec]:
+        """The active hybrid-fusion spec (DESIGN.md §13), derived from
+        ``cfg.fusion_weight`` at call time so :meth:`set_fusion` takes
+        effect without rebuilding the server.  None = dense-only."""
+        w = self.cfg.fusion_weight
+        return None if w is None else qexec.FusionSpec(weight=float(w))
+
+    def set_fusion(self, weight: Optional[float]) -> None:
+        """Re-weight (or disable, with None) hybrid fusion live.  Takes
+        effect on the next query; each distinct weight compiles once
+        (the spec is a static argument of the search program)."""
+        if weight is not None:
+            qexec.FusionSpec(weight=float(weight))  # validate eagerly
+        self.cfg.fusion_weight = weight
 
     def warmup(self, hidden: int, query_len: int) -> None:
         qe = jnp.zeros((self.cfg.max_batch, hidden), jnp.float32)
@@ -201,7 +235,8 @@ class ShardedServer(Server):
     def _sharded_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
         return shi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
                           top_r=self.cfg.top_r, mesh=self.mesh,
-                          use_kernel=self.cfg.use_kernel, filter=filter)
+                          use_kernel=self.cfg.use_kernel, filter=filter,
+                          fusion=self.fusion)
 
 
 class MeshServer(Server):
@@ -264,12 +299,14 @@ class MeshServer(Server):
                               k2=self.cfg.k2, top_r=self.cfg.top_r,
                               mesh=self.mesh,
                               use_kernel=self.cfg.use_kernel,
-                              filter=filter, data_axis=da)
+                              filter=filter, data_axis=da,
+                              fusion=self.fusion)
         sub, sub_mesh, offsets = self._survivor
         res = shi.search(sub, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
                          top_r=self.cfg.top_r, mesh=sub_mesh,
                          use_kernel=self.cfg.use_kernel, filter=filter,
-                         data_axis=da, shard_offsets=offsets)
+                         data_axis=da, shard_offsets=offsets,
+                         fusion=self.fusion)
         return res._replace(partial=True)
 
     # --- shard-loss degradation + recovery -------------------------------
@@ -343,7 +380,7 @@ class MutableServer(Server):
         return self.mut.search(qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
                                top_r=self.cfg.top_r,
                                use_kernel=self.cfg.use_kernel,
-                               filter=filter)
+                               filter=filter, fusion=self.fusion)
 
     @property
     def epoch(self) -> int:
@@ -456,6 +493,12 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--use-kernel", action="store_true",
                     help="score candidates with the fused Pallas kernels "
                          "(DESIGN.md §11; interpret-mode on CPU)")
+    ap.add_argument("--fusion-weight", type=float, default=None,
+                    metavar="W",
+                    help="hybrid dense∥sparse serving (DESIGN.md §13): "
+                         "build the BM25 impact plane and fuse dense and "
+                         "sparse rankings by RRF with dense weight W in "
+                         "[0,1] (1.0 = dense-only, 0.0 = pure lexical)")
     ap.add_argument("--runtime", action="store_true",
                     help="serve through the micro-batching runtime "
                          "(DESIGN.md §10) instead of direct batched calls")
@@ -481,13 +524,15 @@ def main(argv: Optional[list] = None) -> None:
                                 hidden=64, vocab_size=4096)
     build_kwargs = dict(n_clusters=128, k1_terms=10, codec=args.codec,
                         pq_m=8, pq_k=256, cluster_capacity=192,
-                        term_capacity=96, kmeans_iters=8)
+                        term_capacity=96, kmeans_iters=8,
+                        sparse=args.fusion_weight is not None)
     cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards,
                       use_kernel=args.use_kernel,
                       mutable=args.mutable,
                       delta_capacity=args.delta_capacity,
                       n_namespaces=args.namespaces,
-                      data_parallel=args.data_parallel)
+                      data_parallel=args.data_parallel,
+                      fusion_weight=args.fusion_weight)
     # round-robin tenant assignment for the demo corpus
     doc_ns = (np.arange(args.docs) % args.namespaces
               if args.namespaces else None)

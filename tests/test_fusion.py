@@ -1,0 +1,391 @@
+"""Hybrid dense∥sparse fusion (DESIGN.md §13): degenerate-weight
+bit-identity, the pure-BM25 oracle, cross-variant equivalence,
+namespace isolation of sparse candidates, cache keying, and the
+checkpoint round-trip of the impact plane.
+
+Multi-device cases spawn a fresh interpreter with
+xla_force_host_platform_device_count (the tests/test_exec.py pattern);
+everything else runs in-process.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import exec as qexec, hybrid_index as hi
+from repro.core import segments as seg
+from repro.core import term_selector as ts_mod
+from repro.core.exec import filters as ns_filters
+from repro.core.inverted_lists import PAD_DOC
+from repro.data import synthetic
+from repro.launch import runtime as rt_mod
+from repro.launch import serve
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=4",
+            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+
+
+def _run(script: str) -> None:
+    r = subprocess.run([sys.executable, "-c", script], env=_ENV,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+def _corpus():
+    return synthetic.generate(seed=0, n_docs=1400, n_queries=24, hidden=32,
+                              vocab_size=512, n_topics=8)
+
+
+_KW = dict(n_clusters=16, k1_terms=4, codec="pq", pq_m=4, pq_k=64,
+           cluster_capacity=64, term_capacity=32, kmeans_iters=3)
+
+
+def _index(c, sparse=True, **over):
+    kw = dict(_KW, **over)
+    return hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                    jnp.asarray(c.doc_tokens), c.vocab_size,
+                    sparse=sparse, **kw)
+
+
+# --------------------------------------------------------------------------
+# the spec
+# --------------------------------------------------------------------------
+
+def test_fusion_spec_validates():
+    qexec.FusionSpec(weight=0.0)
+    qexec.FusionSpec(weight=1.0)
+    with pytest.raises(ValueError):
+        qexec.FusionSpec(weight=1.5)
+    with pytest.raises(ValueError):
+        qexec.FusionSpec(weight=-0.1)
+    with pytest.raises(ValueError):
+        qexec.FusionSpec(rrf_k=-1)
+    # hashable + equality — the spec is a jit static arg and a cache key
+    assert qexec.FusionSpec(weight=0.5) == qexec.FusionSpec(weight=0.5)
+    assert hash(qexec.FusionSpec()) == hash(qexec.FusionSpec())
+
+
+def test_build_sparse_requires_term_lists():
+    c = _corpus()
+    with pytest.raises(ValueError, match="use_terms"):
+        hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                 jnp.asarray(c.doc_tokens), c.vocab_size,
+                 sparse=True, use_terms=False, **_KW)
+
+
+# --------------------------------------------------------------------------
+# degenerate weights and the fallback contract
+# --------------------------------------------------------------------------
+
+def test_weight_one_bit_identical_to_dense_only():
+    """fusion_weight=1.0 zeroes every sparse contribution, so the fused
+    ids must be bit-identical to dense-only search (§13 contract)."""
+    c = _corpus()
+    idx = _index(c)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    dense = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16)
+    w1 = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16,
+                   fusion=qexec.FusionSpec(weight=1.0))
+    np.testing.assert_array_equal(np.asarray(dense.doc_ids),
+                                  np.asarray(w1.doc_ids))
+
+
+def test_dense_fallback_without_impact_plane_is_exact():
+    """A FusionSpec against an index with no sparse_weights plane must
+    return the UNCHANGED dense result — ids and codec scores, not RRF
+    scores (the fallback is the dense path, not a degenerate fusion)."""
+    c = _corpus()
+    idx = _index(c, sparse=False)
+    assert idx.sparse_weights is None
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    dense = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16)
+    fb = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16,
+                   fusion=qexec.FusionSpec(weight=0.5))
+    np.testing.assert_array_equal(np.asarray(dense.doc_ids),
+                                  np.asarray(fb.doc_ids))
+    np.testing.assert_array_equal(np.asarray(dense.scores),
+                                  np.asarray(fb.scores))
+    np.testing.assert_array_equal(np.asarray(dense.n_candidates),
+                                  np.asarray(fb.n_candidates))
+
+
+def test_mixed_weight_changes_ranking_and_counts_sparse():
+    """A mid-sweep weight must actually fuse: the ranking differs from
+    dense-only and n_candidates grows by the sparse uniques."""
+    c = _corpus()
+    idx = _index(c)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    dense = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16)
+    fused = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16,
+                      fusion=qexec.FusionSpec(weight=0.5))
+    assert not np.array_equal(np.asarray(dense.doc_ids),
+                              np.asarray(fused.doc_ids))
+    assert (np.asarray(fused.n_candidates)
+            >= np.asarray(dense.n_candidates)).all()
+
+
+# --------------------------------------------------------------------------
+# weight=0.0 against a pure-BM25 numpy oracle
+# --------------------------------------------------------------------------
+
+def _bm25_oracle(index, query_tokens, k2, top_r):
+    """Pure sparse top-R: for each query, sum the STORED impacts of
+    every doc over its probed term lists (accumulated in probed-term
+    order, float32 — the same addition order as the fixed-shape path),
+    rank by (score desc, id asc), exclude zero-score docs."""
+    t_ids = np.asarray(ts_mod.query_terms(index.term_sel,
+                                          jnp.asarray(query_tokens), k2))
+    entries = np.asarray(index.term_lists.entries)
+    weights = np.asarray(index.sparse_weights)
+    n_docs = index.n_docs
+    out = np.full((t_ids.shape[0], top_r), PAD_DOC, np.int64)
+    for b in range(t_ids.shape[0]):
+        acc = np.zeros((n_docs,), np.float32)
+        for t in t_ids[b]:
+            if t < 0:
+                continue
+            for slot in range(entries.shape[1]):
+                d = entries[t, slot]
+                if d >= 0:
+                    acc[d] = np.float32(acc[d] + weights[t, slot])
+        live = np.flatnonzero(acc > 0.0)
+        order = live[np.lexsort((live, -acc[live]))][:top_r]
+        out[b, :order.size] = order
+    return out
+
+
+def test_weight_zero_matches_bm25_oracle():
+    c = _corpus()
+    # term_capacity=None → no truncation, so every posting the oracle
+    # sums is present in the impact plane
+    idx = _index(c, term_capacity=None)
+    res = hi.search(idx, jnp.asarray(c.query_emb),
+                    jnp.asarray(c.query_tokens), kc=4, k2=4, top_r=16,
+                    fusion=qexec.FusionSpec(weight=0.0))
+    oracle = _bm25_oracle(idx, c.query_tokens, k2=4, top_r=16)
+    np.testing.assert_array_equal(np.asarray(res.doc_ids), oracle)
+
+
+# --------------------------------------------------------------------------
+# cross-variant equivalence (sharded paths in a 4-device subprocess)
+# --------------------------------------------------------------------------
+
+def test_fused_search_identical_across_all_four_variants():
+    """single == mutable == sharded(2,4) == sharded-mutable under
+    fusion, bitwise in ids/scores/candidate counts — and weight=1.0
+    stays bit-identical to dense-only on every variant."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import exec as qexec, hybrid_index as hi
+from repro.core import segments as seg, sharded_index as shi
+from repro.data import synthetic
+
+assert jax.device_count() == 4
+c = synthetic.generate(seed=0, n_docs=1400, n_queries=24, hidden=32,
+                       vocab_size=512, n_topics=8)
+kw = dict(n_clusters=16, k1_terms=4, codec="pq", pq_m=4, pq_k=64,
+          cluster_capacity=64, term_capacity=32, kmeans_iters=3,
+          sparse=True)
+qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+               jnp.asarray(c.doc_tokens), c.vocab_size, **kw)
+mut = seg.MutableHybridIndex.create(
+    jax.random.key(0), c.doc_emb, c.doc_tokens, c.vocab_size,
+    delta_capacity=64, **kw)
+
+def check(ref, out, err):
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(out.doc_ids), err)
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(out.scores), err)
+    np.testing.assert_array_equal(np.asarray(ref.n_candidates),
+                                  np.asarray(out.n_candidates), err)
+
+for fus in (qexec.FusionSpec(weight=0.5), qexec.FusionSpec(weight=1.0)):
+    ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16, fusion=fus)
+    check(ref, mut.search(qe, qt, kc=4, k2=4, top_r=16, fusion=fus),
+          ("mutable", fus))
+    for n_shards in (2, 4):
+        mesh = shi.make_shard_mesh(n_shards)
+        sidx = shi.device_put(shi.partition(idx, n_shards), mesh)
+        check(ref, shi.search(sidx, qe, qt, kc=4, k2=4, top_r=16,
+                              mesh=mesh, fusion=fus),
+              ("sharded", n_shards, fus))
+        smut = seg.ShardedMutableIndex(mut, n_shards)
+        check(ref, smut.search(qe, qt, kc=4, k2=4, top_r=16, fusion=fus),
+              ("sharded-mutable", n_shards, fus))
+
+# weight=1.0 == dense-only, on the sharded path too
+dense = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16)
+w1 = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16,
+               fusion=qexec.FusionSpec(weight=1.0))
+np.testing.assert_array_equal(np.asarray(dense.doc_ids),
+                              np.asarray(w1.doc_ids))
+""")
+
+
+def test_fused_search_with_live_delta_and_tombstones():
+    """Streamed docs join the sparse channel (their postings carry the
+    eviction-score impacts) and tombstoned docs can never surface in a
+    fused result."""
+    c = _corpus()
+    kw = dict(_KW, sparse=True)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:1200], c.doc_tokens[:1200],
+        c.vocab_size, delta_capacity=256, **kw)
+    new_ids = mut.add_docs(c.doc_emb[1200:], c.doc_tokens[1200:])
+    dead = np.arange(0, 60)
+    mut.delete_docs(dead)
+    fus = qexec.FusionSpec(weight=0.5)
+    res = mut.search(c.query_emb, c.query_tokens, kc=4, k2=4, top_r=16,
+                     fusion=fus)
+    ids = np.asarray(res.doc_ids)
+    assert not np.isin(ids, dead).any()
+    # the delta is searchable through the sparse channel: pure-sparse
+    # search can return streamed docs
+    sp = mut.search(c.query_emb, c.query_tokens, kc=4, k2=4, top_r=64,
+                    fusion=qexec.FusionSpec(weight=0.0))
+    assert np.isin(np.asarray(sp.doc_ids), new_ids).any()
+    # compact folds the impacts into a fresh base build and keeps fusing
+    mut2 = mut.compact()
+    assert mut2.base.sparse_weights is not None
+    res2 = mut2.search(c.query_emb, c.query_tokens, kc=4, k2=4, top_r=16,
+                       fusion=fus)
+    assert np.asarray(res2.doc_ids).shape == ids.shape
+
+
+# --------------------------------------------------------------------------
+# namespace isolation of sparse candidates
+# --------------------------------------------------------------------------
+
+def test_namespace_filter_applies_to_sparse_candidates():
+    """The sparse channel must fail closed exactly like the dense one:
+    no fused (or pure-sparse) result may leave the query's allowed
+    namespaces."""
+    c = _corpus()
+    n_ns = 4
+    doc_ns = (np.arange(1400) * 7 % n_ns).astype(np.int32)
+    idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                   jnp.asarray(c.doc_tokens), c.vocab_size,
+                   doc_namespaces=doc_ns, sparse=True, **_KW)
+    allowed = [[b % n_ns] for b in range(24)]
+    bitmap = ns_filters.make_filter(allowed, n_ns)
+    for w in (0.0, 0.5):
+        res = hi.search(idx, jnp.asarray(c.query_emb),
+                        jnp.asarray(c.query_tokens), kc=4, k2=4, top_r=16,
+                        filter=bitmap, fusion=qexec.FusionSpec(weight=w))
+        ids = np.asarray(res.doc_ids)
+        for b, row in enumerate(ids):
+            live = row[row >= 0]
+            assert np.isin(doc_ns[live], allowed[b]).all(), (w, b)
+
+
+# --------------------------------------------------------------------------
+# serving: cache keying on the fusion spec
+# --------------------------------------------------------------------------
+
+def test_runtime_cache_fused_hit_and_weight_change_miss():
+    c = _corpus()
+    idx = _index(c)
+    srv = serve.Server(idx, serve.ServeConfig(
+        kc=4, k2=4, top_r=16, max_batch=8, fusion_weight=0.5))
+    rt = rt_mod.ServingRuntime(srv, rt_mod.RuntimeConfig(cache_size=64))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    try:
+        r1 = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        r2 = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(r1.doc_ids),
+                                      np.asarray(r2.doc_ids))
+        np.testing.assert_array_equal(np.asarray(r1.scores),
+                                      np.asarray(r2.scores))
+        assert rt.cache.hits == 4 and rt.cache.misses == 4
+        rt.set_fusion_weight(0.25)
+        r3 = rt.query(c.query_emb[:4], c.query_tokens[:4])
+        # a re-weighted query must recompute, never replay
+        assert rt.cache.hits == 4 and rt.cache.misses == 8
+        assert not np.array_equal(np.asarray(r3.doc_ids),
+                                  np.asarray(r1.doc_ids))
+        # and the runtime stays bit-identical to direct serving
+        direct = srv.query(c.query_emb[:4], c.query_tokens[:4])
+        np.testing.assert_array_equal(np.asarray(r3.doc_ids),
+                                      np.asarray(direct.doc_ids))
+    finally:
+        rt.close()
+
+
+def test_server_set_fusion_validates_weight():
+    c = _corpus()
+    srv = serve.Server(_index(c), serve.ServeConfig(kc=4, k2=4, top_r=8,
+                                                    max_batch=8))
+    assert srv.fusion is None
+    with pytest.raises(ValueError):
+        srv.set_fusion(2.0)
+    srv.set_fusion(0.5)
+    assert srv.fusion == qexec.FusionSpec(weight=0.5)
+    srv.set_fusion(None)
+    assert srv.fusion is None
+
+
+# --------------------------------------------------------------------------
+# persistence: the impact plane round-trips
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_preserves_fused_search(tmp_path):
+    c = _corpus()
+    idx = _index(c)
+    path = ckpt.save_index(str(tmp_path), 0, idx)
+    like = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), idx)
+    restored = ckpt.restore_index(path, like)
+    assert restored.sparse_weights is not None
+    fus = qexec.FusionSpec(weight=0.5)
+    qe, qt = jnp.asarray(c.query_emb), jnp.asarray(c.query_tokens)
+    ref = hi.search(idx, qe, qt, kc=4, k2=4, top_r=16, fusion=fus)
+    got = hi.search(restored, qe, qt, kc=4, k2=4, top_r=16, fusion=fus)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(got.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(got.scores))
+
+
+def test_mutable_state_roundtrip_preserves_fused_search(tmp_path):
+    c = _corpus()
+    kw = dict(_KW, sparse=True)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), c.doc_emb[:1200], c.doc_tokens[:1200],
+        c.vocab_size, delta_capacity=256, **kw)
+    mut.add_docs(c.doc_emb[1200:], c.doc_tokens[1200:])
+    restored = seg.MutableHybridIndex.from_state(mut.state_tree(),
+                                                 mut.state_extra())
+    fus = qexec.FusionSpec(weight=0.5)
+    ref = mut.search(c.query_emb, c.query_tokens, kc=4, k2=4, top_r=16,
+                     fusion=fus)
+    got = restored.search(c.query_emb, c.query_tokens, kc=4, k2=4,
+                          top_r=16, fusion=fus)
+    np.testing.assert_array_equal(np.asarray(ref.doc_ids),
+                                  np.asarray(got.doc_ids))
+    np.testing.assert_array_equal(np.asarray(ref.scores),
+                                  np.asarray(got.scores))
+
+
+def test_sparse_weights_align_with_term_entries():
+    """Structural invariant of build_scored: the impact plane is 0 at
+    pads and > 0 exactly where a posting exists (BM25 impacts of stored
+    salient terms are positive)."""
+    c = _corpus()
+    idx = _index(c)
+    entries = np.asarray(idx.term_lists.entries)
+    w = np.asarray(idx.sparse_weights)
+    assert w.shape == entries.shape
+    assert (w[entries == PAD_DOC] == 0.0).all()
+    assert (w[entries != PAD_DOC] > 0.0).all()
+
+
+# keep the helper referenced for linting tools that flag unused imports
+_ = dataclasses
