@@ -1,0 +1,447 @@
+"""Width-autotuning benchmark (DESIGN.md §14): the offline tuner's
+frontier selection, the tuned-vs-default cost win, and the adaptive
+rung ladder's serving contracts.
+
+    PYTHONPATH=src python benchmarks/autotune.py --smoke --check \\
+        --out results/BENCH_autotune.json                         # CI
+    PYTHONPATH=src python benchmarks/autotune.py                  # full
+
+Three stages:
+
+  · **tune** (in-process): build one refine-codec index, run
+    ``repro.launch.tune.tune_index`` over the shared grid against the
+    exact oracle, and evaluate three operating points on the held-out
+    queries — the hand-picked default (``serve.DEFAULT_KC/K2``), the
+    tuned-static selection, and the adaptive ladder (per-query rung by
+    dispatch margin, cost averaged over the resolved rungs).
+  · **variants** (subprocess, 2 emulated devices): with adaptivity off
+    and explicit widths, every serving layout (plain / sharded /
+    mutable / sharded-mutable) returns rows bit-identical to the
+    direct variant search at those widths — and a default-config
+    server (kc/k2 unset) returns the same rows, proving the
+    resolution fallback IS the pre-§14 constants.
+  · **runtime** (subprocess, cold jit cache): adaptive serving through
+    the micro-batching runtime — warmup compiles exactly one program
+    per (batch-bucket, width-rung), serving compiles nothing, every
+    row is bit-identical to the direct search at its resolved rung's
+    widths, the replay pass hits the cache on every repeat, and the
+    cache key is structurally distinct across rungs.
+
+``--check`` enforces the §14 acceptance contracts: (a) tuned-static
+meets the recall target at strictly lower candidate cost than the
+default, (b) the adaptive ladder's mean per-query cost is <= tuned-
+static at equal-or-better recall, (c) explicit-width bit-identity on
+all four variants, (d) one compile per (bucket, rung) and zero
+serving-time compiles, (e) no cross-rung cache replay.  All report
+fields are deterministic (no wall-clock), so the regression gate
+compares them bit-exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+LAYOUTS = ("plain", "sharded", "mutable", "sharded_mutable")
+CODEC = "refine:pq:4"
+REFINE_MULTS = (2, 4, 8)
+
+#: oracle width: the tune scores recall@top_r of the exact top-10
+#: neighbors (the standard ANN ground-truth framing) — an exact top-100
+#: target does not saturate at bench scale, so every sweep point would
+#: sit on the steep part of the curve and the hand-picked default would
+#: never be over-provisioned
+ORACLE_WIDTH = 10
+
+#: the tuner's recall@R target as a fraction of the DEFAULT config's
+#: measured recall — the tune must hold (almost all of) the hand-picked
+#: operating point's quality while spending strictly less
+TARGET_FRAC = 0.96
+
+
+def _scale(args) -> None:
+    # geometry note: few large clusters + tight topics (sigma_doc) put
+    # the default (6, 8) past the knee of the recall curve — the
+    # regime the tuner exists for (an under-provisioned default is
+    # correctly left alone, but proves nothing)
+    if args.smoke:
+        args.docs, args.queries = 4000, 256
+        args.hidden, args.vocab, args.clusters = 32, 2048, 16
+        args.pq_m, args.pq_k, args.kmeans_iters = 4, 64, 5
+        args.max_batch = args.max_batch or 32
+    else:
+        args.docs, args.queries = 8000, 384
+        args.hidden, args.vocab, args.clusters = 64, 4096, 32
+        args.pq_m, args.pq_k, args.kmeans_iters = 8, 256, 8
+        args.max_batch = args.max_batch or 64
+
+
+def _build(args):
+    """The one deterministic corpus + index every stage rebuilds (same
+    seed and params -> bit-identical planes, so the tuned record from
+    the tune stage applies verbatim in the subprocess stages)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import hybrid_index as hi
+    from repro.data import synthetic
+
+    corpus = synthetic.generate(seed=0, n_docs=args.docs,
+                                n_queries=args.queries,
+                                hidden=args.hidden,
+                                vocab_size=args.vocab,
+                                n_topics=args.clusters, sigma_doc=0.18)
+    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                     n_clusters=args.clusters, k1_terms=8, codec=CODEC,
+                     pq_m=args.pq_m, pq_k=args.pq_k,
+                     cluster_capacity=512, term_capacity=96,
+                     kmeans_iters=args.kmeans_iters)
+    return corpus, index
+
+
+def _equal(a, b) -> bool:
+    return (np.array_equal(np.asarray(a.doc_ids), np.asarray(b.doc_ids))
+            and np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+            and np.array_equal(np.asarray(a.n_candidates),
+                               np.asarray(b.n_candidates)))
+
+
+# --------------------------------------------------------------------------
+# stage: tune (in-process)
+# --------------------------------------------------------------------------
+
+def run_tune(args) -> tuple:
+    import jax.numpy as jnp
+    from repro.core import hybrid_index as hi
+    from repro.core.exec import frontier
+    from repro.launch import serve, tune
+
+    corpus, index = _build(args)
+    top_r = args.top_r
+    qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+    oracle = tune.exact_oracle(corpus.doc_emb, corpus.query_emb,
+                               ORACLE_WIDTH)
+
+    # the pre-§14 operating point: hand-picked widths, as-built codec
+    d_res = hi.search(index, qe, qt, kc=serve.DEFAULT_KC,
+                      k2=serve.DEFAULT_K2, top_r=top_r)
+    d_recall = float(tune.per_query_recall(d_res.doc_ids, oracle,
+                                           top_r).mean())
+    d_cost = hi.candidate_cost(index, serve.DEFAULT_KC, serve.DEFAULT_K2,
+                               top_r)
+    target = round(TARGET_FRAC * d_recall, 4)
+
+    tuned, points = tune.tune_index(index, corpus.query_emb,
+                                    corpus.query_tokens, oracle,
+                                    recall_target=target, top_r=top_r,
+                                    refine_mults=REFINE_MULTS)
+    tuned_idx = tune.apply_tuned(index, tuned)
+
+    # adaptive ladder on the held-out sample: per-query rung by margin,
+    # recall composed from the per-rung searches, cost averaged
+    m = frontier.margins(index.cluster_sel.embeddings, corpus.query_emb)
+    rung = frontier.resolve_rung(m, tuned.margin_cuts)
+    rung_recall, rung_cost = [], []
+    for kc, k2 in tuned.rungs:
+        res = hi.search(tuned_idx, qe, qt, kc=kc, k2=k2, top_r=top_r)
+        rung_recall.append(tune.per_query_recall(res.doc_ids, oracle,
+                                                 top_r))
+        rung_cost.append(hi.candidate_cost(tuned_idx, kc, k2, top_r))
+    per_q = np.stack(rung_recall)[rung, np.arange(rung.shape[0])]
+    costs = np.asarray(rung_cost, np.float64)[rung]
+    report = {
+        "codec": CODEC,
+        "top_r": top_r,
+        "oracle_width": ORACLE_WIDTH,
+        "recall_target": target,
+        "default": {"kc": serve.DEFAULT_KC, "k2": serve.DEFAULT_K2,
+                    "refine_mult": 4, "cost": int(d_cost),
+                    "recall": round(d_recall, 4)},
+        "tuned": frontier.to_json(tuned),
+        "pareto_frontier": [
+            {"kc": p.kc, "k2": p.k2, "refine_mult": p.refine_mult,
+             "cost": p.cost, "recall": round(p.recall, 4)}
+            for p in frontier.pareto_frontier(points)],
+        "adaptive": {
+            "n_rungs": len(tuned.rungs),
+            "rung_fractions": [round(float((rung == r).mean()), 4)
+                               for r in range(len(tuned.rungs))],
+            "mean_cost": round(float(costs.mean()), 1),
+            "recall": round(float(per_q.mean()), 4),
+        },
+    }
+    return report, tuned
+
+
+# --------------------------------------------------------------------------
+# stage: variants (subprocess; explicit-width bit-identity)
+# --------------------------------------------------------------------------
+
+def run_variants(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import hybrid_index as hi
+    from repro.core import segments as seg
+    from repro.launch import serve
+
+    corpus, index = _build(args)
+    b = args.max_batch
+    qe, qt = corpus.query_emb[:b], corpus.query_tokens[:b]
+    kc, k2 = serve.DEFAULT_KC, serve.DEFAULT_K2
+
+    def build_mut():
+        return seg.MutableHybridIndex.create(
+            jax.random.key(0), corpus.doc_emb, corpus.doc_tokens,
+            corpus.vocab_size, delta_capacity=256, n_clusters=args.clusters,
+            k1_terms=8, codec=CODEC, pq_m=args.pq_m, pq_k=args.pq_k,
+            cluster_capacity=512, term_capacity=96,
+            kmeans_iters=args.kmeans_iters)
+
+    def make(layout, cfg):
+        if layout in ("mutable", "sharded_mutable"):
+            return serve.make_mutable_server(build_mut(), cfg)
+        return serve.make_server(index, cfg)
+
+    report = {}
+    for layout in LAYOUTS:
+        sharded = layout in ("sharded", "sharded_mutable")
+        kw = dict(top_r=args.top_r, max_batch=b,
+                  n_shards=2 if sharded else 1,
+                  mutable=layout in ("mutable", "sharded_mutable"),
+                  delta_capacity=256)
+        explicit = make(layout, serve.ServeConfig(kc=kc, k2=k2, **kw))
+        default = make(layout, serve.ServeConfig(**kw))
+        # the direct pre-§14 call for this layout, at the same widths
+        if layout in ("mutable", "sharded_mutable"):
+            direct = explicit.mut.search(jnp.asarray(qe), jnp.asarray(qt),
+                                         kc=kc, k2=k2, top_r=args.top_r)
+        else:
+            direct = hi.search(index, jnp.asarray(qe), jnp.asarray(qt),
+                               kc=kc, k2=k2, top_r=args.top_r)
+        e_rows = explicit.query(qe, qt)
+        d_rows = default.query(qe, qt)
+        report[layout] = {
+            "resolved_widths": [default.kc, default.k2],
+            "width_source_default_cfg": default.width_source,
+            "explicit_equals_direct": _equal(e_rows, direct),
+            "default_equals_explicit": _equal(d_rows, e_rows),
+        }
+    return report
+
+
+# --------------------------------------------------------------------------
+# stage: runtime (subprocess, cold jit; adaptive serving contracts)
+# --------------------------------------------------------------------------
+
+def run_runtime(args) -> dict:
+    import jax.numpy as jnp
+    from repro.core import hybrid_index as hi
+    from repro.core.exec import frontier
+    from repro.launch import runtime as rt_mod
+    from repro.launch import serve, tune
+
+    tuned = frontier.from_json(json.loads(args.tuned_json))
+    corpus, index = _build(args)
+    idx = tune.apply_tuned(index, tuned)
+    server = serve.Server(idx, serve.ServeConfig(
+        adaptive=True, top_r=args.top_r, max_batch=args.max_batch))
+    n = corpus.query_emb.shape[0]
+    rt = rt_mod.ServingRuntime(server, rt_mod.RuntimeConfig(
+        linger_ms=1.0, queue_depth=max(256, 2 * n), cache_size=2 * n))
+    rt.warmup(args.hidden, corpus.query_tokens.shape[1])
+
+    futures = [rt.submit(corpus.query_emb[i], corpus.query_tokens[i])
+               for i in range(n)]
+    rows = [f.result() for f in futures]
+    stats = rt.stats()
+
+    # replay: every repeat must hit the cache (runtime idle in between)
+    hits0 = stats["cache"]["hits"]
+    replay = [rt.submit(corpus.query_emb[i], corpus.query_tokens[i])
+              for i in range(n)]
+    replay_rows = [f.result() for f in replay]
+    replay_hits = rt.stats()["cache"]["hits"] - hits0
+    replay_identical = all(_equal(a, b) for a, b in zip(rows, replay_rows))
+    rt.close(drain=True)
+
+    # per-rung bit-identity: each row == the direct search at its
+    # resolved rung's widths (batch-size invariance makes the full-
+    # batch direct call the reference for every row)
+    m = frontier.margins(idx.cluster_sel.embeddings, corpus.query_emb)
+    rung = frontier.resolve_rung(m, server.margin_cuts)
+    qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+    identical = True
+    for r, (kc, k2) in enumerate(server.rungs):
+        ref = hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=args.top_r)
+        ids, sc = np.asarray(ref.doc_ids), np.asarray(ref.scores)
+        for i in np.nonzero(rung == r)[0]:
+            identical &= (np.array_equal(np.asarray(rows[i].doc_ids),
+                                         ids[i])
+                          and np.array_equal(np.asarray(rows[i].scores),
+                                             sc[i]))
+    q0, t0 = (np.asarray(corpus.query_emb[0], np.float32),
+              np.asarray(corpus.query_tokens[0], np.int32))
+    return {
+        "width_source": stats["width_source"],
+        "rungs": stats["rungs"],
+        "buckets": stats["buckets"],
+        "warm_compiles": {str(k): v for k, v in
+                          sorted(stats["warm_traces"].items())},
+        "post_warmup_compiles": stats["post_warmup_traces"],
+        "rung_dispatch": {str(k): v for k, v in
+                          sorted(stats["rung_dispatch"].items())},
+        "per_rung_bit_identical": bool(identical),
+        "replay_hits": int(replay_hits),
+        "replay_queries": n,
+        "replay_bit_identical": bool(replay_identical),
+        "cross_rung_key_distinct": bool(
+            rt._key(q0, t0, None, 0) != rt._key(q0, t0, None, 1)),
+    }
+
+
+# --------------------------------------------------------------------------
+# orchestration + checks
+# --------------------------------------------------------------------------
+
+def _spawn(stage: str, argv: list, devices: int = 1) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src:{env.get('PYTHONPATH', '')}".rstrip(":")
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--stage", stage,
+         *argv], capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        sys.exit(f"autotune --stage {stage} failed:\n"
+                 f"{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout[r.stdout.index("{"):])
+
+
+def _check(report: dict) -> list:
+    fails = []
+    tuned, default = report["tuned"], report["default"]
+    adaptive = report["adaptive"]
+    # (a) tuned-static: meets target, strictly cheaper than the default
+    if tuned["recall"] < report["recall_target"]:
+        fails.append(f"tuned recall {tuned['recall']} misses the target "
+                     f"{report['recall_target']}")
+    if not tuned["cost"] < default["cost"]:
+        fails.append(f"tuned cost {tuned['cost']} not strictly below the "
+                     f"default {default['cost']}")
+    # (b) adaptive: cheaper-or-equal mean cost at equal-or-better recall
+    if adaptive["mean_cost"] > tuned["cost"]:
+        fails.append(f"adaptive mean cost {adaptive['mean_cost']} above "
+                     f"tuned-static {tuned['cost']}")
+    if adaptive["recall"] < tuned["recall"] - 1e-9:
+        fails.append(f"adaptive recall {adaptive['recall']} below "
+                     f"tuned-static {tuned['recall']}")
+    if adaptive["n_rungs"] < 2:
+        fails.append("calibration produced no adaptive ladder "
+                     "(single rung) — adaptivity is untested")
+    # (c) explicit widths, adaptivity off: bit-identical on all layouts
+    for layout, rep in report["variants"].items():
+        if not rep["explicit_equals_direct"]:
+            fails.append(f"{layout}: explicit-width serving != direct "
+                         "search")
+        if not rep["default_equals_explicit"]:
+            fails.append(f"{layout}: default-config serving != explicit "
+                         f"{report['default']['kc']}/"
+                         f"{report['default']['k2']}")
+    # (d) one compile per (bucket, rung), zero serving-time compiles
+    rt = report["runtime"]
+    want = len(rt["buckets"]) * len(rt["rungs"])
+    if len(rt["warm_compiles"]) != want:
+        fails.append(f"warm ledger has {len(rt['warm_compiles'])} "
+                     f"programs, want {want} (buckets x rungs)")
+    bad = {k: v for k, v in rt["warm_compiles"].items() if v != 1}
+    if bad:
+        fails.append(f"warmup compiles per (bucket, rung) != 1: {bad}")
+    if rt["post_warmup_compiles"]:
+        fails.append(f"{rt['post_warmup_compiles']} compiles caused by "
+                     "adaptive serving after warmup")
+    if rt["width_source"] != "tuned":
+        fails.append(f"runtime width source {rt['width_source']!r}, "
+                     "want 'tuned'")
+    if sorted(int(k) for k, v in rt["rung_dispatch"].items() if v) \
+            != list(range(len(rt["rungs"]))):
+        fails.append(f"not every rung dispatched: {rt['rung_dispatch']}")
+    if not rt["per_rung_bit_identical"]:
+        fails.append("adaptive rows != direct search at the resolved "
+                     "rung's widths")
+    # (e) cache can never replay across rungs
+    if not rt["cross_rung_key_distinct"]:
+        fails.append("cache key does not separate rungs")
+    if rt["replay_hits"] != rt["replay_queries"]:
+        fails.append(f"replay hit {rt['replay_hits']}"
+                     f"/{rt['replay_queries']}")
+    if not rt["replay_bit_identical"]:
+        fails.append("replayed rows != first-pass rows")
+    return fails
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus (CI scale)")
+    ap.add_argument("--stage", default=None,
+                    choices=("variants", "runtime"),
+                    help="run ONE stage in-process (internal: the "
+                         "default orchestrates the subprocess stages)")
+    ap.add_argument("--top-r", type=int, default=100)
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--tuned-json", default=None,
+                    help="TunedWidths JSON for --stage runtime")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_autotune.json here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless the §14 acceptance "
+                         "contracts (a)-(e) hold")
+    args = ap.parse_args(argv)
+    _scale(args)
+
+    if args.stage == "variants":
+        report = run_variants(args)
+    elif args.stage == "runtime":
+        if not args.tuned_json:
+            sys.exit("--stage runtime needs --tuned-json")
+        report = run_runtime(args)
+    else:
+        tune_rep, tuned = run_tune(args)
+        from repro.core.exec import frontier
+        sub = ["--top-r", str(args.top_r),
+               "--max-batch", str(args.max_batch)]
+        if args.smoke:
+            sub.append("--smoke")
+        report = {
+            "bench": "autotune",
+            "smoke": bool(args.smoke),
+            "n_docs": args.docs,
+            "n_queries": args.queries,
+            "max_batch": args.max_batch,
+            **tune_rep,
+            "variants": _spawn("variants", sub, devices=2),
+            "runtime": _spawn(
+                "runtime",
+                sub + ["--tuned-json",
+                       json.dumps(frontier.to_json(tuned))]),
+        }
+
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.check and args.stage is None:
+        failures = _check(report)
+        if failures:
+            sys.exit("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

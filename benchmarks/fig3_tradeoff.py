@@ -3,32 +3,50 @@
 For each method, sweep the dispatch width and report
 (candidate budget, R@100) pairs — the paper's recall-latency curve with
 candidates as the latency proxy (§5.1).
+
+The sweep rides :func:`repro.core.exec.frontier.sweep` over the shared
+:data:`~repro.core.exec.frontier.WIDTH_GRID` /
+:data:`~repro.core.exec.frontier.IVF_KC_GRID` — the same grids the
+offline width autotuner (``repro.launch.tune``, DESIGN.md §14)
+optimizes over, so this figure and the tuner can never disagree on the
+operating points.
 """
 from __future__ import annotations
 
 from benchmarks import common
 from repro.core import hybrid_index as hi
+from repro.core.exec import frontier
+
+
+def _curve(search_fn, grid) -> list[tuple[float, float]]:
+    """One (cost, recall) curve: fig3 reports the MEASURED mean
+    candidate count as the cost axis (the tuner uses the static
+    candidate_cost proxy; same grid, same point schema)."""
+
+    def run(kc, k2):
+        ev = common.evaluate(search_fn(kc, k2))
+        return ev["R@100"], ev["candidates"]
+
+    return [(p.cost, p.recall) for p in frontier.sweep(run, grid)]
 
 
 def run() -> dict[str, list[tuple[float, float]]]:
     qe, qt = common.queries()
     idx, sup = common.unsup_index(), common.sup_index()
-    curves: dict[str, list[tuple[float, float]]] = {}
-
-    def point(res):
-        ev = common.evaluate(res)
-        return (ev["candidates"], ev["R@100"])
-
-    curves["IVF-OPQ"] = [
-        point(hi.search_ivf(idx, qe, qt, kc=kc, top_r=common.TOP_R))
-        for kc in (1, 2, 4, 8, 12, 16)]
-    curves["HI2_unsup"] = [
-        point(hi.search(idx, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))
-        for kc, k2 in ((1, 2), (2, 4), (4, 6), (6, 8), (8, 12), (12, 16))]
-    curves["HI2_sup"] = [
-        point(hi.search(sup, qe, qt, kc=kc, k2=k2, top_r=common.TOP_R))
-        for kc, k2 in ((1, 2), (2, 4), (4, 6), (6, 8), (8, 12), (12, 16))]
-    return curves
+    return {
+        "IVF-OPQ": _curve(
+            lambda kc, k2: hi.search_ivf(idx, qe, qt, kc=kc,
+                                         top_r=common.TOP_R),
+            tuple((kc, 1) for kc in frontier.IVF_KC_GRID)),
+        "HI2_unsup": _curve(
+            lambda kc, k2: hi.search(idx, qe, qt, kc=kc, k2=k2,
+                                     top_r=common.TOP_R),
+            frontier.WIDTH_GRID),
+        "HI2_sup": _curve(
+            lambda kc, k2: hi.search(sup, qe, qt, kc=kc, k2=k2,
+                                     top_r=common.TOP_R),
+            frontier.WIDTH_GRID),
+    }
 
 
 def main():

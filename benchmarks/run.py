@@ -197,6 +197,24 @@ def _hybrid_fusion() -> None:
           f"fallback={rep['fallback_equals_dense']}", flush=True)
 
 
+def _autotune() -> None:
+    rep = _subprocess_json("autotune", ["--smoke", "--check"])
+    t, d, a = rep["tuned"], rep["default"], rep["adaptive"]
+    print(f"autotune/default,0,cost={d['cost']};R@100={d['recall']:.4f}",
+          flush=True)
+    print(f"autotune/tuned,0,kc={t['kc']};k2={t['k2']};"
+          f"mult={t['refine_mult']};cost={t['cost']};"
+          f"R@100={t['recall']:.4f}", flush=True)
+    print(f"autotune/adaptive,0,rungs={a['n_rungs']};"
+          f"mean_cost={a['mean_cost']};R@100={a['recall']:.4f}",
+          flush=True)
+    rt = rep["runtime"]
+    print(f"autotune/runtime,0,"
+          f"programs={len(rt['warm_compiles'])};"
+          f"post_warmup={rt['post_warmup_compiles']};"
+          f"identical={rt['per_rung_bit_identical']}", flush=True)
+
+
 def _kernel_bench() -> None:
     rep = _subprocess_json("kernel_bench", ["--smoke", "--check"])
     for name in ("pq_adc", "sq8_dot", "assign_topk"):
@@ -211,6 +229,7 @@ def _kernel_bench() -> None:
 #: every benchmark entry point; the driver refuses to run if a
 #: benchmarks/*.py exists without a row here
 DISPATCH = {
+    "autotune": _autotune,
     "kernel_bench": _kernel_bench,
     "table1_main": _table1,
     "table2_robustness": _table2,

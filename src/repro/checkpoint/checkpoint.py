@@ -20,6 +20,7 @@ per leaf to support that (see DESIGN.md §5).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -28,6 +29,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.exec import frontier
 
 PyTree = Any
 
@@ -108,6 +111,11 @@ def save_index(directory: str, step: int, index: Any,
     extra = dict(extra or {})
     extra["codec"] = index.codec
     extra["filtered"] = getattr(index, "doc_ns", None) is not None
+    tuned = getattr(index, "tuned", None)
+    if tuned is not None:
+        # autotuned widths (DESIGN.md §14) are static metadata like the
+        # codec spec: they ride the manifest, not the leaf arrays
+        extra["tuned"] = frontier.to_json(tuned)
     return save(directory, step, index, extra=extra)
 
 
@@ -116,13 +124,23 @@ def restore_index(path: str, like: Any) -> Any:
     validating the recorded codec spec when one was saved
     (:func:`save_index`); plain :func:`save` checkpoints restore
     unvalidated."""
-    saved = load_manifest(path).get("extra", {}).get("codec")
+    extra = load_manifest(path).get("extra", {})
+    saved = extra.get("codec")
     if saved is not None and saved != like.codec:
         raise ValueError(
             f"checkpoint at {path} was built with codec {saved!r} but "
             f"the restore target uses {like.codec!r}; rebuild the "
             f"target index with codec={saved!r}")
-    return restore(path, like)
+    restored = restore(path, like)
+    tuned = extra.get("tuned")
+    if tuned is not None and dataclasses.is_dataclass(restored) and any(
+            f.name == "tuned" for f in dataclasses.fields(restored)):
+        # re-attach the tuned-width record (the restore target's meta
+        # fields came from ``like``, which typically has none); sharded
+        # restore targets without the field keep their own metadata
+        restored = dataclasses.replace(restored,
+                                       tuned=frontier.from_json(tuned))
+    return restored
 
 
 def save_mutable(directory: str, step: int, mut: Any,

@@ -18,7 +18,9 @@ helpers, :func:`~repro.core.exec.stages.sparse_topk` /
 plane fall back to the dense-only result, bit-identically.
 """
 from repro.core.exec import filters
+from repro.core.exec import frontier
 from repro.core.exec.cost import candidate_budget, candidate_cost
+from repro.core.exec.frontier import TunedWidths
 from repro.core.exec.fusion import FusionSpec
 from repro.core.exec.stages import (Frontier, SearchResult, ShardEnv,
                                     Source, dedup, dispatch, execute,
@@ -29,8 +31,8 @@ from repro.core.exec.stages import (Frontier, SearchResult, ShardEnv,
 
 __all__ = [
     "Frontier", "FusionSpec", "SearchResult", "ShardEnv", "Source",
-    "candidate_budget", "candidate_cost", "dedup", "dispatch", "execute",
-    "filter_stage", "filters", "fuse", "gather", "make_refine_ctx",
-    "refine_planes", "score", "sparse_topk", "topk", "topk_by_score",
-    "trace_count",
+    "TunedWidths", "candidate_budget", "candidate_cost", "dedup",
+    "dispatch", "execute", "filter_stage", "filters", "frontier", "fuse",
+    "gather", "make_refine_ctx", "refine_planes", "score", "sparse_topk",
+    "topk", "topk_by_score", "trace_count",
 ]

@@ -1,0 +1,176 @@
+"""Recall/cost frontier tooling for width autotuning (DESIGN.md §14).
+
+The dispatch widths (kc, k2) — and, for a refining codec, the refine
+multiplier — trade recall against the §2 latency proxy
+(:func:`repro.core.exec.cost.candidate_cost`).  This module owns the
+pure machinery that both the offline tuner (:mod:`repro.launch.tune`)
+and the fig3 sweep share, so the figure and the tuner can never
+disagree on the grid:
+
+  · :data:`WIDTH_GRID` / :data:`IVF_KC_GRID` — the one (kc, k2) sweep
+    grid (previously hardcoded three times in
+    ``benchmarks/fig3_tradeoff.py``);
+  · :func:`sweep` / :func:`pareto_frontier` / :func:`select` — evaluate
+    a grid, trace the Pareto frontier, pick the cheapest config meeting
+    a recall target;
+  · :class:`TunedWidths` — the hashable record the tuner persists into
+    ``HybridIndex.tuned`` (a static pytree field, carried through
+    ``checkpoint.save_index/restore_index`` and honored as the default
+    by ``launch/serve.py``);
+  · :func:`margins` / :func:`resolve_rung` — the per-query difficulty
+    signal (top-1 vs top-2 cluster-score margin of the dispatch stage,
+    computed on the L2-NORMALIZED embedding so it is a pure function of
+    the serving runtime's scale-invariant cache-key embedding) and the
+    margin→rung routing used by adaptive serving.
+
+Rung convention: ``TunedWidths.rungs`` is ordered narrow → wide; a
+query with a LARGE margin (its best cluster clearly wins — an easy
+query) takes a low rung, and ``margin_cuts`` (one fewer than the
+rungs, descending) are the thresholds: rung = #{cut : margin < cut}.
+An empty ladder (one rung, no cuts) is the degenerate non-adaptive
+case — adaptive serving over it is exactly tuned-static serving.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+#: the one (kc, k2) sweep grid shared by the tuner and fig3
+WIDTH_GRID = ((1, 2), (2, 4), (4, 6), (6, 8), (8, 12), (12, 16))
+
+#: cluster-only sweep for the IVF baselines (k2 pinned to 1)
+IVF_KC_GRID = (1, 2, 4, 8, 12, 16)
+
+
+class SweepPoint(NamedTuple):
+    """One evaluated grid config: recall vs the candidate-cost proxy."""
+    kc: int
+    k2: int
+    recall: float
+    cost: float
+    refine_mult: Optional[int] = None
+
+
+class TunedWidths(NamedTuple):
+    """The persisted outcome of one offline tune (DESIGN.md §14).
+
+    Hashable and immutable on purpose: it rides ``HybridIndex.tuned``
+    as static pytree metadata (like the codec spec), so jit caches and
+    checkpoints stay stable.  ``rungs`` / ``margin_cuts`` describe the
+    adaptive ladder (narrow → wide; the LAST rung is always the tuned
+    static config (kc, k2)); a single-rung ladder means adaptivity was
+    calibrated away on the held-out sample.
+    """
+    kc: int
+    k2: int
+    refine_mult: Optional[int]   # None unless the codec is refine[:...]
+    recall_target: float
+    recall: float                # measured on the held-out sample
+    cost: int                    # candidate_cost at (kc, k2, refine_mult)
+    rungs: tuple = ()            # ((kc, k2), ...) narrow → wide
+    margin_cuts: tuple = ()      # len(rungs) - 1 thresholds, descending
+
+
+def to_json(tuned: TunedWidths) -> dict:
+    """JSON-serializable form (checkpoint manifest ``extra['tuned']``)."""
+    return {
+        "kc": tuned.kc, "k2": tuned.k2, "refine_mult": tuned.refine_mult,
+        "recall_target": tuned.recall_target, "recall": tuned.recall,
+        "cost": tuned.cost, "rungs": [list(r) for r in tuned.rungs],
+        "margin_cuts": list(tuned.margin_cuts),
+    }
+
+
+def from_json(d: dict) -> TunedWidths:
+    mult = d.get("refine_mult")
+    return TunedWidths(
+        kc=int(d["kc"]), k2=int(d["k2"]),
+        refine_mult=None if mult is None else int(mult),
+        recall_target=float(d["recall_target"]), recall=float(d["recall"]),
+        cost=int(d["cost"]),
+        rungs=tuple((int(kc), int(k2)) for kc, k2 in d.get("rungs", [])),
+        margin_cuts=tuple(float(c) for c in d.get("margin_cuts", [])))
+
+
+# --------------------------------------------------------------------------
+# sweep / frontier / selection
+# --------------------------------------------------------------------------
+
+def sweep(run_fn: Callable[[int, int], tuple],
+          grid: Sequence = WIDTH_GRID,
+          refine_mult: Optional[int] = None) -> list:
+    """Evaluate ``run_fn(kc, k2) -> (recall, cost)`` over a grid.
+
+    The tuner passes the static :func:`candidate_cost` proxy as the
+    cost; fig3 passes the measured mean candidate count — the grid and
+    the point schema are what the two must share.
+    """
+    return [SweepPoint(kc, k2, *map(float, run_fn(kc, k2)),
+                       refine_mult=refine_mult)
+            for kc, k2 in grid]
+
+
+def pareto_frontier(points: Iterable[SweepPoint]) -> list:
+    """The non-dominated subset, sorted by cost: each kept point has
+    strictly higher recall than every cheaper one."""
+    front, best = [], -np.inf
+    for p in sorted(points, key=lambda p: (p.cost, -p.recall)):
+        if p.recall > best:
+            front.append(p)
+            best = p.recall
+    return front
+
+
+def select(points: Iterable[SweepPoint],
+           recall_target: float) -> SweepPoint:
+    """The frontier selection rule (DESIGN.md §14): the CHEAPEST config
+    meeting the recall target; if no config meets it, the highest-recall
+    config (cheapest among ties) — never silently under-target."""
+    pts = list(points)
+    if not pts:
+        raise ValueError("select() needs at least one sweep point")
+    meeting = [p for p in pts if p.recall >= recall_target]
+    if meeting:
+        return min(meeting, key=lambda p: (p.cost, -p.recall))
+    return max(pts, key=lambda p: (p.recall, -p.cost))
+
+
+# --------------------------------------------------------------------------
+# per-query difficulty signal + rung routing
+# --------------------------------------------------------------------------
+
+def margins(cluster_embeddings, query_embeddings) -> np.ndarray:
+    """Top-1 vs top-2 cluster-score margin per query, (B,) float64.
+
+    Computed host-side on the L2-NORMALIZED query embedding (float64,
+    matching the runtime cache key's canonicalization) so the margin —
+    and therefore the resolved rung — is invariant under positive
+    rescaling of the query, exactly like the cache-key embedding
+    component.  A raw-score margin would scale with ‖q‖ and let a
+    rescaled query resolve a different rung than its cache
+    representative.  Zero vectors get margin 0 (maximally "hard").
+    """
+    emb = np.asarray(cluster_embeddings, np.float64)
+    q = np.atleast_2d(np.asarray(query_embeddings, np.float64))
+    norms = np.linalg.norm(q, axis=1, keepdims=True)
+    q = np.where(norms > 0.0, q / np.maximum(norms, 1e-30), q)
+    s = q @ emb.T
+    if s.shape[1] < 2:
+        return np.zeros(s.shape[0], np.float64)
+    top2 = np.partition(s, s.shape[1] - 2, axis=1)[:, -2:]
+    return top2[:, 1] - top2[:, 0]
+
+
+def resolve_rung(margin, cuts: Sequence[float]) -> np.ndarray:
+    """Margin(s) → rung index: rung = #{cut : margin < cut}.
+
+    With ``cuts`` descending, a confident (large-margin) query clears
+    every cut and lands on rung 0 (narrowest widths); a hard query
+    falls below all of them onto the last (widest, tuned) rung.  An
+    empty ``cuts`` maps everything to rung 0.
+    """
+    m = np.atleast_1d(np.asarray(margin, np.float64))
+    if not cuts:
+        return np.zeros(m.shape[0], np.int64)
+    return (m[:, None] < np.asarray(cuts, np.float64)[None, :]).sum(axis=1)

@@ -64,7 +64,7 @@ topk_by_score = qexec.topk_by_score
     data_fields=["cluster_sel", "term_sel", "cluster_lists", "term_lists",
                  "codec_params", "doc_planes", "doc_assign", "doc_ns",
                  "sparse_weights"],
-    meta_fields=["codec"])
+    meta_fields=["codec", "tuned"])
 @dataclasses.dataclass(frozen=True)
 class HybridIndex:
     cluster_sel: cs_mod.ClusterSelector
@@ -80,6 +80,8 @@ class HybridIndex:
     #                                 aligned with term_lists.entries
     #                                 (build(sparse=True), DESIGN.md §13)
     codec: str = codecs.DEFAULT     # registry spec (static)
+    tuned: Optional[qexec.TunedWidths] = None  # autotuned widths (static
+    #                                 metadata like codec; DESIGN.md §14)
 
     @property
     def n_docs(self) -> int:
@@ -263,6 +265,14 @@ def candidate_cost(index: HybridIndex, kc: int, k2: int, top_r: int) -> int:
     return qexec.candidate_cost(
         index.codec, kc, k2, top_r,
         [(index.cluster_lists.capacity, index.term_lists.capacity)])
+
+
+def with_tuned(index: HybridIndex,
+               tuned: Optional[qexec.TunedWidths]) -> HybridIndex:
+    """The index with ``tuned`` width metadata attached (DESIGN.md §14).
+    Pure metadata: the doc planes are shared, only the static pytree
+    field changes (so the first search re-traces, like a codec swap)."""
+    return dataclasses.replace(index, tuned=tuned)
 
 
 # --------------------------------------------------------------------------

@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import exec as qexec
 from repro.core import hybrid_index as hi
 from repro.core.exec import filters as ns_filters
+from repro.core.exec import frontier
 
 #: Smallest micro-batch bucket.  B=1 would lower the query·centroid
 #: matmul through XLA's vector path, whose reduction order differs from
@@ -178,12 +179,14 @@ class QueryCache:
 
 
 class _Request:
-    __slots__ = ("qe", "qt", "ns", "future", "t_submit")
+    __slots__ = ("qe", "qt", "ns", "rung", "future", "t_submit")
 
-    def __init__(self, qe: np.ndarray, qt: np.ndarray, ns, future: Future):
+    def __init__(self, qe: np.ndarray, qt: np.ndarray, ns, rung: int,
+                 future: Future):
         self.qe = qe
         self.qt = qt
         self.ns = ns
+        self.rung = rung
         self.future = future
         self.t_submit = time.monotonic()
 
@@ -261,6 +264,12 @@ class ServingRuntime:
         self.n_batches = 0
         self.bucket_counts = {b: 0 for b in self.buckets}
         self.replica_dispatch = {r: 0 for r in range(self.n_replicas)}
+        # width rungs (DESIGN.md §14): the server's static (kc, k2)
+        # ladder.  Single-rung on every non-adaptive server — then the
+        # runtime behaves (and keys warm_traces) exactly as before.
+        self.rung_dispatch: dict = {}
+        self._cluster_emb: Optional[np.ndarray] = None
+        self._refresh_rungs()
         self.warm_traces: dict = {}
         # compiles triggered by runtime batches after warmup — 0 when
         # every request lands in a warmed bucket.  Deltas are taken
@@ -303,17 +312,39 @@ class ServingRuntime:
                                                 daemon=True)
                 self._thread.start()
 
+    def _refresh_rungs(self) -> None:
+        """Snapshot the server's width ladder (DESIGN.md §14).  On a
+        multi-rung ladder the dispatch margin needs the cluster
+        embeddings host-side; re-read on every (re)warm so compaction's
+        fresh base swaps them in with the new compiled programs."""
+        self.rungs = tuple(getattr(self.server, "rungs", None)
+                           or ((getattr(self.server, "kc", None),
+                                getattr(self.server, "k2", None)),))
+        self.margin_cuts = tuple(getattr(self.server, "margin_cuts", ()))
+        for r in range(len(self.rungs)):
+            self.rung_dispatch.setdefault(r, 0)
+        self._cluster_emb = (np.asarray(
+            self.server.index.cluster_sel.embeddings, np.float32)
+            if len(self.rungs) > 1 else None)
+
     def _warm_buckets(self) -> None:
         """Compile the ladder at the current index shapes (caller holds
-        the serve lock; :meth:`warmup` has recorded the query dims)."""
+        the serve lock; :meth:`warmup` has recorded the query dims).
+        One compile per (bucket, rung); single-rung runtimes keep the
+        plain per-bucket ledger keys (and jit signatures) of §10."""
+        self._refresh_rungs()
+        multi = len(self.rungs) > 1
         for b in self.buckets:
             qe = jnp.zeros((b, self._hidden), jnp.float32)
             qt = jnp.full((b, self._query_len), -1, jnp.int32)
-            before = qexec.trace_count()
-            jax.block_until_ready(
-                self.server._search(self.server.index, qe, qt,
-                                    filter=self._bitmap([], b)))
-            self.warm_traces[b] = qexec.trace_count() - before
+            for r, widths in enumerate(self.rungs):
+                before = qexec.trace_count()
+                jax.block_until_ready(
+                    self.server._search(self.server.index, qe, qt,
+                                        filter=self._bitmap([], b),
+                                        widths=widths if multi else None))
+                key = (b, r) if multi else b
+                self.warm_traces[key] = qexec.trace_count() - before
 
     def close(self, drain: bool = True) -> None:
         """Stop the runtime.  ``drain=True`` (the default) completes
@@ -373,6 +404,7 @@ class ServingRuntime:
             if bad:
                 raise ValueError(
                     f"namespace id(s) {bad} out of range [0, {n_ns})")
+        rung = self._rung_for(qe)
         future: Future = Future()
         if self.cache is not None:
             # lock-free pre-check: submit must never wait behind an
@@ -381,11 +413,11 @@ class ServingRuntime:
             # scheduler re-checks under the lock before executing —
             # and a hit at the pre-read epoch is a result the request
             # could have legitimately observed (it raced the mutation).
-            hit = self.cache.get(self._key(qe, qt, ns))
+            hit = self.cache.get(self._key(qe, qt, ns, rung))
             if hit is not None:
                 future.set_result(hit)
                 return future
-        req = _Request(qe, qt, ns, future)
+        req = _Request(qe, qt, ns, rung, future)
         with self._cond:
             if self._closing:
                 raise RuntimeClosed("runtime closed")
@@ -483,6 +515,12 @@ class ServingRuntime:
             "bucket_counts": dict(self.bucket_counts),
             "n_replicas": self.n_replicas,
             "replica_dispatch": dict(self.replica_dispatch),
+            "rungs": [list(r) for r in self.rungs],
+            "rung_dispatch": dict(self.rung_dispatch),
+            "widths": [getattr(self.server, "kc", None),
+                       getattr(self.server, "k2", None)],
+            "width_source": getattr(self.server, "width_source",
+                                    "default"),
             "cache": cache,
         }
 
@@ -510,15 +548,29 @@ class ServingRuntime:
     def _epoch(self) -> int:
         return getattr(self.server, "epoch", 0)
 
-    def _key(self, qe: np.ndarray, qt: np.ndarray, ns,
+    def _rung_for(self, qe: np.ndarray) -> int:
+        """Resolve one query's width rung from its dispatch margin
+        (DESIGN.md §14).  Computed on the L2-normalized embedding —
+        the same canonical form the cache key hashes — so positive
+        scalings of one query always resolve the same rung.  Constant 0
+        on a single-rung ladder (every non-adaptive server)."""
+        if len(self.rungs) <= 1:
+            return 0
+        m = frontier.margins(self._cluster_emb, qe[None])
+        return int(frontier.resolve_rung(m, self.margin_cuts)[0])
+
+    def _key(self, qe: np.ndarray, qt: np.ndarray, ns, rung: int,
              epoch: Optional[int] = None) -> tuple:
         """The one cache-key schema; the scheduler passes its
         lock-pinned ``epoch``, the submit pre-check reads the live one.
         The fusion spec joins the key so re-weighting hybrid fusion
         (DESIGN.md §13) can never replay a result fused at another
-        weight."""
+        weight; the resolved width rung joins it so a row computed at
+        one rung can never replay for a query resolved to another —
+        even an ulp-level margin flip at a cut is a miss, never a
+        cross-rung replay (DESIGN.md §14)."""
         e = self._epoch() if epoch is None else epoch
-        return (e, ns, getattr(self.server, "fusion", None),
+        return (e, ns, getattr(self.server, "fusion", None), rung,
                 _canon_qe(qe), qt.tobytes())
 
     def _bucket_for(self, n: int) -> int:
@@ -590,8 +642,21 @@ class ServingRuntime:
                     self._queue.clear()
                 else:
                     dropped = None
-                    n = min(len(self._queue), self.max_batch)
-                    batch = [self._queue.popleft() for _ in range(n)]
+                    # co-rung micro-batching (DESIGN.md §14): a batch
+                    # runs ONE compiled program, so it can only carry
+                    # requests resolved to one width rung.  Take the
+                    # oldest request's rung, sweep the queue for
+                    # co-rung riders (never past max_batch), and put
+                    # the others back in arrival order — FIFO within
+                    # each rung, and the oldest request always runs
+                    # now.  Single-rung ladders sweep everything, which
+                    # is exactly the pre-§14 batching.
+                    rung = self._queue[0].rung
+                    batch, keep = [], []
+                    while self._queue and len(batch) < self.max_batch:
+                        req = self._queue.popleft()
+                        (batch if req.rung == rung else keep).append(req)
+                    self._queue.extendleft(reversed(keep))
             if dropped is not None:
                 # futures resolve outside the locks: a done-callback may
                 # re-enter submit()/close() (both take them)
@@ -621,13 +686,14 @@ class ServingRuntime:
         #                        when a scheduler-side cache hit lands
         #                        next to computed rows)
         err = None
+        rung = batch[0].rung     # co-rung by construction (_run_scheduler)
         with self._serve_lock:
             epoch = self._epoch()
             misses = []
             for req in batch:
                 hit = (None if self.cache is None else
                        self.cache.get(self._key(req.qe, req.qt, req.ns,
-                                                epoch)))
+                                                req.rung, epoch)))
                 if hit is not None:
                     rows[id(req)] = hit
                 else:
@@ -646,7 +712,9 @@ class ServingRuntime:
                         jnp.asarray(qt),
                         filter=self._bitmap(
                             [r.ns for r in misses], bucket,
-                            None if self.n_replicas == 1 else place))
+                            None if self.n_replicas == 1 else place),
+                        widths=(self.rungs[rung]
+                                if len(self.rungs) > 1 else None))
                     self.serve_traces += qexec.trace_count() - before
                     ids = np.asarray(res.doc_ids)
                     scores = np.asarray(res.scores)
@@ -661,7 +729,8 @@ class ServingRuntime:
                                               partial=part)
                         if self.cache is not None:
                             self.cache.put(self._key(req.qe, req.qt,
-                                                     req.ns, epoch), row)
+                                                     req.ns, req.rung,
+                                                     epoch), row)
                         rows[id(req)] = row
                         self.replica_dispatch[i % self.n_replicas] += 1
                     if self.cache is not None:
@@ -669,6 +738,7 @@ class ServingRuntime:
                     self.n_served += len(misses)
                     self.n_batches += 1
                     self.bucket_counts[bucket] += 1
+                    self.rung_dispatch[rung] += len(misses)
                     if hasattr(self.server, "n_served"):
                         self.server.n_served += len(misses)
                 except BaseException as e:   # noqa: BLE001 — the cache
@@ -697,10 +767,23 @@ def render_metrics(stats: dict) -> str:
         lines.append(f'hi2_runtime_bucket_batches_total{{bucket="{b}"}} '
                      f"{stats['bucket_counts'][b]}")
     for b, n in sorted(stats["warm_traces"].items()):
-        lines.append(f'hi2_runtime_bucket_compiles{{bucket="{b}"}} {n}')
+        if isinstance(b, tuple):     # multi-rung ledger: (bucket, rung)
+            lines.append(f'hi2_runtime_bucket_compiles{{bucket="{b[0]}",'
+                         f'rung="{b[1]}"}} {n}')
+        else:
+            lines.append(f'hi2_runtime_bucket_compiles{{bucket="{b}"}} {n}')
     for r, n in sorted(stats["replica_dispatch"].items()):
         lines.append(f'hi2_runtime_replica_dispatch_total{{replica="{r}"}} '
                      f"{n}")
+    # width-rung dispatch + tuned-config info (DESIGN.md §14)
+    kc, k2 = stats["widths"]
+    lines.append(f'hi2_runtime_width_info{{source="{stats["width_source"]}"'
+                 f',kc="{kc}",k2="{k2}"}} 1')
+    lines.append(f"hi2_runtime_rungs {len(stats['rungs'])}")
+    for r, n in sorted(stats["rung_dispatch"].items()):
+        rkc, rk2 = stats["rungs"][int(r)]
+        lines.append(f'hi2_runtime_rung_dispatch_total{{rung="{r}",'
+                     f'kc="{rkc}",k2="{rk2}"}} {n}')
     cache = stats["cache"]
     if cache is not None:
         lines += [

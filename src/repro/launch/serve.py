@@ -82,10 +82,18 @@ from repro.distributed import fault
 from repro.launch import mesh as mesh_mod
 
 
+#: the hand-picked width defaults serving falls back to when neither an
+#: explicit ServeConfig override nor a tuned index record is present
+DEFAULT_KC, DEFAULT_K2 = 6, 8
+
+
 @dataclasses.dataclass
 class ServeConfig:
-    kc: int = 6
-    k2: int = 8
+    # dispatch widths (DESIGN.md §14): None = resolve at server
+    # construction — the index's TunedWidths record when present, else
+    # DEFAULT_KC/DEFAULT_K2; an explicit value always wins
+    kc: Optional[int] = None
+    k2: Optional[int] = None
     top_r: int = 100
     max_batch: int = 64
     use_kernel: bool = False     # fused Pallas scoring (--use-kernel, §11)
@@ -98,11 +106,38 @@ class ServeConfig:
     # dense weight in [0, 1] (sparse gets 1-w).  Needs an index built
     # with sparse=True, otherwise the dense-only fallback applies.
     fusion_weight: Optional[float] = None
+    # per-query adaptive widths (§14): route each query to a rung of
+    # the tuned ladder by its dispatch-margin difficulty signal.  Only
+    # takes effect when the index carries a multi-rung TunedWidths
+    # record and no explicit kc/k2 override is set.
+    adaptive: bool = False
     # auto-compaction watermarks (§8): compact when delta fill or
     # tombstone ratio crosses the threshold; 0 disables (the default —
     # serving never compacts behind the operator's back unless asked)
     compact_fill_watermark: float = 0.0
     compact_tombstone_watermark: float = 0.0
+
+
+def resolve_widths(cfg: ServeConfig, index) -> tuple:
+    """Resolve the serving dispatch widths (DESIGN.md §14).
+
+    Resolution order, per field: an explicit ``ServeConfig`` value
+    wins, else the index's :class:`repro.core.exec.TunedWidths` record,
+    else :data:`DEFAULT_KC`/:data:`DEFAULT_K2`.  Returns
+    ``(kc, k2, source)`` where ``source`` is ``"explicit"`` (any field
+    overridden), ``"tuned"`` or ``"default"`` — adaptive serving only
+    engages when the source is ``"tuned"`` (an operator pinning widths
+    pins them for every query).
+    """
+    tuned = getattr(index, "tuned", None)
+    fb_kc = tuned.kc if tuned is not None else DEFAULT_KC
+    fb_k2 = tuned.k2 if tuned is not None else DEFAULT_K2
+    if cfg.kc is not None or cfg.k2 is not None:
+        return (int(cfg.kc if cfg.kc is not None else fb_kc),
+                int(cfg.k2 if cfg.k2 is not None else fb_k2), "explicit")
+    if tuned is not None:
+        return int(tuned.kc), int(tuned.k2), "tuned"
+    return DEFAULT_KC, DEFAULT_K2, "default"
 
 
 class Server:
@@ -112,6 +147,7 @@ class Server:
     def __init__(self, index: hi.HybridIndex, cfg: ServeConfig = ServeConfig()):
         self.index = index
         self.cfg = cfg
+        self._resolve_widths(index)
         # hi.search is already jitted (static kc/k2/top_r/use_kernel/
         # fusion) — dispatch through a bound method instead of wrapping
         # in a second jax.jit, which would pay nested-jit dispatch on
@@ -120,8 +156,17 @@ class Server:
         self._search = self._base_search
         self.n_served = 0
 
-    def _base_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
-        return hi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+    def _resolve_widths(self, index) -> None:
+        """Resolve (kc, k2) once at construction (DESIGN.md §14) —
+        stable across mutations/compactions, like the codec spec."""
+        self.tuned = getattr(index, "tuned", None)
+        self.kc, self.k2, self.width_source = resolve_widths(self.cfg,
+                                                             index)
+
+    def _base_search(self, idx, qe, qt, filter=None,
+                     widths=None) -> hi.SearchResult:
+        kc, k2 = widths if widths is not None else (self.kc, self.k2)
+        return hi.search(idx, qe, qt, kc=kc, k2=k2,
                          top_r=self.cfg.top_r,
                          use_kernel=self.cfg.use_kernel,
                          filter=filter, fusion=self.fusion)
@@ -144,6 +189,30 @@ class Server:
         batch quantum: every micro-batch bucket must divide into equal
         per-replica row blocks.  1 on every non-mesh layout."""
         return max(1, int(self.cfg.data_parallel))
+
+    @property
+    def _adaptive_ladder(self) -> bool:
+        t = self.tuned
+        return (self.cfg.adaptive and t is not None and len(t.rungs) > 1
+                and self.width_source != "explicit")
+
+    @property
+    def rungs(self) -> tuple:
+        """The static width ladder adaptive serving compiles, narrow →
+        wide (DESIGN.md §14).  A single rung — the resolved (kc, k2) —
+        unless adaptivity is on, the index carries a multi-rung tuned
+        record, and no explicit override pinned the widths."""
+        if self._adaptive_ladder:
+            return tuple((int(kc), int(k2)) for kc, k2 in self.tuned.rungs)
+        return ((self.kc, self.k2),)
+
+    @property
+    def margin_cuts(self) -> tuple:
+        """Descending margin thresholds between the rungs (one fewer
+        than :attr:`rungs`); empty in the single-rung case."""
+        if self._adaptive_ladder:
+            return tuple(float(c) for c in self.tuned.margin_cuts)
+        return ()
 
     @property
     def fusion(self) -> Optional[qexec.FusionSpec]:
@@ -226,14 +295,19 @@ class ShardedServer(Server):
                  cfg: ServeConfig = ServeConfig(),
                  mesh=None):
         self.cfg = cfg
+        # widths resolve from the input index: the sharded form drops
+        # the tuned record (it is per-index metadata, not per-shard)
+        self._resolve_widths(index)
         self.mesh = mesh or shi.make_shard_mesh(cfg.n_shards)
         self.index = shi.device_put(shi.partition(index, cfg.n_shards),
                                     self.mesh)
         self._search = self._sharded_search
         self.n_served = 0
 
-    def _sharded_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
-        return shi.search(idx, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+    def _sharded_search(self, idx, qe, qt, filter=None,
+                        widths=None) -> hi.SearchResult:
+        kc, k2 = widths if widths is not None else (self.kc, self.k2)
+        return shi.search(idx, qe, qt, kc=kc, k2=k2,
                           top_r=self.cfg.top_r, mesh=self.mesh,
                           use_kernel=self.cfg.use_kernel, filter=filter,
                           fusion=self.fusion)
@@ -266,6 +340,7 @@ class MeshServer(Server):
                 f"max_batch {cfg.max_batch} must divide over "
                 f"{data} data-axis slices")
         self.cfg = cfg
+        self._resolve_widths(index)
         self.data, self.model = data, model
         self.data_axis = "data"
         self.mesh = mesh or mesh_mod.make_serving_mesh(data, model)
@@ -292,17 +367,19 @@ class MeshServer(Server):
     def partial(self) -> bool:
         return self.health.degraded
 
-    def _mesh_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
+    def _mesh_search(self, idx, qe, qt, filter=None,
+                     widths=None) -> hi.SearchResult:
+        kc, k2 = widths if widths is not None else (self.kc, self.k2)
         da = self.data_axis if self.data > 1 else None
         if self._survivor is None:
-            return shi.search(self._full, qe, qt, kc=self.cfg.kc,
-                              k2=self.cfg.k2, top_r=self.cfg.top_r,
+            return shi.search(self._full, qe, qt, kc=kc,
+                              k2=k2, top_r=self.cfg.top_r,
                               mesh=self.mesh,
                               use_kernel=self.cfg.use_kernel,
                               filter=filter, data_axis=da,
                               fusion=self.fusion)
         sub, sub_mesh, offsets = self._survivor
-        res = shi.search(sub, qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+        res = shi.search(sub, qe, qt, kc=kc, k2=k2,
                          top_r=self.cfg.top_r, mesh=sub_mesh,
                          use_kernel=self.cfg.use_kernel, filter=filter,
                          data_axis=da, shard_offsets=offsets,
@@ -372,12 +449,15 @@ class MutableServer(Server):
                  cfg: ServeConfig = ServeConfig()):
         self.mut = mut
         self.cfg = cfg
+        self._resolve_widths(mut.base)
         self.index = mut.base    # for the padded-query plumbing only
         self._search = self._mut_search
         self.n_served = 0
 
-    def _mut_search(self, idx, qe, qt, filter=None) -> hi.SearchResult:
-        return self.mut.search(qe, qt, kc=self.cfg.kc, k2=self.cfg.k2,
+    def _mut_search(self, idx, qe, qt, filter=None,
+                    widths=None) -> hi.SearchResult:
+        kc, k2 = widths if widths is not None else (self.kc, self.k2)
+        return self.mut.search(qe, qt, kc=kc, k2=k2,
                                top_r=self.cfg.top_r,
                                use_kernel=self.cfg.use_kernel,
                                filter=filter, fusion=self.fusion)
@@ -444,6 +524,7 @@ class ShardedMutableServer(MutableServer):
             smut = seg.ShardedMutableIndex(mut, cfg.n_shards, mesh)
         self.mut = smut
         self.cfg = cfg
+        self._resolve_widths(mut.base)
         self.index = smut.mut.base
         self._search = self._mut_search
         self.n_served = 0
@@ -482,6 +563,18 @@ def main(argv: Optional[list] = None) -> None:
                     metavar="|".join(codecs.registered()),
                     help="any registered codec spec, e.g. sq8 or refine:pq:4")
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--kc", type=int, default=None,
+                    help="clusters probed per query; default = the "
+                         "index's tuned record if present, else "
+                         f"{DEFAULT_KC} (DESIGN.md §14)")
+    ap.add_argument("--k2", type=int, default=None,
+                    help="term lists probed per query; default = the "
+                         "index's tuned record if present, else "
+                         f"{DEFAULT_K2}")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="per-query adaptive widths over the tuned rung "
+                         "ladder (needs an index tuned by "
+                         "repro.launch.tune; DESIGN.md §14)")
     ap.add_argument("--mutable", action="store_true",
                     help="serve a mutable index and demo live "
                          "add/delete/compact (DESIGN.md §8)")
@@ -526,7 +619,8 @@ def main(argv: Optional[list] = None) -> None:
                         pq_m=8, pq_k=256, cluster_capacity=192,
                         term_capacity=96, kmeans_iters=8,
                         sparse=args.fusion_weight is not None)
-    cfg = ServeConfig(max_batch=args.batch, n_shards=args.shards,
+    cfg = ServeConfig(kc=args.kc, k2=args.k2, adaptive=args.adaptive,
+                      max_batch=args.batch, n_shards=args.shards,
                       use_kernel=args.use_kernel,
                       mutable=args.mutable,
                       delta_capacity=args.delta_capacity,

@@ -580,6 +580,114 @@ def test_auto_compaction_tombstone_watermark():
     assert (ids[ids >= 0] < server.mut.n_base).all()
 
 
+# --------------------------------------------------------------------------
+# adaptive width rungs (DESIGN.md §14): compile ledger, cache keys, metrics
+# --------------------------------------------------------------------------
+
+def _adaptive_runtime(c, max_batch=8, **cfg):
+    """A server over a hand-calibrated 2-rung ladder (median margin
+    cut, so both rungs see traffic) and its warmed runtime."""
+    from repro.core.exec import frontier
+    idx = hi.build(jax.random.key(0), jnp.asarray(c.doc_emb),
+                   jnp.asarray(c.doc_tokens), c.vocab_size, **_KW)
+    m = frontier.margins(idx.cluster_sel.embeddings, c.query_emb)
+    tuned = frontier.TunedWidths(
+        kc=4, k2=4, refine_mult=None, recall_target=0.9, recall=0.9,
+        cost=int(hi.candidate_budget(idx, 4, 4)),
+        rungs=((2, 2), (4, 4)), margin_cuts=(float(np.median(m)),))
+    server = serve.make_server(hi.with_tuned(idx, tuned),
+                               serve.ServeConfig(adaptive=True,
+                                                 max_batch=max_batch))
+    rt = rt_mod.ServingRuntime(server, rt_mod.RuntimeConfig(**cfg))
+    rt.warmup(c.query_emb.shape[1], c.query_tokens.shape[1])
+    return server, rt
+
+
+def test_adaptive_one_compile_per_bucket_rung_and_bit_identity():
+    """Adaptive serving: warmup compiles exactly one program per
+    (bucket, rung), serving compiles nothing, and every row equals the
+    direct search at its resolved rung's widths."""
+    from repro.core.exec import frontier
+    c = _corpus()
+    server, rt = _adaptive_runtime(c)
+    assert server.width_source == "tuned"
+    assert rt.rungs == ((2, 2), (4, 4))
+    # the ledger is keyed (bucket, rung) in multi-rung mode and covers
+    # the full product exactly once
+    assert set(rt.warm_traces) == {(b, r) for b in rt.buckets
+                                   for r in range(2)}
+    assert all(n <= 1 for n in rt.warm_traces.values()), rt.warm_traces
+    with rt:
+        futures = [rt.submit(c.query_emb[i], c.query_tokens[i])
+                   for i in range(24)]
+        rows = [f.result(timeout=60) for f in futures]
+        assert rt.serve_traces == 0
+        # both rungs actually dispatched (median cut splits the sample)
+        assert all(rt.rung_dispatch[r] > 0 for r in range(2)), \
+            rt.rung_dispatch
+        rung = frontier.resolve_rung(
+            frontier.margins(server.index.cluster_sel.embeddings,
+                             c.query_emb[:24]), rt.margin_cuts)
+        qe, qt = jnp.asarray(c.query_emb[:24]), jnp.asarray(
+            c.query_tokens[:24])
+        for r, (kc, k2) in enumerate(rt.rungs):
+            ref = hi.search(server.index, qe, qt, kc=kc, k2=k2,
+                            top_r=server.cfg.top_r)
+            for i in np.nonzero(rung == r)[0]:
+                _rows_equal(rows[i], ref, i)
+
+
+def test_adaptive_cache_key_separates_rungs_and_replays_within():
+    c = _corpus()
+    server, rt = _adaptive_runtime(c, cache_size=64)
+    with rt:
+        q0 = np.asarray(c.query_emb[0], np.float32)
+        t0 = np.asarray(c.query_tokens[0], np.int32)
+        # the key is structurally distinct across rungs: even a margin
+        # flip at the cut boundary can only MISS, never replay a row
+        # computed at the other rung's widths
+        assert rt._key(q0, t0, None, 0) != rt._key(q0, t0, None, 1)
+        # within a rung the normalized-key replay still works
+        first = rt.submit(q0, t0).result(timeout=60)
+        hits0 = rt.cache.hits
+        again = rt.submit(np.float32(2.0) * q0, t0).result(timeout=60)
+        assert rt.cache.hits == hits0 + 1
+        np.testing.assert_array_equal(np.asarray(first.doc_ids),
+                                      np.asarray(again.doc_ids))
+
+
+def test_single_rung_ledger_and_metrics_keep_baseline_shape():
+    """Without a multi-rung ladder the warm ledger keys stay plain
+    bucket ints and the bucket_compiles metric keeps its pre-§14 label
+    shape — the committed BENCH_serving.json baseline depends on it."""
+    c = _corpus()
+    server = _plain_server(c, max_batch=8)
+    with _runtime(server, c) as rt:
+        assert rt.rungs == ((server.kc, server.k2),)
+        assert all(isinstance(k, int) for k in rt.warm_traces)
+        body = rt_mod.render_metrics(rt.stats())
+        assert 'hi2_runtime_bucket_compiles{bucket="2"} ' in body
+        assert 'rung=' not in body.split("rung_dispatch")[0].split(
+            "width_info")[0]
+
+
+def test_metrics_expose_width_info_and_rung_dispatch():
+    c = _corpus()
+    server, rt = _adaptive_runtime(c)
+    with rt:
+        rt.query(c.query_emb[:8], c.query_tokens[:8])
+        body = rt_mod.render_metrics(rt.stats())
+        assert 'hi2_runtime_width_info{source="tuned",kc="4",k2="4"} 1' \
+            in body
+        assert "hi2_runtime_rungs 2" in body
+        assert 'hi2_runtime_rung_dispatch_total{rung="0",kc="2",k2="2"} ' \
+            in body
+        assert 'hi2_runtime_rung_dispatch_total{rung="1",kc="4",k2="4"} ' \
+            in body
+        # multi-rung ledger lines carry both labels
+        assert 'hi2_runtime_bucket_compiles{bucket="2",rung="0"} ' in body
+
+
 def test_auto_compaction_through_runtime_rewarms():
     """A watermark compaction fired by a runtime add() swaps the base
     index; the runtime must re-warm its buckets (off the request path)
