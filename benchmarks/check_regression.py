@@ -29,7 +29,7 @@ DEFAULT_FILES = ("BENCH_codec.json", "sharded_search.json",
                  "BENCH_streaming.json", "BENCH_filtered.json",
                  "BENCH_serving.json", "BENCH_kernels.json",
                  "BENCH_mesh.json", "BENCH_hybrid.json",
-                 "BENCH_autotune.json")
+                 "BENCH_autotune.json", "BENCH_sup.json")
 
 _HIGHER_BETTER = ("qps", "speedup")
 _LOWER_BETTER = ("us_per_batch", "us_per_call", "_us", "us", "seconds",

@@ -215,6 +215,24 @@ def _autotune() -> None:
           f"identical={rt['per_rung_bit_identical']}", flush=True)
 
 
+def _sup_distill() -> None:
+    rep = _subprocess_json("sup_distill", ["--smoke", "--check"])
+    t = rep["trajectory"]
+    print(f"sup_distill/train,0,steps={t['n_steps']};"
+          f"loss={t['loss_first']:.4f}->{t['loss_last']:.4f};"
+          f"improving={t['frac_improving_windows']:.2f}", flush=True)
+    r = rep["top_r"]
+    for p in rep["operating_points"]:
+        print(f"sup_distill/kc{p['kc']}k2{p['k2']},0,"
+              f"cost={p['cost_sup']};R@{r}_unsup={p['recall_unsup']:.4f};"
+              f"R@{r}_sup={p['recall_sup']:.4f}", flush=True)
+    life = rep["variants"]["mutable_lifecycle"]
+    print(f"sup_distill/variants,0,"
+          f"wins={rep['sup_wins']}/{rep['n_operating_points']};"
+          f"roundtrip={rep['roundtrip']['planes_bit_identical']};"
+          f"compact={life['compact_equals_scratch']}", flush=True)
+
+
 def _kernel_bench() -> None:
     rep = _subprocess_json("kernel_bench", ["--smoke", "--check"])
     for name in ("pq_adc", "sq8_dot", "assign_topk"):
@@ -237,6 +255,7 @@ DISPATCH = {
     "fig3_tradeoff": _fig3,
     "fig4_ablation": _fig4,
     "sharded_search": _sharded_search,
+    "sup_distill": _sup_distill,
     "streaming_updates": _streaming_updates,
     "filtered_search": _filtered_search,
     "hybrid_fusion": _hybrid_fusion,
@@ -254,15 +273,21 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     names = discovered()
+    # collect EVERY dispatch-table problem before exiting, so one run
+    # surfaces the full repair list instead of one entry at a time
+    problems = []
     missing = sorted(set(names) - set(DISPATCH))
     if missing:
-        sys.exit(f"benchmarks without a DISPATCH entry in benchmarks/run.py:"
-                 f" {', '.join(missing)} — add one so `python -m "
-                 "benchmarks.run` reproduces the full suite")
+        problems.append(
+            f"benchmarks without a DISPATCH entry in benchmarks/run.py:"
+            f" {', '.join(missing)} — add one so `python -m "
+            "benchmarks.run` reproduces the full suite")
     stale = sorted(set(DISPATCH) - set(names))
     if stale:
-        sys.exit(f"DISPATCH entries without a benchmarks/*.py file: "
-                 f"{', '.join(stale)}")
+        problems.append(f"DISPATCH entries without a benchmarks/*.py "
+                        f"file: {', '.join(stale)}")
+    if problems:
+        sys.exit("; ".join(problems))
     if args.list:
         for n in names:
             print(n)

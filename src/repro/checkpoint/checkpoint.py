@@ -178,7 +178,8 @@ def restore_mutable(path: str, like: Any) -> Any:
             f"checkpoint at {path} is not a mutable-index checkpoint "
             "(no 'mutable' manifest entry); use restore_index")
     tree = restore(path, like.state_tree())
-    return type(like).from_state(tree, extra)
+    return type(like).from_state(tree, extra,
+                                 selectors=getattr(like, "selectors", None))
 
 
 def restore_resharded(path: str, like: PyTree, shardings: PyTree) -> PyTree:

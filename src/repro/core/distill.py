@@ -7,7 +7,7 @@ Trainable parameters
 Objective, per query Q with candidate docs D (positive + hard negatives
 + in-batch negatives):
 
-    L = KL(Θ ∥ CS) + KL(Θ ∥ TS) + L_commit
+    L = KL(Θ ∥ CS) + KL(Θ ∥ TS) + L_commit [+ λ·KL(Θ ∥ CS+TS)]
     Θ  = softmax(⟨e_Q, e_D⟩)                         Eq. 10 (teacher)
     CS = softmax(⟨e_Q, e_{C_φ(D)}⟩)                  Eq. 11
     TS = softmax(⟨s_Q, s_D⟩)                         Eq. 12
@@ -15,17 +15,43 @@ Objective, per query Q with candidate docs D (positive + hard negatives
       paper writes the log-softmax; we minimize its negative, the usual
       VQ-VAE commitment form it cites)
 
+The optional λ term distills through the *refine stage* (DESIGN.md §15):
+``CS + TS`` is the log-domain posterior of a document reaching the
+refine frontier through either channel, so matching it to the teacher
+trains the two selectors *jointly* on the candidates that the codec's
+refine stage will actually re-rank — not just their marginal posteriors.
+
+Θ is always treated as a constant (``stop_gradient``): the teacher is an
+off-the-shelf frozen embedding model (Eq. 10), so no gradient may leak
+into the loss through it — asserted by tests/test_distill.py via the
+``teacher`` override seam of :func:`loss_fn`.
+
 φ(D) is frozen after KMeans init (§4.3). Teacher embeddings are
 off-the-shelf (Eq. 10) — any embedding model; our experiments use the
 synthetic corpus's generating encoder.
+
+Negative candidates (the ``D`` axis of a batch) come from three mines of
+increasing hardness (DESIGN.md §15):
+
+  · uniform (:func:`sample_candidates`) — unit-test fallback;
+  · topic-matched (:func:`repro.data.synthetic.hard_negatives`) — the
+    synthetic analogue of the paper's BM25 top-200;
+  · index-mined (:func:`mine_hard_negatives`) — the top-scoring
+    non-relevant docs of an already-built (unsupervised) index: exactly
+    the candidates the selectors currently confuse with the positive;
+
+plus per-batch **in-batch negatives** (:func:`add_in_batch_negatives`):
+positives of the other queries in the same batch row-sampled into each
+row's candidate set.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import term_selector as ts_mod
 
@@ -54,16 +80,34 @@ def kl(p_logits: Array, q_logits: Array) -> Array:
     return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("encoder_apply", "vocab_size"))
+def teacher_scores(batch: DistillBatch) -> Array:
+    """Θ's logits (Eq. 10): exact inner products of the frozen teacher
+    embeddings over the candidate axis, (B, D) f32."""
+    return jnp.einsum("bh,bdh->bd", batch.query_emb.astype(jnp.float32),
+                      batch.doc_emb.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("encoder_apply", "vocab_size",
+                                             "refine_weight"))
 def loss_fn(params: DistillParams, batch: DistillBatch,
-            encoder_apply: Callable[..., Array], vocab_size: int
+            encoder_apply: Callable[..., Array], vocab_size: int,
+            refine_weight: float = 0.0,
+            teacher: Optional[Array] = None
             ) -> tuple[Array, dict[str, Array]]:
-    """Eq. 9 + Eq. 13. ``encoder_apply(params.encoder, tokens) -> (B,L,h)``."""
+    """Eq. 9 + Eq. 13 (+ the §15 refine-stage KL when ``refine_weight``
+    > 0). ``encoder_apply(params.encoder, tokens) -> (B,L,h)``.
+
+    ``teacher`` optionally overrides the Eq. 10 logits — the seam for
+    distilling from scores computed outside this function (e.g. codec
+    refine scores over a wider frontier).  Either way the teacher is
+    wrapped in ``stop_gradient``: it is frozen by definition.
+    """
     b, d, ld = batch.doc_tokens.shape
 
     # --- teacher (Eq. 10) -------------------------------------------------
-    teacher = jnp.einsum("bh,bdh->bd", batch.query_emb.astype(jnp.float32),
-                         batch.doc_emb.astype(jnp.float32))
+    if teacher is None:
+        teacher = teacher_scores(batch)
+    teacher = jax.lax.stop_gradient(teacher)
 
     # --- cluster-selector student (Eq. 11) --------------------------------
     c_emb = params.cluster_embeddings[batch.doc_assign]        # (B, D, h)
@@ -96,11 +140,19 @@ def loss_fn(params: DistillParams, batch: DistillBatch,
     l_commit = -jnp.take_along_axis(
         logp, batch.doc_assign[..., None], axis=-1).mean()
 
-    total = l_cs + l_ts + l_commit
+    # refine-stage distillation (DESIGN.md §15): the union frontier's
+    # routing posterior is the two channels' combined log-evidence
+    l_refine = kl(teacher, cs_logits + ts_logits).mean()
+
+    total = l_cs + l_ts + l_commit + refine_weight * l_refine
     aux = {"loss": total, "kl_cluster": l_cs, "kl_term": l_ts,
-           "commit": l_commit}
+           "commit": l_commit, "kl_refine": l_refine}
     return total, aux
 
+
+# --------------------------------------------------------------------------
+# negative mining
+# --------------------------------------------------------------------------
 
 def sample_candidates(key: Array, positives: Array, n_docs: int,
                       n_negatives: int) -> Array:
@@ -113,3 +165,58 @@ def sample_candidates(key: Array, positives: Array, n_docs: int,
     b = positives.shape[0]
     negs = jax.random.randint(key, (b, n_negatives), 0, n_docs)
     return jnp.concatenate([positives[:, None], negs], axis=-1)
+
+
+def mine_hard_negatives(index, query_emb, query_tokens, positives,
+                        n_neg: int, *, kc: int = 6, k2: int = 8,
+                        seed: int = 0) -> np.ndarray:
+    """Top-scoring non-relevant docs per query, mined from a built index
+    (the HI²_unsup baseline in practice) — (n_queries, n_neg) i32.
+
+    These are the hardest negatives available without a model: documents
+    the current retrieval stack *already ranks above or near the
+    positive*, so the KL pushes the selectors apart exactly where they
+    are wrong (DESIGN.md §15).  Rows whose search frontier is too
+    shallow (pads, or all candidates relevant) are topped up with
+    uniform draws so the shape stays fixed.
+    """
+    from repro.core import hybrid_index as hi
+
+    positives = np.asarray(positives).reshape(-1)
+    res = hi.search(index, jnp.asarray(query_emb), jnp.asarray(query_tokens),
+                    kc=kc, k2=k2, top_r=n_neg + 8)
+    ids = np.asarray(res.doc_ids)
+    rng = np.random.default_rng(seed)
+    out = np.empty((ids.shape[0], n_neg), np.int32)
+    for i in range(ids.shape[0]):
+        row = ids[i]
+        row = row[(row >= 0) & (row != positives[i])][:n_neg]
+        if row.shape[0] < n_neg:
+            fill = rng.integers(0, index.n_docs, n_neg - row.shape[0])
+            row = np.concatenate([row, fill])
+        out[i] = row
+    return out
+
+
+def add_in_batch_negatives(rng: np.random.Generator, candidates: np.ndarray,
+                           positives: np.ndarray,
+                           n_inbatch: int) -> np.ndarray:
+    """Append ``n_inbatch`` in-batch negatives to each row's candidates.
+
+    Row b gets positives of *other* rows in the same batch — free hard
+    negatives under the teacher (they score high for their own query,
+    so the softmax must learn to separate them).  ``candidates`` is
+    (B, D) with column 0 the row's own positive; returns
+    (B, D + n_inbatch).
+    """
+    b = candidates.shape[0]
+    if n_inbatch <= 0:
+        return candidates
+    if b < 2:
+        raise ValueError("in-batch negatives need a batch of >= 2 queries")
+    positives = np.asarray(positives).reshape(-1)
+    # sample other-row indices: draw from [0, b-1) and skip self by shift
+    draw = rng.integers(0, b - 1, size=(b, n_inbatch))
+    rows = np.arange(b)[:, None]
+    other = np.where(draw >= rows, draw + 1, draw)
+    return np.concatenate([candidates, positives[other]], axis=1)

@@ -200,13 +200,14 @@ class MutableHybridIndex:
                  build_kwargs: dict, delta_capacity: int,
                  delta_cluster_capacity: int, delta_term_capacity: int,
                  corpus_emb: np.ndarray, corpus_tokens: np.ndarray,
-                 corpus_ns: Optional[np.ndarray] = None):
+                 corpus_ns: Optional[np.ndarray] = None, selectors=None):
         if delta_capacity < 1:
             raise ValueError("delta_capacity must be >= 1")
         self.base = base
         self.vocab_size = int(vocab_size)
         self.key = key
         self.build_kwargs = dict(build_kwargs)
+        self.selectors = selectors
         self.delta_capacity = int(delta_capacity)
         self.delta_cluster_capacity = int(delta_cluster_capacity)
         self.delta_term_capacity = int(delta_term_capacity)
@@ -255,7 +256,7 @@ class MutableHybridIndex:
                delta_capacity: int = 1024,
                delta_cluster_capacity: Optional[int] = None,
                delta_term_capacity: Optional[int] = None,
-               doc_namespaces=None,
+               doc_namespaces=None, selectors=None,
                **build_kwargs) -> "MutableHybridIndex":
         """Build the base index and wrap it with an empty delta segment.
 
@@ -265,6 +266,15 @@ class MutableHybridIndex:
         (ints/strings/bools), not pre-trained selector overrides.
         ``doc_namespaces`` enables filtered search; streamed docs carry
         the ``namespaces=`` argument of :meth:`add_docs`.
+
+        ``selectors`` optionally supplies *supervised* selectors (a
+        :class:`repro.launch.train.SupSelectors`): an object with
+        ``build_inputs(doc_emb, doc_tokens, vocab_size)`` returning the
+        selector overrides for :func:`hi.build` and
+        ``position_scores(doc_tokens)`` scoring streamed docs.  Because
+        the object is corpus-independent, ``compact()`` can replay the
+        build over the survivor set — unlike raw selector arrays, which
+        stay rejected below.
         """
         for k in ("cluster_sel", "doc_assign", "term_sel",
                   "term_pos_scores"):
@@ -272,14 +282,26 @@ class MutableHybridIndex:
                 raise ValueError(
                     f"build_kwargs[{k!r}] is not supported: compact() "
                     "replays the build from scratch and cannot persist "
-                    "pre-trained selector state")
+                    "raw selector arrays — pass a corpus-independent "
+                    "``selectors=`` object instead")
         doc_emb = np.asarray(doc_emb, np.float32)
         doc_tokens = np.asarray(doc_tokens, np.int32)
         if doc_namespaces is not None:
             doc_namespaces = np.asarray(doc_namespaces, np.int32)
+        sel_kwargs = {}
+        if selectors is not None:
+            sel_kwargs = selectors.build_inputs(
+                jnp.asarray(doc_emb), jnp.asarray(doc_tokens), vocab_size)
+            # list count is fixed by the trained selector, not the caller
+            n_sel = int(sel_kwargs["cluster_sel"].embeddings.shape[0])
+            if build_kwargs.setdefault("n_clusters", n_sel) != n_sel:
+                raise ValueError(
+                    f"n_clusters={build_kwargs['n_clusters']} conflicts "
+                    f"with the supervised selectors' {n_sel} clusters; "
+                    "omit n_clusters to derive it")
         base = hi.build(key, jnp.asarray(doc_emb), jnp.asarray(doc_tokens),
                         vocab_size, doc_namespaces=doc_namespaces,
-                        **build_kwargs)
+                        **sel_kwargs, **build_kwargs)
         n_clusters = base.cluster_lists.n_lists
         k1 = int(build_kwargs["k1_terms"])
         if delta_cluster_capacity is None:
@@ -295,7 +317,7 @@ class MutableHybridIndex:
                    delta_cluster_capacity=delta_cluster_capacity,
                    delta_term_capacity=delta_term_capacity,
                    corpus_emb=doc_emb, corpus_tokens=doc_tokens,
-                   corpus_ns=doc_namespaces)
+                   corpus_ns=doc_namespaces, selectors=selectors)
 
     # --- views -----------------------------------------------------------
     @property
@@ -376,7 +398,8 @@ class MutableHybridIndex:
 
         Assignment uses the *frozen* base state: cluster = argmax against
         the base selector, salient terms = BM25 under the base corpus
-        statistics (df/avgdl/s̄ refresh only at ``compact()``).
+        statistics (df/avgdl/s̄ refresh only at ``compact()``) — or, on a
+        supervised index, the frozen ``selectors`` term scorer.
         ``namespaces`` ((n_new,) int ids or a scalar) is required on a
         filtered index and rejected on an unfiltered one.  Raises
         :class:`DeltaFull` when the segment has no free slots.
@@ -417,7 +440,10 @@ class MutableHybridIndex:
         a_scores = np.asarray(cs_mod.scores(self.base.cluster_sel,
                                             jnp.asarray(emb)))
         a_scores = a_scores[np.arange(n_new), assign]
-        pos = bm25.score_positions(jnp.asarray(tokens), self._stats)
+        if self.selectors is not None:
+            pos = self.selectors.position_scores(jnp.asarray(tokens))
+        else:
+            pos = bm25.score_positions(jnp.asarray(tokens), self._stats)
         k1 = int(self.build_kwargs["k1_terms"])
         t_ids, t_scores = bm25.top_terms(jnp.asarray(tokens), pos, k1)
         t_ids, t_scores = np.asarray(t_ids), np.asarray(t_scores)
@@ -548,6 +574,7 @@ class MutableHybridIndex:
             delta_cluster_capacity=self.delta_cluster_capacity,
             delta_term_capacity=self.delta_term_capacity,
             doc_namespaces=self.surviving_namespaces(),
+            selectors=self.selectors,
             **self.build_kwargs)
         # compaction renumbers survivors, so epoch-keyed caches must not
         # serve pre-compaction entries against the new index
@@ -610,13 +637,27 @@ class MutableHybridIndex:
                 "vocab_size": self.vocab_size,
                 "build_kwargs": self.build_kwargs,
                 "filtered": self.filtered,
+                "sup_selectors": self.selectors is not None,
                 "dropped_postings": self.dropped_postings}
 
     @classmethod
-    def from_state(cls, tree: dict, extra: dict) -> "MutableHybridIndex":
+    def from_state(cls, tree: dict, extra: dict,
+                   selectors=None) -> "MutableHybridIndex":
         """Rebuild a mutable index from a restored :meth:`state_tree`
-        (leaves may be jnp arrays) + its :meth:`state_extra`."""
+        (leaves may be jnp arrays) + its :meth:`state_extra`.
+
+        Supervised selector *parameters* are not part of the state tree
+        (they belong to the training checkpoint, not the index): a
+        checkpoint written from a supervised index must be restored with
+        the same ``selectors=`` object, or add/compact semantics would
+        silently fall back to BM25.
+        """
         m = extra["mutable"] if "mutable" in extra else extra
+        if m.get("sup_selectors") and selectors is None:
+            raise ValueError(
+                "checkpoint was written from a supervised index; restore "
+                "needs the matching selectors= (e.g. a `like` index that "
+                "carries .selectors)")
         corpus_ns = tree["corpus"].get("ns")
         out = cls(tree["base"], vocab_size=int(m["vocab_size"]),
                   key=jax.random.wrap_key_data(jnp.asarray(tree["key"])),
@@ -627,7 +668,8 @@ class MutableHybridIndex:
                   corpus_emb=np.asarray(tree["corpus"]["emb"]),
                   corpus_tokens=np.asarray(tree["corpus"]["tokens"]),
                   corpus_ns=(None if corpus_ns is None
-                             else np.asarray(corpus_ns)))
+                             else np.asarray(corpus_ns)),
+                  selectors=selectors)
         d = tree["delta"]
         # np.array (not asarray): restored leaves may be jnp arrays whose
         # numpy views are read-only, and all of this state is mutated

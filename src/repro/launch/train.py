@@ -6,8 +6,9 @@ Two layers:
     gradient compression);
   · ``train_hi2_sup`` — the paper's joint optimization (§4.3): learns
     cluster embeddings + the term-scorer encoder/MLP by KL distillation
-    from a teacher embedding model, with the commitment loss, then
-    assembles the HI²_sup index.
+    from a teacher embedding model, then assembles the HI²_sup index
+    (``build_sup_index`` for the immutable layouts, ``SupSelectors``
+    for the mutable ones — DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -26,7 +27,7 @@ from repro.data import synthetic
 from repro.distributed.fault import StragglerMonitor
 from repro.models import transformer as tfm
 from repro.optim import (AdamConfig, adam_init, adam_update,
-                         clip_by_global_norm, warmup_cosine)
+                        clip_by_global_norm, warmup_cosine)
 
 
 # --------------------------------------------------------------------------
@@ -37,9 +38,16 @@ def fit(loss_fn: Callable, params: Any, batches: Callable[[int], Any],
         n_steps: int, *, adam: AdamConfig = AdamConfig(lr=1e-3),
         clip_norm: float = 1.0, ckpt_dir: Optional[str] = None,
         save_every: int = 100, log_every: int = 20,
-        schedule=None) -> tuple[Any, list[float]]:
+        schedule=None, monitor: Optional[StragglerMonitor] = None
+        ) -> tuple[Any, list[float]]:
     """Generic train loop: value_and_grad + clip + AdamW (+ checkpointing,
-    resume, straggler monitoring)."""
+    resume, straggler monitoring).
+
+    The monitor is an *observer*: it times steps and counts strikes but
+    sits entirely outside the numeric path, so running with any monitor
+    (or none) leaves the optimizer trajectory bit-identical — asserted
+    by tests/test_distill.py.
+    """
     schedule = schedule or (lambda s: 1.0)
     state = adam_init(params)
     start = 0
@@ -58,7 +66,7 @@ def fit(loss_fn: Callable, params: Any, batches: Callable[[int], Any],
         p, s = adam_update(grads, s, p, adam, lr_scale=lr_scale)
         return p, s, loss, gnorm
 
-    monitor = StragglerMonitor()
+    monitor = monitor or StragglerMonitor()
     losses = []
     for i in range(start, n_steps):
         monitor.step_start()
@@ -75,7 +83,7 @@ def fit(loss_fn: Callable, params: Any, batches: Callable[[int], Any],
 
 
 # --------------------------------------------------------------------------
-# HI²_sup distillation (paper §4.3)
+# HI²_sup distillation (paper §4.3, DESIGN.md §15)
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -87,14 +95,30 @@ class SupTrainConfig:
     n_steps: int = 300
     batch_queries: int = 32
     n_negatives: int = 7
+    n_inbatch: int = 0          # extra in-batch negatives per row (§15)
+    refine_weight: float = 0.0  # λ of the refine-stage KL (§15)
     lr: float = 2e-3
+    warmup_steps: int = 20      # linear warmup, then cosine to n_steps
     kmeans_iters: int = 10
     seed: int = 0
 
 
 def train_hi2_sup(corpus: synthetic.Corpus, cfg: SupTrainConfig,
-                  log_every: int = 50):
-    """Returns (DistillParams, encoder cfg, φ assignments, losses)."""
+                  log_every: int = 50, *,
+                  negatives: Optional[np.ndarray] = None,
+                  ckpt_dir: Optional[str] = None):
+    """Returns (DistillParams, encoder cfg, φ assignments, losses).
+
+    ``negatives`` optionally overrides the per-query hard-negative pool
+    ((n_queries, >=cfg.n_negatives) doc ids) — the §15 recipe mines it
+    from the HI²_unsup index (:func:`repro.core.distill.
+    mine_hard_negatives`); the default is the topic-matched pool of
+    :func:`repro.data.synthetic.hard_negatives`.  ``cfg.n_inbatch``
+    additionally appends in-batch negatives (other rows' positives) to
+    every candidate row; ``cfg.refine_weight`` enables the refine-stage
+    KL.  ``ckpt_dir`` threads through to :func:`fit` for checkpointed/
+    resumable training.
+    """
     key = jax.random.key(cfg.seed)
     doc_emb = jnp.asarray(corpus.doc_emb)
 
@@ -118,30 +142,101 @@ def train_hi2_sup(corpus: synthetic.Corpus, cfg: SupTrainConfig,
         hidden, _ = tfm.encode(enc_params, enc_cfg, tokens)
         return hidden
 
-    negs = synthetic.hard_negatives(corpus, cfg.n_negatives, seed=cfg.seed)
+    if negatives is None:
+        negatives = synthetic.hard_negatives(corpus, cfg.n_negatives,
+                                             seed=cfg.seed)
+    negatives = np.asarray(negatives, np.int32)
+    if negatives.shape[1] < cfg.n_negatives:
+        raise ValueError(
+            f"negatives pool has {negatives.shape[1]} per query, "
+            f"cfg.n_negatives={cfg.n_negatives}")
     nq = corpus.qrels.shape[0]
+    assign_np = np.asarray(doc_assign)
 
     def batches(step: int):
         rng = np.random.default_rng(cfg.seed * 7919 + step)
         qi = rng.integers(0, nq, cfg.batch_queries)
-        cand = np.concatenate([corpus.qrels[qi][:, None], negs[qi]], axis=1)
+        # per-row: own positive first, then a draw from the hard pool
+        cols = rng.permuted(
+            np.broadcast_to(np.arange(negatives.shape[1]),
+                            (cfg.batch_queries, negatives.shape[1])),
+            axis=1)[:, :cfg.n_negatives]
+        hard = negatives[qi[:, None], cols]
+        cand = np.concatenate([corpus.qrels[qi][:, None], hard], axis=1)
+        cand = distill.add_in_batch_negatives(rng, cand, corpus.qrels[qi],
+                                              cfg.n_inbatch)
         return distill.DistillBatch(
             query_emb=jnp.asarray(corpus.query_emb[qi]),
             query_tokens=jnp.asarray(corpus.query_tokens[qi]),
             doc_emb=jnp.asarray(corpus.doc_emb[cand]),
             doc_tokens=jnp.asarray(corpus.doc_tokens[cand]),
-            doc_assign=jnp.asarray(np.asarray(doc_assign)[cand]),
+            doc_assign=jnp.asarray(assign_np[cand]),
         )
 
     def loss_fn(p, batch):
         return distill.loss_fn(p, batch, encoder_apply=encoder_apply,
-                               vocab_size=corpus.vocab_size)
+                               vocab_size=corpus.vocab_size,
+                               refine_weight=cfg.refine_weight)
 
     params, losses = fit(loss_fn, params, batches, cfg.n_steps,
                          adam=AdamConfig(lr=cfg.lr),
-                         schedule=warmup_cosine(20, cfg.n_steps),
-                         log_every=log_every)
+                         schedule=warmup_cosine(cfg.warmup_steps,
+                                                cfg.n_steps),
+                         log_every=log_every, ckpt_dir=ckpt_dir)
     return params, enc_cfg, doc_assign, losses
+
+
+@dataclasses.dataclass(frozen=True)
+class SupSelectors:
+    """The trained selector bundle as a corpus-independent build recipe.
+
+    Wraps the distilled parameters so any corpus (the original one, a
+    compaction's survivor set, streamed documents) can be indexed under
+    the SAME frozen selectors: cluster side = argmax over the learned
+    embeddings, term side = encoder+MLP saliency (Eq. 7).  This is the
+    object :class:`repro.core.segments.MutableHybridIndex` stores and
+    replays at ``compact()`` (DESIGN.md §15) — the supervised analogue
+    of the unsup path's "recompute KMeans + BM25 from the survivors".
+    """
+    params: distill.DistillParams
+    enc_cfg: Any                      # tfm.TransformerConfig
+    encode_batch: int = 512
+
+    def position_scores(self, doc_tokens) -> jnp.ndarray:
+        """Per-position saliency of every document, (n, Ld) f32 —
+        chunked so corpora of any size run at fixed memory."""
+        tokens = jnp.asarray(doc_tokens)
+
+        @jax.jit
+        def score_chunk(chunk):
+            hidden, _ = tfm.encode(self.params.encoder, self.enc_cfg,
+                                   chunk)
+            return ts_mod.mlp_token_scores(self.params.term_mlp, hidden,
+                                           chunk)
+
+        chunks = [score_chunk(tokens[i:i + self.encode_batch])
+                  for i in range(0, tokens.shape[0], self.encode_batch)]
+        return jnp.concatenate(chunks, axis=0)
+
+    def build_inputs(self, doc_emb, doc_tokens, vocab_size: int) -> dict:
+        """The selector overrides for :func:`repro.core.hybrid_index.
+        build` on an arbitrary corpus.  φ here is the argmax under the
+        learned embeddings — corpus-independent (required by
+        compaction), and identical to the frozen training-time φ for
+        every document whose commitment loss converged (Eq. 13)."""
+        from repro.core import bm25
+
+        cluster_sel = cs_mod.ClusterSelector(
+            embeddings=self.params.cluster_embeddings)
+        pos_scores = self.position_scores(doc_tokens)
+        sbar = bm25.average_term_scores(jnp.asarray(doc_tokens),
+                                        pos_scores, vocab_size)
+        return dict(
+            cluster_sel=cluster_sel,
+            doc_assign=cs_mod.select_for_doc(cluster_sel,
+                                             jnp.asarray(doc_emb)),
+            term_pos_scores=pos_scores,
+            term_sel=ts_mod.TermSelector(avg_scores=sbar))
 
 
 def build_sup_index(corpus: synthetic.Corpus, params: distill.DistillParams,
@@ -149,21 +244,20 @@ def build_sup_index(corpus: synthetic.Corpus, params: distill.DistillParams,
                     pq_m: int = 8, pq_k: int = 256,
                     cluster_capacity=None, term_capacity=None,
                     prune_gamma: Optional[float] = None,
-                    encode_batch: int = 512) -> hi.HybridIndex:
+                    encode_batch: int = 512, sparse: bool = False,
+                    doc_namespaces=None) -> hi.HybridIndex:
     """Assemble HI²_sup: learned cluster embeddings + learned term scores
-    drive the same list construction as the unsupervised path."""
+    drive the same list construction as the unsupervised path.
+
+    Uses the *frozen training-time* φ(D) (``doc_assign``) — the paper's
+    operating point.  ``sparse``/``doc_namespaces`` pass through to
+    :func:`repro.core.hybrid_index.build`, so a supervised index serves
+    every §9/§13 feature the unsupervised one does.
+    """
+    sel = SupSelectors(params=params, enc_cfg=enc_cfg,
+                       encode_batch=encode_batch)
     doc_tokens = jnp.asarray(corpus.doc_tokens)
-    n_docs = doc_tokens.shape[0]
-
-    @jax.jit
-    def score_chunk(tokens):
-        hidden, _ = tfm.encode(params.encoder, enc_cfg, tokens)
-        return ts_mod.mlp_token_scores(params.term_mlp, hidden, tokens)
-
-    chunks = []
-    for i in range(0, n_docs, encode_batch):
-        chunks.append(score_chunk(doc_tokens[i:i + encode_batch]))
-    pos_scores = jnp.concatenate(chunks, axis=0)
+    pos_scores = sel.position_scores(doc_tokens)
 
     from repro.core import bm25
     sbar = bm25.average_term_scores(doc_tokens, pos_scores,
@@ -177,7 +271,7 @@ def build_sup_index(corpus: synthetic.Corpus, params: distill.DistillParams,
         cluster_sel=cs_mod.ClusterSelector(
             embeddings=params.cluster_embeddings),
         doc_assign=doc_assign, term_pos_scores=pos_scores,
-        term_sel=term_sel)
+        term_sel=term_sel, sparse=sparse, doc_namespaces=doc_namespaces)
     if prune_gamma is not None:
         from repro.core import pruning
         index = dataclasses.replace(

@@ -118,6 +118,45 @@ def test_gate_fails_on_missing_files(tmp_path):
     assert "fresh run missing" in msgs or "no committed baseline" in msgs
 
 
+def test_gate_covers_sup_bench_and_fails_on_regression(tmp_path):
+    """BENCH_sup.json is a first-class gate file: absent fresh runs and
+    drifted supervised recall both fail."""
+    assert "BENCH_sup.json" in cr.DEFAULT_FILES
+    base = {"sup_wins": 4,
+            "operating_points": [{"kc": 4, "k2": 6, "cost_sup": 2624,
+                                  "recall_sup": 0.6094}],
+            "roundtrip": {"planes_bit_identical": True}}
+    b, f = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(b, "BENCH_sup.json", base)
+    os.makedirs(f, exist_ok=True)
+    fails = cr.check_files(b, f, ["BENCH_sup.json"], timing_ratio=4.0,
+                           float_tol=0.0)
+    assert len(fails) == 1 and "fresh run missing" in fails[0]
+
+    fresh = json.loads(json.dumps(base))
+    fresh["operating_points"][0]["recall_sup"] = 0.55    # regressed
+    fresh["sup_wins"] = 3
+    _write(f, "BENCH_sup.json", fresh)
+    fails = cr.check_files(b, f, ["BENCH_sup.json"], timing_ratio=4.0,
+                           float_tol=0.0)
+    msgs = "\n".join(fails)
+    assert "recall_sup" in msgs and "sup_wins" in msgs
+
+
+def test_run_driver_reports_all_dispatch_problems(monkeypatch):
+    """One run surfaces EVERY dispatch-table problem — a missing entry
+    and a stale entry together, not first-failure-only."""
+    import pytest
+    patched = dict(bench_run.DISPATCH)
+    del patched["autotune"]                     # on disk, no entry
+    patched["ghost_bench"] = lambda: None       # entry, no file
+    monkeypatch.setattr(bench_run, "DISPATCH", patched)
+    with pytest.raises(SystemExit) as e:
+        bench_run.main(["--list"])
+    msg = str(e.value)
+    assert "autotune" in msg and "ghost_bench" in msg
+
+
 def test_committed_baselines_exist_and_selfcompare():
     """The gate's default files are committed under results/ and compare
     clean against themselves (sanity of the comparator on real docs)."""

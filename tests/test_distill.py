@@ -1,15 +1,28 @@
-"""Distillation mechanics (paper §4.3): loss structure, gradients, and
-short-horizon improvement — the full quality run lives in benchmarks."""
+"""Distillation mechanics (paper §4.3, DESIGN.md §15): loss structure,
+gradient routing, negative mining, the fault-tolerant training loop,
+and the supervised selectors' serving/lifecycle contracts — the full
+quality run lives in benchmarks/sup_distill.py."""
+import functools
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import distill, term_selector as ts_mod
 from repro.data import synthetic
 from repro.models import transformer as tfm
 from repro.optim import AdamConfig, adam_init, adam_update
 
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=2",
+            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
 
+
+@functools.lru_cache(maxsize=1)
 def _setup():
     corpus = synthetic.generate(seed=0, n_docs=800, n_queries=64,
                                 hidden=32, vocab_size=512, n_topics=16,
@@ -45,14 +58,113 @@ def _setup():
     return corpus, params, batch, encoder_apply
 
 
+# --------------------------------------------------------------------------
+# loss structure (Eq. 9-13 + §15 refine term)
+# --------------------------------------------------------------------------
+
 def test_distill_loss_components_finite_and_positive():
     corpus, params, batch, enc = _setup()
     loss, aux = distill.loss_fn(params, batch, encoder_apply=enc,
                                 vocab_size=corpus.vocab_size)
     assert np.isfinite(float(loss))
-    for k in ("kl_cluster", "kl_term", "commit"):
+    for k in ("kl_cluster", "kl_term", "commit", "kl_refine"):
         assert np.isfinite(float(aux[k]))
         assert float(aux[k]) >= 0 or k == "commit"  # KL ≥ 0
+
+
+def test_kl_nonnegative_and_exactly_zero_at_equal():
+    k1, k2 = jax.random.split(jax.random.key(3))
+    p = jax.random.normal(k1, (8, 12)) * 3.0
+    q = jax.random.normal(k2, (8, 12)) * 3.0
+    assert float(distill.kl(p, q).min()) >= 0.0
+    # KL(p ∥ p) is identically zero — logp - logq cancels exactly, not
+    # just to float tolerance
+    np.testing.assert_array_equal(np.asarray(distill.kl(p, p)),
+                                  np.zeros(8, np.float32))
+
+
+def test_commit_loss_is_strictly_positive_nll():
+    """Eq. 13 as minimized here is a negative log-softmax over L > 1
+    clusters — strictly positive for any finite logits (the paper
+    writes the raw log-softmax; sign convention is in the docstring)."""
+    corpus, params, batch, enc = _setup()
+    _, aux = distill.loss_fn(params, batch, encoder_apply=enc,
+                             vocab_size=corpus.vocab_size)
+    assert float(aux["commit"]) > 0.0
+
+
+def test_teacher_is_fixed_point_of_perfect_student():
+    """If the cluster embedding of every doc equals the doc embedding,
+    KL(teacher ∥ CS) is exactly zero (sanity of Eq. 10/11)."""
+    corpus, params, batch, enc = _setup()
+    teacher = jnp.einsum("bh,bdh->bd", batch.query_emb, batch.doc_emb)
+    cs = distill.kl(teacher, teacher)
+    np.testing.assert_allclose(np.asarray(cs), 0.0, atol=1e-6)
+
+
+def test_refine_term_composes_linearly():
+    """refine_weight=0 reproduces the pre-§15 objective exactly, and
+    the weighted total is base + λ·KL(Θ ∥ CS+TS)."""
+    corpus, params, batch, enc = _setup()
+    l0, aux0 = distill.loss_fn(params, batch, encoder_apply=enc,
+                               vocab_size=corpus.vocab_size,
+                               refine_weight=0.0)
+    base = aux0["kl_cluster"] + aux0["kl_term"] + aux0["commit"]
+    np.testing.assert_allclose(float(l0), float(base), rtol=1e-6)
+    assert float(aux0["kl_refine"]) >= 0.0
+    l5, aux5 = distill.loss_fn(params, batch, encoder_apply=enc,
+                               vocab_size=corpus.vocab_size,
+                               refine_weight=0.5)
+    np.testing.assert_allclose(float(l5),
+                               float(l0) + 0.5 * float(aux5["kl_refine"]),
+                               rtol=1e-6)
+
+
+def test_loss_invariant_under_batch_row_permutation():
+    """Every loss component is a mean over query rows, so reordering
+    the batch cannot change the objective (up to summation order)."""
+    corpus, params, batch, enc = _setup()
+    perm = np.random.default_rng(7).permutation(batch.query_emb.shape[0])
+    shuffled = distill.DistillBatch(*[jnp.asarray(np.asarray(f)[perm])
+                                      for f in batch])
+    l0, _ = distill.loss_fn(params, batch, encoder_apply=enc,
+                            vocab_size=corpus.vocab_size,
+                            refine_weight=0.3)
+    l1, _ = distill.loss_fn(params, shuffled, encoder_apply=enc,
+                            vocab_size=corpus.vocab_size,
+                            refine_weight=0.3)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# gradient routing
+# --------------------------------------------------------------------------
+
+def _gnorm(tree) -> float:
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in
+                              jax.tree_util.tree_leaves(tree))))
+
+
+def test_gradients_flow_to_all_three_param_groups():
+    corpus, params, batch, enc = _setup()
+    grads = jax.grad(lambda p: distill.loss_fn(
+        p, batch, encoder_apply=enc, vocab_size=corpus.vocab_size,
+        refine_weight=0.5)[0])(params)
+    assert _gnorm(grads.cluster_embeddings) > 0
+    assert _gnorm(grads.term_mlp) > 0
+    assert _gnorm(grads.encoder) > 0
+
+
+def test_zero_gradient_through_teacher_override():
+    """Θ is frozen by definition (Eq. 10): the loss must carry no
+    gradient into whatever computed the teacher scores."""
+    corpus, params, batch, enc = _setup()
+    teacher = distill.teacher_scores(batch)
+    g = jax.grad(lambda t: distill.loss_fn(
+        params, batch, encoder_apply=enc, vocab_size=corpus.vocab_size,
+        refine_weight=0.5, teacher=t)[0])(teacher)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.zeros_like(np.asarray(g)))
 
 
 def test_distill_short_training_reduces_loss():
@@ -76,14 +188,269 @@ def _step(p, s, loss_fn, batch):
     return adam_update(g, s, p, AdamConfig(lr=1e-3))
 
 
-def test_teacher_is_fixed_point_of_perfect_student():
-    """If the cluster embedding of every doc equals the doc embedding,
-    KL(teacher ∥ CS) is exactly zero (sanity of Eq. 10/11)."""
-    corpus, params, batch, enc = _setup()
-    b, d, _ = batch.doc_emb.shape
-    perfect = distill.DistillParams(
-        cluster_embeddings=jnp.zeros_like(params.cluster_embeddings),
-        term_mlp=params.term_mlp, encoder=params.encoder)
-    teacher = jnp.einsum("bh,bdh->bd", batch.query_emb, batch.doc_emb)
-    cs = distill.kl(teacher, teacher)
-    np.testing.assert_allclose(np.asarray(cs), 0.0, atol=1e-6)
+# --------------------------------------------------------------------------
+# negative mining (§15)
+# --------------------------------------------------------------------------
+
+def test_sample_candidates_puts_positive_first():
+    pos = jnp.asarray(np.arange(6, dtype=np.int32) * 5)
+    cand = distill.sample_candidates(jax.random.key(0), pos, 100, 4)
+    assert cand.shape == (6, 5)
+    np.testing.assert_array_equal(np.asarray(cand[:, 0]), np.asarray(pos))
+
+
+def test_in_batch_negatives_are_other_rows_positives():
+    rng = np.random.default_rng(0)
+    pos = np.arange(8, dtype=np.int32) * 3       # distinct per row
+    cand = np.concatenate([pos[:, None],
+                           rng.integers(100, 200, (8, 4))], axis=1)
+    out = distill.add_in_batch_negatives(rng, cand, pos, 3)
+    assert out.shape == (8, 8)
+    np.testing.assert_array_equal(out[:, :5], cand)
+    for b in range(8):
+        added = out[b, 5:]
+        assert np.all(np.isin(added, pos)), added
+        assert not np.any(added == pos[b]), "row sampled its own positive"
+    # n_inbatch=0 is the identity
+    np.testing.assert_array_equal(
+        distill.add_in_batch_negatives(rng, cand, pos, 0), cand)
+
+
+def test_in_batch_negatives_reject_singleton_batch():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="batch of >= 2"):
+        distill.add_in_batch_negatives(rng, np.zeros((1, 3), np.int32),
+                                       np.zeros(1, np.int32), 2)
+
+
+def test_mine_hard_negatives_excludes_positives_and_pads():
+    from repro.core import hybrid_index as hi
+    corpus, *_ = _setup()
+    index = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                     jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                     n_clusters=16, k1_terms=6, pq_m=4, pq_k=32,
+                     kmeans_iters=4)
+    mined = distill.mine_hard_negatives(index, corpus.query_emb,
+                                        corpus.query_tokens, corpus.qrels,
+                                        6)
+    assert mined.shape == (corpus.query_emb.shape[0], 6)
+    assert mined.min() >= 0 and mined.max() < corpus.doc_emb.shape[0]
+    for i in range(mined.shape[0]):
+        assert corpus.qrels[i] not in mined[i], i
+    # deterministic: same index + seed → same pool
+    again = distill.mine_hard_negatives(index, corpus.query_emb,
+                                        corpus.query_tokens, corpus.qrels,
+                                        6)
+    np.testing.assert_array_equal(mined, again)
+
+
+# --------------------------------------------------------------------------
+# the fit() loop: resume + observer-only monitoring
+# --------------------------------------------------------------------------
+
+def _quadratic_problem():
+    from repro.launch import train as tr
+    params = {"w": jnp.zeros(4, jnp.float32),
+              "b": jnp.ones(2, jnp.float32)}
+
+    def loss_fn(p, batch):
+        target, scale = batch
+        l = jnp.sum((p["w"] - target) ** 2) + scale * jnp.sum(p["b"] ** 2)
+        return l, {"loss": l}
+
+    def batches(i):
+        rng = np.random.default_rng(i)
+        return (jnp.asarray(rng.normal(size=4), jnp.float32),
+                jnp.float32(1.0 + 0.1 * (i % 3)))
+
+    return tr, loss_fn, params, batches
+
+
+def test_fit_checkpoint_resume_bit_identical(tmp_path):
+    """Kill at step k, resume from the checkpoint, land on exactly the
+    params an uninterrupted run produces — resume restores params AND
+    optimizer state, and the step-keyed batch stream replays."""
+    tr, loss_fn, params, batches = _quadratic_problem()
+    straight, _ = tr.fit(loss_fn, params, batches, 12, log_every=0)
+
+    ckpt = str(tmp_path / "ckpt")
+    tr.fit(loss_fn, params, batches, 5, ckpt_dir=ckpt, save_every=5,
+           log_every=0)                                   # "killed" at 5
+    resumed, losses = tr.fit(loss_fn, params, batches, 12, ckpt_dir=ckpt,
+                             save_every=5, log_every=0)
+    assert len(losses) == 12 - 5, "resume must continue, not restart"
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(straight[k]),
+                                      np.asarray(resumed[k]))
+
+
+def test_straggler_monitor_does_not_perturb_training():
+    """The monitor observes wall-clock only — any monitor (or none)
+    leaves the numeric trajectory bit-identical."""
+    from repro.distributed.fault import StragglerMonitor
+    tr, loss_fn, params, batches = _quadratic_problem()
+    p_none, l_none = tr.fit(loss_fn, params, batches, 8, log_every=0)
+    p_mon, l_mon = tr.fit(loss_fn, params, batches, 8, log_every=0,
+                          monitor=StragglerMonitor(window=4, factor=1.0,
+                                                   max_strikes=1))
+    assert l_none == l_mon
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(p_none[k]),
+                                      np.asarray(p_mon[k]))
+
+
+# --------------------------------------------------------------------------
+# supervised selectors: serving variants + mutable lifecycle (§15)
+# --------------------------------------------------------------------------
+
+def test_mutable_sup_selectors_survive_add_delete_compact():
+    """A MutableHybridIndex built from SupSelectors accepts streamed
+    docs and deletes, and compact() is bit-identical to a from-scratch
+    supervised build over the survivors (the §10 contract under
+    learned selectors)."""
+    from repro.core import hybrid_index as hi, segments as seg
+    from repro.launch import train as tr
+    corpus, params, _, _ = _setup()
+    enc_cfg = tfm.TransformerConfig(n_layers=1, d_model=32, n_heads=2,
+                                    n_kv_heads=2, d_ff=64,
+                                    vocab_size=corpus.vocab_size,
+                                    causal=False,
+                                    compute_dtype=jnp.float32, remat=False)
+    sel = tr.SupSelectors(params=params, enc_cfg=enc_cfg)
+    kw = dict(k1_terms=6, pq_m=4, pq_k=32, delta_capacity=32)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), corpus.doc_emb[:600], corpus.doc_tokens[:600],
+        corpus.vocab_size, selectors=sel, **kw)
+    assert mut.base.cluster_lists.n_lists == \
+        params.cluster_embeddings.shape[0]
+    ids = mut.add_docs(corpus.doc_emb[600:616], corpus.doc_tokens[600:616])
+    mut.delete_docs(ids[:4])
+    mut.delete_docs(np.arange(8))
+    qe = jnp.asarray(corpus.query_emb[:16])
+    qt = jnp.asarray(corpus.query_tokens[:16])
+    assert mut.search(qe, qt, kc=4, k2=6, top_r=20).doc_ids.shape == (16, 20)
+
+    comp = mut.compact()
+    assert comp.n_docs == 600 + 16 - 12
+    emb_s, tok_s = mut.surviving_corpus()
+    scratch = seg.MutableHybridIndex.create(
+        jax.random.key(0), emb_s, tok_s, corpus.vocab_size,
+        selectors=sel, **kw)
+    a = comp.search(qe, qt, kc=4, k2=6, top_r=20)
+    b = scratch.search(qe, qt, kc=4, k2=6, top_r=20)
+    np.testing.assert_array_equal(np.asarray(a.doc_ids),
+                                  np.asarray(b.doc_ids))
+    np.testing.assert_array_equal(np.asarray(a.scores),
+                                  np.asarray(b.scores))
+
+
+def test_mutable_sup_rejects_mismatched_cluster_count():
+    from repro.core import segments as seg
+    from repro.launch import train as tr
+    corpus, params, _, _ = _setup()
+    enc_cfg = tfm.TransformerConfig(n_layers=1, d_model=32, n_heads=2,
+                                    n_kv_heads=2, d_ff=64,
+                                    vocab_size=corpus.vocab_size,
+                                    causal=False,
+                                    compute_dtype=jnp.float32, remat=False)
+    sel = tr.SupSelectors(params=params, enc_cfg=enc_cfg)
+    with pytest.raises(ValueError, match="conflicts with the supervised"):
+        seg.MutableHybridIndex.create(
+            jax.random.key(0), corpus.doc_emb[:200],
+            corpus.doc_tokens[:200], corpus.vocab_size, selectors=sel,
+            n_clusters=8, k1_terms=6, pq_m=4, pq_k=32)
+
+
+def test_mutable_sup_checkpoint_needs_selectors_on_restore(tmp_path):
+    """Selector params live in the training checkpoint, not the index
+    state tree — restoring a supervised mutable checkpoint without a
+    selectors-bearing ``like`` must fail loudly (silent BM25 fallback
+    would corrupt add/compact semantics)."""
+    from repro import checkpoint as ckpt
+    from repro.core import segments as seg
+    from repro.launch import train as tr
+    corpus, params, _, _ = _setup()
+    enc_cfg = tfm.TransformerConfig(n_layers=1, d_model=32, n_heads=2,
+                                    n_kv_heads=2, d_ff=64,
+                                    vocab_size=corpus.vocab_size,
+                                    causal=False,
+                                    compute_dtype=jnp.float32, remat=False)
+    sel = tr.SupSelectors(params=params, enc_cfg=enc_cfg)
+    kw = dict(k1_terms=6, pq_m=4, pq_k=32, delta_capacity=16)
+    mut = seg.MutableHybridIndex.create(
+        jax.random.key(0), corpus.doc_emb[:300], corpus.doc_tokens[:300],
+        corpus.vocab_size, selectors=sel, **kw)
+    path = ckpt.save_mutable(str(tmp_path), 1, mut)
+
+    bare = seg.MutableHybridIndex.create(
+        jax.random.key(0), corpus.doc_emb[:300], corpus.doc_tokens[:300],
+        corpus.vocab_size, selectors=sel, **kw)
+    bare.selectors = None
+    with pytest.raises(ValueError, match="supervised index"):
+        ckpt.restore_mutable(path, bare)
+
+    setattr(bare, "selectors", sel)
+    restored = ckpt.restore_mutable(path, bare)
+    assert restored.selectors is sel
+    ids = restored.add_docs(corpus.doc_emb[300:302],
+                            corpus.doc_tokens[300:302])
+    assert ids.shape == (2,)
+
+
+def test_sup_index_bit_identical_across_all_four_variants():
+    """The trained selector bundle serves identically through every
+    layout: plain == sharded == mutable(empty delta) == sharded-mutable
+    doc ids (2 emulated devices; the tests/test_exec.py pattern)."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+assert jax.device_count() == 2
+from repro.core import hybrid_index as hi, segments as seg
+from repro.data import synthetic
+from repro.launch import serve, train as tr
+
+corpus = synthetic.generate(seed=0, n_docs=600, n_queries=32, hidden=32,
+                            vocab_size=512, n_topics=16,
+                            make_model_b=False)
+cfg = tr.SupTrainConfig(n_clusters=16, encoder_layers=1, encoder_dim=32,
+                        encoder_heads=2, n_steps=10, batch_queries=8,
+                        n_negatives=3, kmeans_iters=4, seed=0)
+params, enc_cfg, assign, _ = tr.train_hi2_sup(corpus, cfg, log_every=0)
+sel = tr.SupSelectors(params=params, enc_cfg=enc_cfg)
+kw = dict(k1_terms=6, pq_m=4, pq_k=32, codec="pq")
+sel_kwargs = sel.build_inputs(jnp.asarray(corpus.doc_emb),
+                              jnp.asarray(corpus.doc_tokens),
+                              corpus.vocab_size)
+base = hi.build(jax.random.key(0), jnp.asarray(corpus.doc_emb),
+                jnp.asarray(corpus.doc_tokens), corpus.vocab_size,
+                n_clusters=16, **sel_kwargs, **kw)
+qe, qt = jnp.asarray(corpus.query_emb), jnp.asarray(corpus.query_tokens)
+ref = np.asarray(hi.search(base, qe, qt, kc=4, k2=6, top_r=20).doc_ids)
+
+sh = serve.make_server(base, serve.ServeConfig(kc=4, k2=6, top_r=20,
+                                               max_batch=32, n_shards=2))
+assert np.array_equal(
+    np.asarray(sh.query(corpus.query_emb, corpus.query_tokens).doc_ids),
+    ref), "sharded != plain"
+
+mut = seg.MutableHybridIndex.create(
+    jax.random.key(0), corpus.doc_emb, corpus.doc_tokens,
+    corpus.vocab_size, selectors=sel, delta_capacity=32, **kw)
+assert np.array_equal(
+    np.asarray(mut.search(qe, qt, kc=4, k2=6, top_r=20).doc_ids), ref), \
+    "mutable != plain"
+
+mut2 = seg.MutableHybridIndex.create(
+    jax.random.key(0), corpus.doc_emb, corpus.doc_tokens,
+    corpus.vocab_size, selectors=sel, delta_capacity=32, **kw)
+sm = serve.make_mutable_server(mut2, serve.ServeConfig(
+    kc=4, k2=6, top_r=20, max_batch=32, n_shards=2, mutable=True,
+    delta_capacity=32))
+assert np.array_equal(
+    np.asarray(sm.query(corpus.query_emb, corpus.query_tokens).doc_ids),
+    ref), "sharded-mutable != plain"
+print("OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=_ENV,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK" in r.stdout
